@@ -1,0 +1,127 @@
+"""Shared benchmark infrastructure.
+
+The paper's phenomenon (optimal speculation length shrinking with batch size)
+is a *resource-saturation* effect, so it reproduces at CPU scale with a tiny
+target/draft pair — provided acceptance l(s) is non-trivial.  Random weights
+give l(s) = 0, which voids speculation; so we train both models briefly on
+the same **order-2** Markov stream (training/data.py): the 4-layer target
+learns the (t-2, t-1)-conditional, the under-parameterized 1-layer draft
+mostly captures lower-order structure, and partial argmax agreement
+(~0.49/token) emerges naturally - the distilled-draft regime of the paper.
+The trained pair is cached in results/bench_models.npz.
+
+All benchmarks write JSON into results/bench/.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import AttnConfig, ModelConfig
+from repro.core.spec_decode import SpecDecodeEngine
+from repro.training import (AdamWConfig, DataConfig, batch_at, init_adamw,
+                            make_train_step, restore, save)
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+BENCH_DIR = os.path.join(RESULTS, "bench")
+MODELS_PATH = os.path.join(RESULTS, "bench_models.npz")
+
+VOCAB = 512
+
+
+def target_config() -> ModelConfig:
+    return ModelConfig(
+        name="bench-target", family="dense", n_layers=4, d_model=256,
+        d_ff=1024, vocab_size=VOCAB,
+        attn=AttnConfig(n_heads=4, n_kv_heads=4, head_dim=64),
+        dtype="float32", source="benchmark tiny target (paper: OPT-6.7B role)")
+
+
+def draft_config() -> ModelConfig:
+    # deliberately under-parameterized vs the order-2 stream so per-token
+    # agreement lands near the paper's ~0.5 (OPT-125M vs OPT-6.7B regime)
+    return ModelConfig(
+        name="bench-draft", family="dense", n_layers=1, d_model=64,
+        d_ff=256, vocab_size=VOCAB,
+        attn=AttnConfig(n_heads=2, n_kv_heads=2, head_dim=32),
+        dtype="float32", source="benchmark tiny draft (paper: OPT-125M role)")
+
+
+def _train(model, cfg, steps: int, lr: float, seed: int,
+           batch=12, seq=48) -> Tuple[dict, float]:
+    params = model.init(jax.random.PRNGKey(seed))
+    opt = AdamWConfig(lr=lr, warmup_steps=10, total_steps=steps,
+                      weight_decay=0.0)
+    state = init_adamw(params)
+    step = jax.jit(make_train_step(model, cfg, opt), donate_argnums=(0, 1))
+    # order-2 markov: the deep target can learn the (t-2, t-1) conditional,
+    # the 1-layer draft mostly cannot -> realistic partial acceptance
+    dc = DataConfig(vocab_size=cfg.vocab_size, batch=batch, seq_len=seq,
+                    kind="markov2", alphabet=48, skew=0.9, seed=7)
+    loss = None
+    for i in range(steps):
+        params, state, m = step(params, state,
+                                {k: jnp.asarray(v) for k, v in batch_at(dc, i).items()})
+        loss = float(m["loss"])
+    return params, loss
+
+
+def get_trained_pair(force: bool = False, steps: int = 150,
+                     ) -> Tuple[SpecDecodeEngine, dict, dict, Dict]:
+    """Returns (engine, tparams, dparams, meta); trains & caches on first use."""
+    tcfg, dcfg = target_config(), draft_config()
+    engine = SpecDecodeEngine(tcfg, dcfg, max_new=64)
+    meta_path = MODELS_PATH + ".meta.json"
+    if not force and os.path.exists(MODELS_PATH) and os.path.exists(meta_path):
+        tpl = engine.target.init(jax.random.PRNGKey(0))
+        dpl = engine.draft.init(jax.random.PRNGKey(1))
+        blob, _, _ = restore(MODELS_PATH, {"t": tpl, "d": dpl})
+        meta = json.load(open(meta_path))
+        return engine, blob["t"], blob["d"], meta
+    t0 = time.time()
+    tparams, tloss = _train(engine.target, tcfg, steps, 3e-3, seed=0)
+    dparams, dloss = _train(engine.draft, dcfg, steps, 1e-2, seed=1)
+    meta = {"target_loss": tloss, "draft_loss": dloss,
+            "train_s": round(time.time() - t0, 1), "steps": steps}
+    os.makedirs(RESULTS, exist_ok=True)
+    save(MODELS_PATH, {"t": tparams, "d": dparams})
+    json.dump(meta, open(meta_path, "w"))
+    return engine, tparams, dparams, meta
+
+
+def bench_prompts(n: int, seed: int = 123, min_len=8, max_len=24,
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Markov-stream prompts (same distribution the pair was trained on)."""
+    dc = DataConfig(vocab_size=VOCAB, batch=n, seq_len=max_len,
+                    kind="markov2", alphabet=48, skew=0.9, seed=7)
+    toks = batch_at(dc, 10_000 + seed)["tokens"][:, :max_len]
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(min_len, max_len + 1, size=n).astype(np.int32)
+    return toks.astype(np.int32), lens
+
+
+def timeit(fn, *args, repeats: int = 3, **kw) -> float:
+    """Median wall time of fn(*args) with one warmup call."""
+    fn(*args, **kw)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(jax.tree.leaves(out)[0]) if out is not None else None
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def write_result(name: str, payload: Dict) -> str:
+    os.makedirs(BENCH_DIR, exist_ok=True)
+    path = os.path.join(BENCH_DIR, name + ".json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path

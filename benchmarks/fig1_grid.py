@@ -1,0 +1,70 @@
+"""Fig. 1: per-token latency over the (batch size x speculation length) grid.
+
+Wall-clock measurement of the real batched speculative engine on the trained
+tiny pair.  The paper's claims to validate:
+  * combining batching + speculation beats either alone;
+  * small b -> larger s_opt; large b -> small s_opt (non-increasing trend);
+  * too-large s at large b *hurts*.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import bench_prompts, get_trained_pair, write_result
+
+
+def run(batch_sizes=(1, 2, 4, 8, 16, 32), s_values=tuple(range(0, 9)),
+        gen_tokens: int = 48, repeats: int = 2, quick: bool = False) -> Dict:
+    if quick:
+        batch_sizes, s_values, gen_tokens, repeats = (1, 4, 16), (0, 2, 4), 24, 1
+    engine, tp, dp, meta = get_trained_pair()
+    grid: Dict[int, Dict[int, float]] = {}
+    for b in batch_sizes:
+        prompts, lens = bench_prompts(b)
+        grid[b] = {}
+        for s in s_values:
+            best = float("inf")
+            # warmup / compile
+            st = engine.prefill(tp, dp, prompts, lens, cache_len=256)
+            engine.step(tp, dp, st, s)
+            for _ in range(repeats):
+                st = engine.prefill(tp, dp, prompts, lens, cache_len=256)
+                tot, t0 = 0, time.perf_counter()
+                while tot < gen_tokens * b:
+                    st, stats = engine.step(tp, dp, st, s)
+                    tot += int(stats.committed.sum())
+                    if bool(np.asarray(st.done).all()):
+                        break
+                best = min(best, (time.perf_counter() - t0) / max(tot, 1))
+            grid[b][s] = best
+
+    s_opt = {b: min(d, key=d.get) for b, d in grid.items()}
+    base = {b: grid[b][0] for b in grid}
+    speedup = {b: base[b] / grid[b][s_opt[b]] for b in grid}
+    vals = [s_opt[b] for b in sorted(s_opt)]
+    # non-increasing trend with +-1 tolerance for wall-clock noise
+    monotone = all(a >= b - 1 for a, b in zip(vals, vals[1:]))
+    payload = {
+        "grid_per_token_s": {str(b): {str(s): v for s, v in d.items()}
+                             for b, d in grid.items()},
+        "s_opt": {str(b): int(v) for b, v in s_opt.items()},
+        "speedup_at_s_opt": {str(b): round(v, 3) for b, v in speedup.items()},
+        "s_opt_non_increasing_trend": bool(monotone),
+        "pair_meta": meta,
+    }
+    write_result("fig1_grid", payload)
+    print("\n=== Fig.1: per-token latency (ms) over (b, s) ===")
+    ss = sorted(next(iter(grid.values())))
+    print("  b\\s " + "".join(f"{s:>8d}" for s in ss))
+    for b in sorted(grid):
+        row = "".join(f"{grid[b][s]*1e3:8.2f}" for s in ss)
+        print(f"{b:5d} {row}   s_opt={s_opt[b]} speedup={speedup[b]:.2f}x")
+    print(f"s_opt non-increasing trend: {monotone}")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

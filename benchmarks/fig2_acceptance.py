@@ -1,0 +1,51 @@
+"""Fig. 2: the acceptance curve l(s) and its power-law fit c * s^gamma.
+
+Measures per-step accepted-run lengths of the trained pair (paper Eq. 4),
+builds the empirical l(s), fits the power law in log-log space, and checks
+the paper's qualitative claims: l non-decreasing, sub-linear (gamma < 1).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import bench_prompts, get_trained_pair, write_result
+from repro.core.adaptive import measure_acceptance
+from repro.core.analytical import (acceptance_curve, fit_power_law,
+                                   power_law_r2)
+
+
+def run(n_prompts: int = 32, gen_tokens: int = 48, s_probe: int = 8,
+        quick: bool = False) -> Dict:
+    if quick:
+        n_prompts, gen_tokens = 8, 24
+    engine, tp, dp, meta = get_trained_pair()
+    prompts, lens = bench_prompts(n_prompts)
+    runs = measure_acceptance(engine, tp, dp, prompts, lens, s=s_probe,
+                              gen_tokens=gen_tokens, cache_len=256)
+    s_vals = list(range(1, s_probe + 1))
+    ls = acceptance_curve(runs, s_vals)
+    c, gamma = fit_power_law(s_vals, ls)
+    r2 = power_law_r2(s_vals, ls, c, gamma)
+    payload = {
+        "s": s_vals, "l_of_s": [float(x) for x in ls],
+        "fit_c": c, "fit_gamma": gamma, "fit_r2": r2,
+        "n_run_samples": len(runs),
+        "mean_accept_at_s8": float(np.mean(np.minimum(runs, 8))),
+        "sublinear": bool(gamma < 1.0),
+        "non_decreasing": bool(all(a <= b + 1e-9 for a, b in zip(ls, ls[1:]))),
+        "paper_reference_fit": {"c": 0.9, "gamma": 0.548},
+    }
+    write_result("fig2_acceptance", payload)
+    print("\n=== Fig.2: acceptance curve ===")
+    print("  s   l(s)    c*s^gamma")
+    for s, l in zip(s_vals, ls):
+        print(f"  {s}  {l:6.3f}   {c * s ** gamma:6.3f}")
+    print(f"fit: l(s) ~= {c:.3f} * s^{gamma:.3f}  (R2={r2:.4f}; "
+          f"paper: 0.9 * s^0.548)")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

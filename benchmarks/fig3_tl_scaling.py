@@ -1,0 +1,66 @@
+"""Fig. 3: verify-step latency t_L(b, s) vs speculation length for several
+batch sizes, with the paper's linear fit t_L ~= alpha_b * s + beta.
+
+Validates: alpha_b increases with b (the slope is what pushes s_opt down as
+batches grow) — the mechanism behind the whole adaptive policy.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import bench_prompts, get_trained_pair, timeit, write_result
+from repro.core.analytical import fit_linear_latency
+
+
+def run(batch_sizes=(1, 4, 8, 16, 32), s_values=tuple(range(0, 9)),
+        quick: bool = False) -> Dict:
+    if quick:
+        batch_sizes, s_values = (1, 8), (0, 2, 4)
+    import jax
+    engine, tp, dp, _ = get_trained_pair()
+    # jit once per query length (shape-polymorphic on batch via recompile)
+    tstep = jax.jit(engine.target.decode_step)
+    dstep = jax.jit(engine.draft.decode_step)
+    tl: Dict[int, Dict[int, float]] = {}
+    ts_draft: Dict[int, float] = {}
+    for b in batch_sizes:
+        prompts, lens = bench_prompts(b)
+        state = engine.prefill(tp, dp, prompts, lens, cache_len=256)
+        tl[b] = {}
+        for s in s_values:
+            feed = jax.numpy.asarray(
+                np.tile(np.asarray(state.last2[:, 1:]), (1, s + 1))[:, :s + 1])
+            fn = lambda: tstep(tp, feed, state.tcache, state.seq_lens)
+            tl[b][s] = timeit(fn)
+        last2 = jax.numpy.asarray(np.asarray(state.last2))
+        dfn = lambda: dstep(dp, last2, state.dcache, state.seq_lens - 1)
+        ts_draft[b] = timeit(dfn)
+
+    fits = {}
+    for b, d in tl.items():
+        ss = sorted(d)
+        alpha, beta = fit_linear_latency(ss, [d[s] for s in ss])
+        fits[b] = {"alpha": alpha, "beta": beta}
+    alphas = [fits[b]["alpha"] for b in sorted(fits)]
+    increasing = all(a <= b * 1.25 + 1e-9 for a, b in zip(alphas, alphas[1:]))
+    payload = {
+        "t_L": {str(b): {str(s): v for s, v in d.items()} for b, d in tl.items()},
+        "t_S_b1": {str(b): v for b, v in ts_draft.items()},
+        "linear_fits": {str(b): v for b, v in fits.items()},
+        "alpha_increasing_with_b": bool(increasing),
+    }
+    write_result("fig3_tl_scaling", payload)
+    print("\n=== Fig.3: t_L(b, s) (ms) and linear fits ===")
+    for b in sorted(tl):
+        row = " ".join(f"{tl[b][s]*1e3:6.2f}" for s in sorted(tl[b]))
+        print(f"  b={b:3d}: {row}  alpha={fits[b]['alpha']*1e3:.3f}ms/s "
+              f"beta={fits[b]['beta']*1e3:.2f}ms  t_S={ts_draft[b]*1e3:.2f}ms")
+    print(f"alpha_b increasing with b: {increasing}")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Roofline table: read results/dryrun/*.json (produced by
+``python -m repro.launch.dryrun``) and print/emit the per-(arch x shape x
+mesh) three-term roofline with the dominant bottleneck.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from benchmarks.common import RESULTS, write_result
+
+DRYRUN_DIR = os.path.join(RESULTS, "dryrun")
+
+
+def load_records(mesh: str = None) -> List[Dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        r = json.load(open(p))
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def run(quick: bool = False) -> Dict:
+    recs = load_records()
+    if not recs:
+        print("\n=== Roofline: no dry-run records yet "
+              "(run python -m repro.launch.dryrun --all) ===")
+        return {}
+    rows = []
+    for r in recs:
+        rf, an = r["roofline"], r["analytic"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "kind": r["kind"], "chips": r["chips"],
+            "compute_s": rf["compute_s"], "memory_s": rf["memory_s"],
+            "collective_s": rf["collective_s"], "dominant": rf["dominant"],
+            "useful_ratio": an["useful_compute_ratio"],
+            "mem_per_dev_gib": r["memory"]["per_device_total"] / 2**30,
+            "arg_per_dev_gib": r["memory"]["argument_bytes"] / 2**30,
+        })
+    payload = {"rows": rows, "n": len(rows)}
+    write_result("roofline", payload)
+    print("\n=== Roofline (from dry-run artifacts) ===")
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':9s} {'compute':>10s} "
+           f"{'memory':>10s} {'collectv':>10s}  dom       {'useful':>6s} {'GiB/dev':>8s}")
+    print(hdr)
+    for x in sorted(rows, key=lambda x: (x["mesh"], x["arch"], x["shape"])):
+        print(f"{x['arch']:24s} {x['shape']:12s} {x['mesh']:9s} "
+              f"{x['compute_s']:10.3e} {x['memory_s']:10.3e} "
+              f"{x['collective_s']:10.3e}  {x['dominant']:9s} "
+              f"{x['useful_ratio']:6.2f} {x['arg_per_dev_gib']:8.2f}")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""Benchmark harness entry point: one benchmark per paper figure plus the
+roofline table.
+
+  PYTHONPATH=src python -m benchmarks.run            # full pass
+  PYTHONPATH=src python -m benchmarks.run --quick    # CI-scale
+  PYTHONPATH=src python -m benchmarks.run --only fig1_grid,fig5_dynamic
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from benchmarks import (fig1_grid, fig2_acceptance, fig3_tl_scaling,
+                        fig4_uniform, fig5_dynamic, fig6_timeline,
+                        fig7_continuous, roofline)
+
+BENCHES = {
+    "fig1_grid": fig1_grid.run,
+    "fig2_acceptance": fig2_acceptance.run,
+    "fig3_tl_scaling": fig3_tl_scaling.run,
+    "fig4_uniform": fig4_uniform.run,
+    "fig5_dynamic": fig5_dynamic.run,
+    "fig6_timeline": fig6_timeline.run,
+    "fig7_continuous": fig7_continuous.run,
+    "roofline": roofline.run,
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(BENCHES))
+    args = ap.parse_args(argv)
+    names = args.only.split(",") if args.only else list(BENCHES)
+    failures = []
+    for name in names:
+        t0 = time.time()
+        print(f"\n######## {name} ########", flush=True)
+        try:
+            BENCHES[name](quick=args.quick)
+            print(f"[{name}] done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmarks failed: {failures}")
+    print("\nall benchmarks passed")
+
+
+if __name__ == "__main__":
+    main()

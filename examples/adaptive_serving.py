@@ -1,0 +1,73 @@
+"""End-to-end adaptive serving driver (the paper's full pipeline, deliverable
+(b): serve a small model with batched requests).
+
+  1. train a tiny target + draft on the same Markov stream (so the draft's
+     acceptance l(s) is non-trivial, like a distilled OPT-125M);
+  2. PROFILING stage: grid-measure per-token latency over (b, s), build the
+     b -> s_opt LUT (paper §4);
+  3. EXECUTION stage: serve Gamma-traffic batched requests with the adaptive
+     controller vs no-spec / fixed-s baselines on the SAME trace (§5.3).
+
+  PYTHONPATH=src python examples/adaptive_serving.py [--requests 32]
+"""
+import argparse
+import dataclasses
+import sys
+
+import numpy as np
+
+sys.path.insert(0, "benchmarks") if "benchmarks" not in sys.path else None
+
+from benchmarks.common import bench_prompts, get_trained_pair
+from repro.core.adaptive import (AdaptiveController, fixed_controller,
+                                 measure_acceptance, profile_engine)
+from repro.core.analytical import acceptance_curve, fit_power_law
+from repro.serving.metrics import summarize
+from repro.serving.server import EngineBackend, serve
+from repro.serving.traffic import uniform_traffic
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--requests", type=int, default=32)
+ap.add_argument("--max-new", type=int, default=32)
+ap.add_argument("--max-batch", type=int, default=8)
+args = ap.parse_args()
+
+# ---- 1. trained pair (cached in results/bench_models.npz) ----
+engine, tparams, dparams, meta = get_trained_pair()
+engine.max_new = args.max_new
+print(f"pair ready (target loss {meta['target_loss']:.3f}, "
+      f"draft loss {meta['draft_loss']:.3f})")
+
+# acceptance sanity: fit l(s) = c s^gamma like paper Fig. 2
+pp, pl = bench_prompts(8, seed=5)
+runs = measure_acceptance(engine, tparams, dparams, pp, pl, s=6,
+                          gen_tokens=24, cache_len=256)
+ls = acceptance_curve(runs, range(1, 7))
+c, g = fit_power_law(range(1, 7), ls)
+print(f"acceptance fit: l(s) ~= {c:.2f} * s^{g:.2f}  (paper: 0.9 s^0.548)")
+
+# ---- 2. profiling stage ----
+lut = profile_engine(engine, tparams, dparams, pp, pl,
+                     batch_sizes=(1, 2, 4, 8), s_values=range(0, 7),
+                     gen_tokens=16, cache_len=256)
+print(f"LUT: {lut.table}  (s_opt non-increasing: {lut.is_monotone()})")
+
+# ---- 3. execution stage: same trace, four schemes ----
+tcfg = engine.tcfg
+trace = lambda: uniform_traffic(args.requests, 0.02, 2.0, tcfg.vocab_size,
+                                seed=11, max_new=args.max_new)
+backend = EngineBackend(engine, tparams, dparams, cache_len=256)
+rows = {}
+for name, ctrl in {
+    "no_spec": fixed_controller(0),
+    "fixed_s2": fixed_controller(2),
+    "fixed_s4": fixed_controller(4),
+    "adaptive": AdaptiveController(lut=lut),
+}.items():
+    res = serve(trace(), backend, ctrl, max_batch=args.max_batch)
+    rows[name] = summarize(res)
+    print(f"{name:9s}: mean {rows[name].mean:.3f}s  p90 {rows[name].p90:.3f}s")
+
+best_fixed = min(rows["fixed_s2"].mean, rows["fixed_s4"].mean)
+print(f"\nadaptive vs no-spec : {rows['no_spec'].mean/rows['adaptive'].mean:.2f}x")
+print(f"adaptive vs best-fixed: {best_fixed/rows['adaptive'].mean:.2f}x")

@@ -1,0 +1,50 @@
+"""Quickstart: batched speculative decoding in ~40 lines.
+
+Builds a reduced-config target (yi-9b family) + a tiny draft, runs one batch
+of prompts with and without speculation, and prints the per-step acceptance.
+Runs on CPU in under a minute.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import registry as R
+from repro.core.spec_decode import SpecDecodeEngine
+
+# 1. configs: a reduced same-family variant of an assigned architecture,
+#    and its draft (the paper's SSM) shrunk to CPU scale
+tcfg = R.get_smoke_config("yi-9b")
+dcfg = R.get_draft_config("yi-9b")
+dcfg = dataclasses.replace(
+    dcfg, n_layers=1, d_model=64, d_ff=128, vocab_size=tcfg.vocab_size,
+    attn=dataclasses.replace(dcfg.attn, n_heads=2, n_kv_heads=2, head_dim=32))
+
+# 2. engine + params
+engine = SpecDecodeEngine(tcfg, dcfg, max_new=24)
+tparams = engine.target.init(jax.random.PRNGKey(0))
+dparams = engine.draft.init(jax.random.PRNGKey(1))
+
+# 3. a ragged batch of prompts
+rng = np.random.default_rng(0)
+B, P = 4, 12
+prompts = rng.integers(0, tcfg.vocab_size, (B, P)).astype(np.int32)
+lens = np.array([12, 9, 7, 10], np.int32)
+
+# 4. speculative generation at s=4 vs plain autoregression (s=0)
+out_spec, stats, steps_spec = engine.generate(
+    tparams, dparams, prompts, lens, s=4, cache_len=128, collect_stats=True)
+out_greedy, _, steps_greedy = engine.generate(
+    tparams, dparams, prompts, lens, s=0, cache_len=128)
+
+# 5. the golden invariant: speculation NEVER changes the output stream
+np.testing.assert_array_equal(out_spec, out_greedy)
+acc = np.mean([st.accepted.mean() for st in stats])
+print(f"tokens identical to greedy: True")
+print(f"steps: spec={steps_spec} vs greedy={steps_greedy} "
+      f"(mean accepted drafts/step: {acc:.2f})")
+print(f"first request tokens: {out_spec[0, :12].tolist()}")
+print("note: an untrained draft accepts ~0 drafts; see "
+      "examples/adaptive_serving.py for a trained pair with real speedups")

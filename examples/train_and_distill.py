@@ -1,0 +1,73 @@
+"""Training-substrate driver: pretrain a small target LM on the synthetic
+Markov stream, then train a draft on the same stream and watch the
+speculative acceptance rate rise — the systems-level reason the paper's SSM
+must "accurately mimic the behavior of the original LLM" (§1).
+
+  PYTHONPATH=src python examples/train_and_distill.py [--steps 120]
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import AttnConfig, ModelConfig
+from repro.core.adaptive import measure_acceptance
+from repro.core.spec_decode import SpecDecodeEngine
+from repro.training import (AdamWConfig, DataConfig, batch_at, init_adamw,
+                            make_train_step)
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=120)
+ap.add_argument("--probe-every", type=int, default=60)
+args = ap.parse_args()
+
+VOCAB = 512
+tcfg = ModelConfig(name="demo-target", family="dense", n_layers=3, d_model=192,
+                   d_ff=768, vocab_size=VOCAB,
+                   attn=AttnConfig(n_heads=4, n_kv_heads=4, head_dim=48),
+                   dtype="float32")
+dcfg = ModelConfig(name="demo-draft", family="dense", n_layers=1, d_model=64,
+                   d_ff=256, vocab_size=VOCAB,
+                   attn=AttnConfig(n_heads=2, n_kv_heads=2, head_dim=32),
+                   dtype="float32")
+engine = SpecDecodeEngine(tcfg, dcfg, max_new=32)
+dc = DataConfig(vocab_size=VOCAB, batch=16, seq_len=64, alphabet=128,
+                skew=0.9, seed=7)
+
+
+def train(model, cfg, steps, lr, seed):
+    params = model.init(jax.random.PRNGKey(seed))
+    opt = AdamWConfig(lr=lr, warmup_steps=10, total_steps=steps, weight_decay=0.0)
+    st = init_adamw(params)
+    step = jax.jit(make_train_step(model, cfg, opt), donate_argnums=(0, 1))
+    for i in range(steps):
+        params, st, m = step(params, st,
+                             {k: jnp.asarray(v) for k, v in batch_at(dc, i).items()})
+    return params, float(m["loss"])
+
+
+def probe_acceptance(tp, dp):
+    prompts = batch_at(dataclasses.replace(dc, batch=8), 9999)["tokens"][:, :16]
+    lens = np.full((8,), 16, np.int32)
+    runs = measure_acceptance(engine, tp, dp, prompts.astype(np.int32),
+                              np.asarray(lens), s=4, gen_tokens=16, cache_len=128)
+    return float(np.mean(runs))
+
+
+t0 = time.time()
+tparams, tloss = train(engine.target, tcfg, args.steps, 3e-3, 0)
+print(f"target trained: loss {tloss:.3f} ({time.time()-t0:.0f}s)")
+
+# draft quality vs training progress
+dparams_rand = engine.draft.init(jax.random.PRNGKey(1))
+a0 = probe_acceptance(tparams, dparams_rand)
+dparams, dloss = train(engine.draft, dcfg, args.steps, 1e-2, 1)
+a1 = probe_acceptance(tparams, dparams)
+print(f"draft trained: loss {dloss:.3f}")
+print(f"mean accepted drafts per step (s=4): untrained {a0:.2f} -> trained {a1:.2f}")
+assert a1 > a0, "training the draft must raise acceptance"
+print("speculation becomes profitable exactly when the draft mimics the "
+      "target — the coupling the adaptive LUT exploits.")

@@ -1,0 +1,4 @@
+from repro.configs.base import (AttnConfig, InputShape, ModelConfig, MoEConfig,
+                                RGLRUConfig, SHAPES, SSMConfig, param_count)
+from repro.configs.registry import (ASSIGNED, build_model, get_config,
+                                    get_draft_config, get_smoke_config)

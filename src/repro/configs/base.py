@@ -1,0 +1,213 @@
+"""Configuration dataclasses for all model families and experiment shapes.
+
+Every assigned architecture gets one module in this package exposing:
+  ``config()``        -- the full-size config (exact numbers from the assignment)
+  ``smoke_config()``  -- a reduced same-family variant for CPU smoke tests
+  ``draft_config()``  -- the small speculative model (SSM in the paper's terms)
+                         paired with the target for speculative decoding.
+
+Configs are plain frozen dataclasses; models consume them functionally.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+# ---------------------------------------------------------------------------
+# attention
+
+
+@dataclass(frozen=True)
+class AttnConfig:
+    kind: str = "gqa"  # "gqa" | "mla"
+    n_heads: int = 8
+    n_kv_heads: int = 8
+    head_dim: int = 128
+    qk_norm: bool = False          # Qwen3-style per-head RMSNorm on q,k
+    rope_theta: float = 10_000.0
+    window: Optional[int] = None   # sliding-window size; None = full causal
+    # --- MLA (DeepSeek-V2) ---
+    kv_lora_rank: int = 0          # compressed KV dim (c_kv)
+    q_lora_rank: int = 0           # 0 = full-rank q projection
+    rope_head_dim: int = 64        # decoupled RoPE key/query dim
+    v_head_dim: int = 0            # defaults to head_dim when 0
+
+    @property
+    def vdim(self) -> int:
+        return self.v_head_dim or self.head_dim
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0              # DeepSeek-style always-on shared experts
+    d_ff_shared: int = 0           # d_ff of the shared-expert block
+    capacity_factor: float = 1.25  # GShard-style dispatch capacity
+    router_aux_weight: float = 1e-2
+    # dispatch implementation: "einsum" = GShard one-hot matmuls (baseline,
+    # costs ~4·n·tg·k·cf·d extra flops); "gather" = stable-sort ragged
+    # dispatch (pure data movement, §Perf hillclimb)
+    dispatch: str = "einsum"
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-2 SSD parameters."""
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    chunk: int = 256               # SSD chunk length
+    d_conv: int = 4
+    n_groups: int = 1
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:
+    """RecurrentGemma temporal-mixing block parameters."""
+    lru_width: int = 0             # 0 -> d_model
+    d_conv: int = 4
+    window: int = 2048             # local-attention window of the attn blocks
+    # layer pattern, repeated: RecurrentGemma-2B uses (rec, rec, attn)
+    pattern: Tuple[str, ...] = ("rec", "rec", "attn")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | encdec | vlm | audio
+    n_layers: int
+    d_model: int
+    d_ff: int
+    vocab_size: int
+    attn: Optional[AttnConfig] = None
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    # enc-dec only
+    enc_layers: int = 0
+    cross_attn: bool = False
+    # vlm / audio: number of modality-prefix embedding positions supplied by
+    # the (stubbed) frontend, and whether the prefix mask is bidirectional
+    prefix_len: int = 0
+    bidirectional_prefix: bool = False
+    # misc
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    # sliding-window override applied when running the long_500k shape on an
+    # otherwise full-attention architecture (sub-quadratic variant; DESIGN §4)
+    long_context_window: int = 8192
+    # int8 KV cache with per-(row, kv-head) scales (GQA caches only; MLA's
+    # cache is already rank-compressed).  §Perf lever: halves the decode
+    # cache sweep, the dominant memory term at 32k context.
+    kv_quant: bool = False
+    source: str = ""               # citation from the assignment
+
+    # ---- derived ----
+    @property
+    def d_head_total(self) -> int:
+        a = self.attn
+        return 0 if a is None else a.n_heads * a.head_dim
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def windowed(self, window: Optional[int] = None) -> "ModelConfig":
+        """Return a copy whose attention uses a sliding window (for long_500k)."""
+        if self.attn is None:
+            return self
+        w = window or self.long_context_window
+        cur = self.attn.window
+        w = min(cur, w) if cur else w
+        return self.with_(attn=dataclasses.replace(self.attn, window=w))
+
+
+# ---------------------------------------------------------------------------
+# parameter counting (used for MODEL_FLOPS = 6·N·D in the roofline)
+
+
+def param_count(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Approximate parameter count; ``active_only`` counts top-k routed experts
+    only (for MoE active-FLOPs accounting)."""
+    d = cfg.d_model
+    n_emb = cfg.vocab_size * d * (1 if cfg.tie_embeddings else 2)
+
+    def attn_params() -> int:
+        a = cfg.attn
+        if a is None:
+            return 0
+        if a.kind == "mla":
+            qp = d * a.q_lora_rank + a.q_lora_rank * a.n_heads * (a.head_dim + a.rope_head_dim) \
+                if a.q_lora_rank else d * a.n_heads * (a.head_dim + a.rope_head_dim)
+            kvp = d * (a.kv_lora_rank + a.rope_head_dim) \
+                + a.kv_lora_rank * a.n_heads * (a.head_dim + a.vdim)
+            op = a.n_heads * a.vdim * d
+            return qp + kvp + op
+        return d * a.head_dim * (a.n_heads + 2 * a.n_kv_heads) + a.n_heads * a.head_dim * d
+
+    def mlp_params() -> int:
+        if cfg.moe is not None:
+            m = cfg.moe
+            n_e = m.top_k if active_only else m.n_experts
+            routed = n_e * 3 * d * m.d_ff_expert + d * m.n_experts  # + router
+            shared = m.n_shared * 3 * d * (m.d_ff_shared or m.d_ff_expert)
+            return routed + shared
+        return 3 * d * cfg.d_ff  # SwiGLU: gate, up, down
+
+    if cfg.family == "ssm":
+        s = cfg.ssm
+        d_in = s.expand * d
+        nheads = d_in // s.head_dim
+        per_layer = (
+            d * (2 * d_in + 2 * s.n_groups * s.d_state + nheads)  # in_proj
+            + s.d_conv * (d_in + 2 * s.n_groups * s.d_state)      # conv
+            + d_in * d                                            # out_proj
+            + 2 * nheads                                          # A_log, D
+        )
+        return n_emb + cfg.n_layers * per_layer
+
+    per_layer = attn_params() + mlp_params()
+    n_layers = cfg.n_layers + cfg.enc_layers
+    if cfg.cross_attn:
+        per_layer_dec_extra = attn_params()  # cross-attention block
+        return n_emb + cfg.enc_layers * (attn_params() + mlp_params()) \
+            + cfg.n_layers * (per_layer + per_layer_dec_extra)
+    if cfg.rglru is not None:
+        # rec blocks replace attention with RG-LRU mixing of similar size
+        r = cfg.rglru
+        w = r.lru_width or d
+        rec = 2 * d * w + w * d + 2 * w + w * r.d_conv
+        pat = r.pattern
+        n_rec = sum(1 for p in pat if p == "rec") * (cfg.n_layers // len(pat))
+        n_att = cfg.n_layers - n_rec
+        return n_emb + n_rec * (rec + mlp_params()) + n_att * per_layer
+    return n_emb + n_layers * per_layer
+
+
+# ---------------------------------------------------------------------------
+# experiment input shapes (the four assigned shapes)
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+TRAIN_4K = InputShape("train_4k", 4_096, 256, "train")
+PREFILL_32K = InputShape("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = InputShape("decode_32k", 32_768, 128, "decode")
+LONG_500K = InputShape("long_500k", 524_288, 1, "decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+def pad_vocab(v: int, multiple: int = 512) -> int:
+    """Vocab padded for model-axis sharding; logits at padded ids are masked."""
+    return ((v + multiple - 1) // multiple) * multiple

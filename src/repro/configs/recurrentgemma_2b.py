@@ -1,0 +1,36 @@
+"""recurrentgemma-2b [hybrid]: 26L d_model=2560 10H (GQA kv=1) d_ff=7680
+vocab=256000, RG-LRU + local attention, 1 attention per 2 recurrent.
+[arXiv:2402.19427]"""
+from repro.configs.base import AttnConfig, ModelConfig, RGLRUConfig
+from repro.configs.drafts import dense_draft
+
+ARCH_ID = "recurrentgemma-2b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, family="hybrid",
+        n_layers=26, d_model=2560, d_ff=7680, vocab_size=256_000,
+        attn=AttnConfig(n_heads=10, n_kv_heads=1, head_dim=256,
+                        rope_theta=1e4, window=2048),
+        rglru=RGLRUConfig(lru_width=2560, d_conv=4, window=2048,
+                          pattern=("rec", "rec", "attn")),
+        source="arXiv:2402.19427",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke", family="hybrid",
+        n_layers=2, d_model=128, d_ff=256, vocab_size=512,
+        attn=AttnConfig(n_heads=4, n_kv_heads=1, head_dim=32,
+                        rope_theta=1e4, window=32),
+        rglru=RGLRUConfig(lru_width=128, d_conv=4, window=32,
+                          pattern=("rec", "attn")),
+        dtype="float32",
+        source="reduced recurrentgemma family variant (1 rec + 1 attn)",
+    )
+
+
+def draft_config() -> ModelConfig:
+    return dense_draft(config())

@@ -1,0 +1,63 @@
+"""Architecture registry: ``--arch <id>`` resolution for every launcher,
+benchmark and test.  Maps assigned arch ids to their config modules and
+model families to model classes.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ModelConfig
+
+# assigned architectures (10) + the paper's own evaluation pair
+_MODULES: Dict[str, str] = {
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "yi-9b": "repro.configs.yi_9b",
+    "seamless-m4t-large-v2": "repro.configs.seamless_m4t_large_v2",
+    "paligemma-3b": "repro.configs.paligemma_3b",
+    "mamba2-1.3b": "repro.configs.mamba2_1_3b",
+    "qwen3-8b": "repro.configs.qwen3_8b",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "yi-34b": "repro.configs.yi_34b",
+    "internlm2-1.8b": "repro.configs.internlm2_1_8b",
+    "opt-6.7b": "repro.configs.opt_pair",
+}
+
+ASSIGNED: List[str] = [k for k in _MODULES if k != "opt-6.7b"]
+
+
+def _norm(arch_id: str) -> str:
+    a = arch_id.lower().replace("_", "-")
+    if a not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    return a
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return importlib.import_module(_MODULES[_norm(arch_id)]).config()
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    return importlib.import_module(_MODULES[_norm(arch_id)]).smoke_config()
+
+
+def get_draft_config(arch_id: str) -> ModelConfig:
+    return importlib.import_module(_MODULES[_norm(arch_id)]).draft_config()
+
+
+def build_model(cfg: ModelConfig):
+    """Instantiate the model class for a config's family."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        from repro.models.transformer import DecoderLM
+        return DecoderLM(cfg)
+    if cfg.family == "ssm":
+        from repro.models.mamba2 import Mamba2LM
+        return Mamba2LM(cfg)
+    if cfg.family == "hybrid":
+        from repro.models.rglru import RGLRUHybridLM
+        return RGLRUHybridLM(cfg)
+    if cfg.family in ("encdec", "audio"):
+        from repro.models.encdec import EncDecLM
+        return EncDecLM(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,322 @@
+"""Batched speculative decoding (paper §3, Algorithm 1).
+
+One speculative step at speculation length ``s`` for a batch of ``b`` ragged
+requests, entirely inside a single jitted computation:
+
+  1. draft phase — the small model (SSM) proposes s tokens autoregressively;
+     its first feed is always the *two* most recently committed tokens, which
+     restores the draft cache invariant regardless of how much of the
+     previous speculation was accepted (DESIGN §3);
+  2. verify — the target model scores all b x (s+1) positions in one forward
+     (this is the paper's masking trick realized as ragged ring-buffer
+     writes + position-based masks);
+  3. accept — per request, the longest draft prefix matching the target's
+     argmax, plus the target's bonus/correction token (always >=1 token of
+     progress per step);
+  4. commit — pure length updates for attention caches; checkpoint selection
+     for recurrent (SSM / RG-LRU) targets.
+
+``s = 0`` degenerates to plain batched autoregressive decoding (the paper's
+no-speculation baseline) with the identical code path.
+
+The engine jit-caches one step function per (batch, s) pair — exactly the
+grid the adaptive profiler (core/adaptive.py) measures.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.configs.registry import build_model
+
+Params = Any
+
+
+@dataclasses.dataclass
+class DecodeState:
+    """Device-side state of a running batch."""
+    tcache: Any
+    dcache: Any
+    seq_lens: jax.Array      # [B] committed tokens (incl. any modality prefix)
+    last2: jax.Array         # [B, 2] tokens at positions n-2, n-1
+    out: jax.Array           # [B, max_new + s_max] generated tokens
+    n_generated: jax.Array   # [B]
+    done: jax.Array          # [B] bool
+
+
+@dataclasses.dataclass
+class StepStats:
+    accepted: np.ndarray     # [B] accepted draft tokens this step (a)
+    committed: np.ndarray    # [B] tokens committed this step (a+1, 0 if done)
+
+
+class SpecDecodeEngine:
+    """Target + draft pair with adaptive-ready batched speculative stepping."""
+
+    def __init__(self, target_cfg: ModelConfig, draft_cfg: Optional[ModelConfig],
+                 max_new: int = 128, eos_id: int = -1, dtype=jnp.float32,
+                 sample: bool = False, temperature: float = 1.0):
+        self.tcfg = target_cfg
+        self.dcfg = draft_cfg
+        self.target = build_model(target_cfg)
+        self.draft = build_model(draft_cfg) if draft_cfg is not None else None
+        self.max_new = max_new
+        self.eos_id = eos_id
+        self.dtype = dtype
+        self.sample = sample
+        self.temperature = temperature
+        # draft models are text-only: for VLM targets their positions run
+        # without the modality prefix offset
+        self.prefix_offset = target_cfg.prefix_len if target_cfg.family == "vlm" else 0
+        self._step_fns: Dict[Tuple[int, int], Any] = {}
+        self._prefill_fns: Dict[Tuple[int, int, int], Any] = {}
+
+    # ------------------------------------------------------------------
+    # prefill
+
+    def _build_prefill(self, B: int, P: int, cache_len: int):
+        tgt, drf = self.target, self.draft
+
+        def fn(tparams, dparams, tokens, prompt_lens, tkw):
+            if self.tcfg.family in ("encdec", "audio"):
+                tcache = tgt.init_cache(B, cache_len=cache_len, dtype=self.dtype,
+                                        src_len=tkw["src_embeds"].shape[1])
+            elif self.tcfg.family == "ssm":
+                tcache = tgt.init_cache(B, dtype=self.dtype)
+            else:
+                tcache = tgt.init_cache(B, cache_len=cache_len, dtype=self.dtype)
+            _, tcache, total = tgt.prefill(tparams, tokens, tcache,
+                                           prompt_lens=prompt_lens - 1, **tkw)
+            seq_lens = total + 1
+            dcache = None
+            if drf is not None:
+                dcache = drf.init_cache(B, cache_len=cache_len, dtype=self.dtype)
+                _, dcache, _ = drf.prefill(dparams, tokens, dcache,
+                                           prompt_lens=prompt_lens - 2)
+            bidx = jnp.arange(B)
+            last2 = jnp.stack([tokens[bidx, prompt_lens - 2],
+                               tokens[bidx, prompt_lens - 1]], axis=1)
+            return tcache, dcache, seq_lens, last2
+
+        return jax.jit(fn)
+
+    def prefill(self, tparams, dparams, tokens: jax.Array, prompt_lens: jax.Array,
+                cache_len: int, target_extras: Optional[Dict] = None) -> DecodeState:
+        B, P = tokens.shape
+        assert int(np.min(np.asarray(prompt_lens))) >= 3, "prompts need >= 3 tokens"
+        key = (B, P, cache_len)
+        if key not in self._prefill_fns:
+            self._prefill_fns[key] = self._build_prefill(B, P, cache_len)
+        tcache, dcache, seq_lens, last2 = self._prefill_fns[key](
+            tparams, dparams, jnp.asarray(tokens), jnp.asarray(prompt_lens),
+            target_extras or {})
+        s_max = 8
+        return DecodeState(
+            tcache=tcache, dcache=dcache, seq_lens=seq_lens, last2=last2,
+            out=jnp.zeros((B, self.max_new + s_max + 1), jnp.int32),
+            n_generated=jnp.zeros((B,), jnp.int32),
+            done=jnp.zeros((B,), bool),
+        )
+
+    # ------------------------------------------------------------------
+    # one speculative step
+
+    def _build_step(self, B: int, s: int):
+        return jax.jit(make_spec_step(
+            self.target, self.draft, B, s, eos_id=self.eos_id,
+            max_new=self.max_new, prefix_offset=self.prefix_offset,
+            sample=self.sample, temperature=self.temperature))
+
+
+
+    def step(self, tparams, dparams, state: DecodeState, s: int,
+             rng: Optional[jax.Array] = None) -> Tuple[DecodeState, StepStats]:
+        B = state.seq_lens.shape[0]
+        key = (B, s)
+        if key not in self._step_fns:
+            self._step_fns[key] = self._build_step(B, s)
+        args = (tparams, dparams, state.tcache, state.dcache, state.seq_lens,
+                state.last2, state.out, state.n_generated, state.done)
+        if self.sample:
+            if rng is None:
+                rng = jax.random.PRNGKey(int(np.asarray(state.n_generated).sum()))
+            args = (*args, rng)
+        (tc, dc, seq_lens, last2, out, n_gen, done, a, n_commit) = \
+            self._step_fns[key](*args)
+        new_state = DecodeState(tc, dc, seq_lens, last2, out, n_gen, done)
+        return new_state, StepStats(accepted=np.asarray(a), committed=np.asarray(n_commit))
+
+    # ------------------------------------------------------------------
+    # full generation driver
+
+    def generate(self, tparams, dparams, tokens, prompt_lens, *, s: int,
+                 cache_len: int, max_new: Optional[int] = None,
+                 target_extras: Optional[Dict] = None,
+                 collect_stats: bool = False,
+                 key: Optional[jax.Array] = None):
+        """Generate ``max_new`` tokens for every request with fixed s.
+        Returns (tokens [B, max_new], list[StepStats], n_steps)."""
+        state = self.prefill(tparams, dparams, tokens, prompt_lens, cache_len,
+                             target_extras)
+        stats = []
+        n_steps = 0
+        limit = max_new or self.max_new
+        if self.sample and key is None:
+            key = jax.random.PRNGKey(0)
+        while True:
+            rng = jax.random.fold_in(key, n_steps) if self.sample else None
+            state, st = self.step(tparams, dparams, state, s, rng=rng)
+            n_steps += 1
+            if collect_stats:
+                stats.append(st)
+            if bool(np.asarray(state.done).all()) or n_steps > limit * 2 + 8:
+                break
+        return np.asarray(state.out)[:, :self.max_new], stats, n_steps
+
+    def warmup(self, tparams, dparams, batch_sizes, s_values, cache_len: int,
+               prompt_len: int = 8):
+        """Pre-compile step functions for the profiling grid."""
+        for b in batch_sizes:
+            tokens = np.full((b, prompt_len), 3, np.int32)
+            lens = np.full((b,), prompt_len, np.int32)
+            state = self.prefill(tparams, dparams, tokens, lens, cache_len)
+            for s in s_values:
+                self.step(tparams, dparams, state, s)
+
+
+def make_spec_step(tgt, drf, B: int, s: int, *, eos_id: int = -1,
+                   max_new: int = 128, prefix_offset: int = 0,
+                   sample: bool = False, temperature: float = 1.0):
+    """Pure one-speculative-step function (paper Algorithm 1, batched).
+
+    Signature: fn(tparams, dparams, tcache, dcache, seq_lens, last2, out,
+    n_generated, done[, rng]) -> (tcache', dcache', seq_lens', last2', out',
+    n_generated', done', accepted, n_commit).
+
+    ``sample=False`` (default) is the paper's argmax verification.
+    ``sample=True`` is Leviathan/Chen-style stochastic speculative sampling
+    (beyond-paper, DESIGN §10): the draft SAMPLES proposals from
+    q(x) = softmax(logits/T); the target accepts token t_i with probability
+    min(1, p_i(t_i)/q_i(t_i)) and on first rejection resamples from the
+    residual norm(max(p − q, 0)) — provably distributed exactly as sampling
+    from the target alone.  Takes one extra ``rng`` argument.
+
+    Exposed at module level so the multi-pod dry-run can lower exactly the
+    serving step the engine runs (launch/dryrun.py jits it with explicit
+    in/out shardings); the engine jit-caches one instance per (B, s).
+    """
+    eos = eos_id
+
+    def fn(tparams, dparams, tcache, dcache, seq_lens, last2, out,
+           n_generated, done, rng=None):
+        if sample:
+            assert rng is not None, "sample=True needs an rng argument"
+            k_draft, k_acc, k_res = jax.random.split(rng, 3)
+        # ---- 1. draft phase ----
+        dlens = seq_lens - prefix_offset
+        drafts = []
+        q_probs = []                                  # draft probs of drafts
+        if s > 0:
+            logits, dcache = drf.decode_step(dparams, last2, dcache, dlens - 1)
+            lg = logits[:, -1]
+            for i in range(0, s):
+                if i > 0:
+                    logits, dcache = drf.decode_step(dparams, d[:, None],
+                                                     dcache, dlens + i)
+                    lg = logits[:, 0]
+                if sample:
+                    qd = jax.nn.softmax(lg / temperature, axis=-1)   # [B, V]
+                    d = jax.random.categorical(
+                        jax.random.fold_in(k_draft, i), lg / temperature,
+                        axis=-1).astype(jnp.int32)
+                    q_probs.append(qd)
+                else:
+                    d = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+                drafts.append(d)
+            drafts = jnp.stack(drafts, axis=1)                    # [B, s]
+        else:
+            drafts = jnp.zeros((B, 0), jnp.int32)
+
+        # ---- 2. verify: [t_{n-1}, d_1..d_s] ----
+        feed = jnp.concatenate([last2[:, 1:], drafts], axis=1)    # [B, s+1]
+        vlogits, tcache_out = tgt.decode_step(tparams, feed, tcache, seq_lens)
+        bidx = jnp.arange(B)
+
+        if not sample:
+            # ---- 3a. acceptance (argmax verification, Algorithm 1) ----
+            pred = jnp.argmax(vlogits, axis=-1).astype(jnp.int32)  # [B, s+1]
+            if s > 0:
+                match = drafts == pred[:, :s]                      # [B, s]
+                a = jnp.cumprod(match.astype(jnp.int32), axis=1).sum(axis=1)
+            else:
+                a = jnp.zeros((B,), jnp.int32)
+            a = jnp.where(done, 0, a)
+            bonus = pred[bidx, a]                                  # [B]
+        else:
+            # ---- 3b. stochastic acceptance (Leviathan-style) ----
+            p_all = jax.nn.softmax(vlogits / temperature, axis=-1)  # [B,s+1,V]
+            if s > 0:
+                q_all = jnp.stack(q_probs, axis=1)                  # [B,s,V]
+                p_at = jnp.take_along_axis(p_all[:, :s],
+                                           drafts[..., None], -1)[..., 0]
+                q_at = jnp.take_along_axis(q_all, drafts[..., None], -1)[..., 0]
+                ratio = p_at / jnp.maximum(q_at, 1e-20)             # [B, s]
+                u = jax.random.uniform(k_acc, (B, s))
+                acc = u < jnp.minimum(ratio, 1.0)
+                a = jnp.cumprod(acc.astype(jnp.int32), axis=1).sum(axis=1)
+                # residual distribution at the cut point (or p_s if a == s)
+                p_cut = p_all[bidx, a]                              # [B, V]
+                q_pad = jnp.concatenate(
+                    [q_all, jnp.zeros_like(q_all[:, :1])], axis=1)  # q_s = 0
+                q_cut = q_pad[bidx, a]
+                resid = jnp.maximum(p_cut - q_cut, 0.0)
+                norm = resid.sum(-1, keepdims=True)
+                resid = jnp.where(norm > 1e-20, resid / jnp.maximum(norm, 1e-20),
+                                  p_cut)
+            else:
+                a = jnp.zeros((B,), jnp.int32)
+                resid = p_all[:, 0]
+            a = jnp.where(done, 0, a)
+            bonus = jax.random.categorical(
+                k_res, jnp.log(jnp.maximum(resid, 1e-30)), axis=-1
+            ).astype(jnp.int32)
+
+        # ---- 4. commit ----
+        tcache_new = tgt.commit(tcache_out, a)
+
+        # committed tokens this step: drafts[:a] then bonus at index a
+        cand = jnp.concatenate([drafts, bonus[:, None]], axis=1)  # [B, s+1]
+        cand = cand.at[bidx, a].set(bonus)
+        icols = jnp.arange(s + 1)[None, :]                        # [B, s+1]
+        write = (icols <= a[:, None]) & (~done[:, None])
+        # stop at eos within the committed run
+        is_eos = (cand == eos) & write
+        eos_cum = jnp.cumsum(is_eos.astype(jnp.int32), axis=1)
+        write &= (eos_cum - is_eos.astype(jnp.int32)) == 0        # keep first eos
+        n_commit = write.sum(axis=1)
+
+        cols = jnp.where(write, n_generated[:, None] + icols, out.shape[1])
+        out = out.at[bidx[:, None], cols].set(cand, mode="drop")
+        n_generated = n_generated + n_commit
+        seq_lens = seq_lens + n_commit
+        hit_eos = (is_eos & write).any(axis=1)
+        done = done | hit_eos | (n_generated >= max_new)
+
+        # last two committed tokens for the next draft phase
+        last1 = jnp.where(a > 0,
+                          cand[bidx, jnp.maximum(a - 1, 0)], last2[:, 1])
+        new_last2 = jnp.where(
+            done[:, None], last2,
+            jnp.stack([last1, bonus], axis=1))
+        last2 = jnp.where((n_commit > 0)[:, None], new_last2, last2)
+        return (tcache_new, dcache, seq_lens, last2, out, n_generated, done,
+                a, n_commit)
+
+    return fn

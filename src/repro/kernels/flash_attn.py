@@ -1,0 +1,112 @@
+"""Causal flash attention Pallas kernel (TPU target, interpret=True on CPU).
+
+Tiling: grid (batch, q_blocks, k_blocks), k innermost so the online-softmax
+accumulators live in VMEM scratch across the k sweep.  Blocks are
+(block_q x head_dim) and (block_k x head_dim); with the default 512x128
+blocks the working set is ~1 MiB of VMEM — far under the ~16 MiB/core v5e
+budget, and every matmul dim is a multiple of 128 for the MXU.
+
+Masking is position-based (absolute positions, -1 = unwritten/padded row),
+identical to models.common.position_mask, so the same kernel serves causal
+training, sliding-window long-context, bidirectional-prefix VLM attention,
+and ragged prefill.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, qp_ref, kp_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *,
+                  scale: float, window: Optional[int], prefix_len: int,
+                  nk: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                     # [bq, hd]
+    k = k_ref[0].astype(jnp.float32)                     # [bk, hd]
+    v = v_ref[0].astype(jnp.float32)
+    qp = qp_ref[0]                                       # [bq] int32
+    kp = kp_ref[0]                                       # [bk]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # [bq, bk]
+    ok = (kp[None, :] >= 0) & (kp[None, :] <= qp[:, None])
+    if window is not None:
+        ok &= kp[None, :] > qp[:, None] - window
+    if prefix_len:
+        ok |= (kp[None, :] >= 0) & (kp[None, :] < prefix_len)
+    s = jnp.where(ok, s, -jnp.inf)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+    p = jnp.exp(s - m_safe[:, None])
+    p = jnp.where(ok, p, 0.0)
+    corr = jnp.where(jnp.isneginf(m_prev), 0.0, jnp.exp(m_prev - m_safe))
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+    m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        l = l_ref[...]
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attn_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                      q_pos: jax.Array, k_pos: jax.Array,
+                      window: Optional[int] = None, prefix_len: int = 0,
+                      scale: Optional[float] = None,
+                      block_q: int = 512, block_k: int = 512,
+                      interpret: bool = False) -> jax.Array:
+    """q: [B, Tq, hd]; k/v: [B, Tk, hd]; q_pos/k_pos: [B, Tq]/[B, Tk] int32.
+    Returns [B, Tq, hd] in q.dtype.  (GQA head folding lives in ops.py.)"""
+    B, Tq, hd = q.shape
+    Tk = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    def fit(blk, n):
+        blk = min(blk, n)
+        while n % blk:
+            blk -= 1
+        return blk
+
+    bq, bk = fit(block_q, Tq), fit(block_k, Tk)
+    nq, nk = Tq // bq, Tk // bk
+
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, window=window,
+                          prefix_len=prefix_len, nk=nk),
+        grid=(B, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, bk), lambda b, i, j: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Tq, hd), q.dtype),
+        scratch_shapes=[
+            # (bq, hd) accumulator, (bq,) running max, (bq,) running sum
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, q_pos, k_pos)

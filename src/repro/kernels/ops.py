@@ -1,0 +1,175 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Dispatch policy: on TPU backends the Pallas kernels compile natively; on CPU
+(this container) callers either use ``interpret=True`` (tests — executes the
+kernel body in Python for bit-faithful validation) or fall back to the
+pure-jnp reference (fast path for CPU benchmarks).  Models call these
+wrappers, so swapping the implementation never touches model code.
+
+GQA head folding: the attention kernels operate on one kv-head per grid row.
+``flash_attn``/``spec_verify_attn`` fold (batch, kv_head) into the kernel
+batch dim and the q-head group into the q rows, so a 32-head/4-kv-head GQA
+layer becomes 4 kernel batches of 8x-longer q blocks — dense MXU tiles
+instead of 8 strided passes.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.flash_attn import flash_attn_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+from repro.kernels.spec_verify_attn import spec_verify_attn_pallas
+from repro.kernels.ssd_chunk import ssd_chunk_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _mode(use_pallas: Optional[bool]) -> str:
+    """'pallas' | 'interpret' | 'ref'."""
+    if use_pallas is None:
+        return "pallas" if _on_tpu() else "ref"
+    if use_pallas:
+        return "pallas" if _on_tpu() else "interpret"
+    return "ref"
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6,
+            use_pallas: Optional[bool] = None) -> jax.Array:
+    m = _mode(use_pallas)
+    if m == "ref":
+        return _ref.rmsnorm_ref(x, gamma, eps)
+    return rmsnorm_pallas(x, gamma, eps, interpret=(m == "interpret"))
+
+
+# ---------------------------------------------------------------------------
+# GQA head folding helpers
+
+
+def _fold_gqa(q: jax.Array, k: jax.Array, v: jax.Array,
+              q_pos: jax.Array, k_pos: jax.Array):
+    """[B,T,H,hd] x [B,L,KVH,hd] -> per-kv-head folded batches.
+
+    Returns (qf [B*KVH, G*T, hd], kf [B*KVH, L, hd], vf, qpf [B*KVH, G*T],
+    kpf [B*KVH, L], unfold) where unfold maps [B*KVH, G*T, vd] back to
+    [B, T, H, vd].
+    """
+    B, T, H, hd = q.shape
+    L, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    # q: [B,T,KVH,G,hd] -> [B,KVH,G,T,hd] -> [B*KVH, G*T, hd]
+    qf = (q.reshape(B, T, KVH, G, hd).transpose(0, 2, 3, 1, 4)
+           .reshape(B * KVH, G * T, hd))
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KVH, L, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KVH, L, v.shape[-1])
+    qpf = jnp.broadcast_to(q_pos[:, None, None, :], (B, KVH, G, T)).reshape(
+        B * KVH, G * T)
+    kpf = jnp.broadcast_to(k_pos[:, None, :], (B, KVH, L)).reshape(B * KVH, L)
+
+    def unfold(o: jax.Array) -> jax.Array:
+        vd = o.shape[-1]
+        return (o.reshape(B, KVH, G, T, vd).transpose(0, 3, 1, 2, 4)
+                 .reshape(B, T, H, vd))
+
+    return qf, kf, vf, qpf, kpf, unfold
+
+
+# ---------------------------------------------------------------------------
+# flash attention (training / prefill)
+
+
+def flash_attn(q: jax.Array, k: jax.Array, v: jax.Array,
+               q_pos: jax.Array, k_pos: jax.Array,
+               window: Optional[int] = None, prefix_len: int = 0,
+               scale: Optional[float] = None,
+               block_q: int = 512, block_k: int = 512,
+               use_pallas: Optional[bool] = None) -> jax.Array:
+    """GQA flash attention.  q: [B,T,H,hd]; k/v: [B,L,KVH,hd];
+    q_pos/k_pos: [B,T]/[B,L].  Returns [B,T,H,vd]."""
+    m = _mode(use_pallas)
+    scale = scale if scale is not None else 1.0 / math.sqrt(q.shape[-1])
+    if m == "ref":
+        # unfolded layout: keeps the model-axis sharding of q/k/v intact
+        return _ref.gqa_masked_ref(q, k, v, q_pos, k_pos, window, prefix_len,
+                                   scale)
+    qf, kf, vf, qpf, kpf, unfold = _fold_gqa(q, k, v, q_pos, k_pos)
+    o = flash_attn_pallas(qf, kf, vf, qpf, kpf, window, prefix_len, scale,
+                          block_q, block_k, interpret=(m == "interpret"))
+    return unfold(o)
+
+
+# ---------------------------------------------------------------------------
+# speculative verify attention (decode hot path)
+
+
+def spec_verify_attn(q: jax.Array, k: jax.Array, v: jax.Array,
+                     q_pos: jax.Array, k_pos: jax.Array,
+                     window: Optional[int] = None, prefix_len: int = 0,
+                     scale: Optional[float] = None, block_k: int = 512,
+                     k_scale: Optional[jax.Array] = None,
+                     v_scale: Optional[jax.Array] = None,
+                     use_pallas: Optional[bool] = None) -> jax.Array:
+    """Verify-step attention.  Same shapes as :func:`flash_attn` with tiny T
+    (s+1); q rows are padded to a multiple of 8 for TPU sublanes, padded rows
+    carry q_pos = -1 and are sliced off the output.
+
+    int8 caches (kv_quant): pass the int8 k/v plus per-(row, kv-head)
+    ``k_scale``/``v_scale`` [B, L, KVH].  The Pallas kernel streams 1 B/elem
+    from HBM and dequantizes in VMEM; the CPU reference dequantizes up front
+    (numerically identical, HBM accounting differs — launch/costs.py models
+    the kernel behaviour)."""
+    m = _mode(use_pallas)
+    scale = scale if scale is not None else 1.0 / math.sqrt(q.shape[-1])
+    if m == "ref":
+        if k_scale is not None:
+            k = (k.astype(jnp.float32) * k_scale.astype(jnp.float32)[..., None]
+                 ).astype(q.dtype)
+            v = (v.astype(jnp.float32) * v_scale.astype(jnp.float32)[..., None]
+                 ).astype(q.dtype)
+        # unfolded layout: keeps the model-axis sharding of the cache intact
+        return _ref.gqa_masked_ref(q, k, v, q_pos, k_pos, window, prefix_len,
+                                   scale)
+    qf, kf, vf, qpf, kpf, unfold = _fold_gqa(q, k, v, q_pos, k_pos)
+    ksf = vsf = None
+    if k_scale is not None:
+        B, L, KVH = k_scale.shape
+        ksf = k_scale.transpose(0, 2, 1).reshape(B * KVH, L)
+        vsf = v_scale.transpose(0, 2, 1).reshape(B * KVH, L)
+    rows = qf.shape[1]
+    pad = (-rows) % 8
+    if pad:
+        qf = jnp.pad(qf, ((0, 0), (0, pad), (0, 0)))
+        qpf = jnp.pad(qpf, ((0, 0), (0, pad)), constant_values=-1)
+    o = spec_verify_attn_pallas(qf, kf, vf, qpf, kpf, window, prefix_len,
+                                scale, block_k, k_scale=ksf, v_scale=vsf,
+                                interpret=(m == "interpret"))
+    if pad:
+        o = o[:, :rows]
+    return unfold(o)
+
+
+# ---------------------------------------------------------------------------
+# SSD chunk
+
+
+def ssd_chunk(x: jax.Array, b: jax.Array, c: jax.Array, dt: jax.Array,
+              l: jax.Array, h0: jax.Array,
+              use_pallas: Optional[bool] = None) -> Tuple[jax.Array, jax.Array]:
+    """Batched SSD chunk.  x: [BH,Q,P]; b/c: [BH,Q,N]; dt/l: [BH,Q];
+    h0: [BH,P,N] -> (y [BH,Q,P], h_new [BH,P,N]) fp32."""
+    m = _mode(use_pallas)
+    if m == "ref":
+        ys, hs = jax.vmap(_ref.ssd_chunk_ref)(x, b, c, dt, l, h0)
+        return ys, hs
+    return ssd_chunk_pallas(x, b, c, dt, l, h0, interpret=(m == "interpret"))

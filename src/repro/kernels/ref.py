@@ -1,0 +1,112 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each oracle defines the kernel's exact numerical contract; tests sweep
+shapes/dtypes and assert_allclose(kernel(interpret=True), ref).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Row RMS norm in fp32 with output in x.dtype (matches models.common)."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)).astype(dt) * gamma)
+
+
+def flash_attn_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                   q_pos: jax.Array, k_pos: jax.Array,
+                   window: Optional[int] = None, prefix_len: int = 0,
+                   scale: Optional[float] = None) -> jax.Array:
+    """Masked attention, one kv-head group.
+
+    q: [B, Tq, hd]  (the wrapper folds (kv_head, group) into B and rows)
+    k/v: [B, Tk, hd]; q_pos: [B, Tq]; k_pos: [B, Tk] (-1 = unwritten row).
+    Attendable iff 0 <= k_pos <= q_pos and k_pos > q_pos - window, OR
+    k_pos < prefix_len (bidirectional modality prefix).
+    """
+    hd = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bqh,bkh->bqk", q, k).astype(jnp.float32) * scale
+    qp, kp = q_pos[:, :, None], k_pos[:, None, :]
+    ok = (kp >= 0) & (kp <= qp)
+    if window is not None:
+        ok &= kp > qp - window
+    if prefix_len:
+        ok |= (kp >= 0) & (kp < prefix_len)
+    s = jnp.where(ok, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows (q_pos = -1 padding) produce zeros
+    p = jnp.where(ok.any(-1, keepdims=True), p, 0.0)
+    return jnp.einsum("bqk,bkh->bqh", p.astype(v.dtype), v)
+
+
+def spec_verify_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                    q_pos: jax.Array, k_pos: jax.Array,
+                    window: Optional[int] = None, prefix_len: int = 0,
+                    scale: Optional[float] = None) -> jax.Array:
+    """Verify-step attention: same contract as flash_attn_ref (tiny Tq = s+1,
+    long Tk = cache length); kept separate because the kernel tiles
+    differently (whole-q block, stream over the cache)."""
+    return flash_attn_ref(q, k, v, q_pos, k_pos, window, prefix_len, scale)
+
+
+def gqa_masked_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                   q_pos: jax.Array, k_pos: jax.Array,
+                   window: Optional[int] = None, prefix_len: int = 0,
+                   scale: Optional[float] = None) -> jax.Array:
+    """GQA attention in the *unfolded* layout (q: [B,T,H,hd]; k/v:
+    [B,L,KVH,hd]) with the same position-mask contract as flash_attn_ref.
+
+    This is the CPU / dry-run execution path: it never reshapes the
+    (model-axis-sharded) KV cache, so GSPMD keeps heads sharded instead of
+    all-gathering the cache (the folded layout is a kernel-only concern).
+    """
+    B, T, H, hd = q.shape
+    L, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, T, KVH, G, hd)
+    s = jnp.einsum("btkgh,bskh->bkgts", qg, k).astype(jnp.float32) * scale
+    qp, kp = q_pos[:, :, None], k_pos[:, None, :]
+    ok = (kp >= 0) & (kp <= qp)
+    if window is not None:
+        ok &= kp > qp - window
+    if prefix_len:
+        ok |= (kp >= 0) & (kp < prefix_len)
+    okb = ok[:, None, None]                                # [B,1,1,T,L]
+    s = jnp.where(okb, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(okb.any(-1, keepdims=True), p, 0.0)
+    out = jnp.einsum("bkgts,bskh->btkgh", p.astype(v.dtype), v)
+    return out.reshape(B, T, H, v.shape[-1])
+
+
+def ssd_chunk_ref(x: jax.Array, b: jax.Array, c: jax.Array, dt: jax.Array,
+                  l: jax.Array, h0: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One SSD chunk (contract of models.mamba2._ssd_chunked's body), for a
+    single (batch, head) slice.
+
+    x: [Q, P] inputs; b/c: [Q, N]; dt: [Q] (>=0); l: [Q] log-decay (<=0);
+    h0: [P, N] carried state.  Returns (y [Q, P], h_new [P, N]), fp32.
+    """
+    x = x.astype(jnp.float32); b = b.astype(jnp.float32); c = c.astype(jnp.float32)
+    dt = dt.astype(jnp.float32); l = l.astype(jnp.float32); h0 = h0.astype(jnp.float32)
+    Q = x.shape[0]
+    cs = jnp.cumsum(l)                                   # [Q] inclusive
+    cb = jnp.einsum("in,jn->ij", c, b)                   # [Q, Q]
+    dec = cs[:, None] - cs[None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    M = jnp.where(mask, cb * jnp.exp(jnp.where(mask, dec, 0.0)), 0.0)
+    y_in = jnp.einsum("ij,j,jp->ip", M, dt, x)
+    y_h = jnp.einsum("in,pn->ip", c * jnp.exp(cs)[:, None], h0)
+    decay_end = jnp.exp(cs[-1] - cs)                     # [Q]
+    contrib = jnp.einsum("j,jp,jn->pn", dt * decay_end, x, b)
+    h_new = jnp.exp(cs[-1]) * h0 + contrib
+    return y_in + y_h, h_new

@@ -1,0 +1,140 @@
+"""Speculative-verify attention Pallas kernel (the paper's hot spot).
+
+One verify step scores q_len = s+1 draft positions against a long ragged KV
+cache (decode_32k: 32k rows; long_500k: a ring-buffered window).  This is a
+flash-decode-style kernel: the *whole* tiny q block (s+1 rows, padded to the
+8-row sublane multiple) stays resident in VMEM while the kernel streams the
+cache in ``block_k`` tiles; grid = (batch, k_blocks).
+
+TPU adaptation of the paper's GPU attention-mask trick: rejection masking is
+position arithmetic on the ring buffer's absolute-position row map (k_pos),
+so "discarding" mis-speculated tokens costs nothing — stale rows simply stay
+masked until overwritten.  Cache tiles whose positions are all outside the
+(q - window, q] visibility range are *skipped* (@pl.when) — on a 512k-row
+cache with an 8k window that's a 64x reduction in touched tiles, the
+structural equivalent of flash-decode's early exit.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _verify_kernel(q_ref, k_ref, v_ref, qp_ref, kp_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *,
+                   scale: float, window: Optional[int], prefix_len: int,
+                   nk: int, ks_ref=None, vs_ref=None):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    qp = qp_ref[0]                                       # [Tq]
+    kp = kp_ref[0]                                       # [bk]
+
+    # tile-level visibility: any cache row in this tile attendable by any query?
+    q_hi = qp.max()
+    vis = (kp >= 0) & (kp <= q_hi)
+    if window is not None:
+        q_lo = jnp.where(qp < 0, jnp.iinfo(jnp.int32).max, qp).min()
+        vis &= kp > q_lo - window
+    if prefix_len:
+        vis |= (kp >= 0) & (kp < prefix_len)
+
+    @pl.when(vis.any())
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                 # [Tq, hd]
+        k = k_ref[0].astype(jnp.float32)                 # [bk, hd]
+        v = v_ref[0].astype(jnp.float32)
+        if ks_ref is not None:
+            # int8 cache tiles: HBM moved them at 1 B/elem; dequantize in
+            # VMEM with the per-row scales (the beyond-paper kv_quant path)
+            k = k * ks_ref[0].astype(jnp.float32)[:, None]
+            v = v * vs_ref[0].astype(jnp.float32)[:, None]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        ok = (kp[None, :] >= 0) & (kp[None, :] <= qp[:, None])
+        if window is not None:
+            ok &= kp[None, :] > qp[:, None] - window
+        if prefix_len:
+            ok |= (kp[None, :] >= 0) & (kp[None, :] < prefix_len)
+        s = jnp.where(ok, s, -jnp.inf)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+        p = jnp.where(ok, jnp.exp(s - m_safe[:, None]), 0.0)
+        corr = jnp.where(jnp.isneginf(m_prev), 0.0, jnp.exp(m_prev - m_safe))
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def spec_verify_attn_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                            q_pos: jax.Array, k_pos: jax.Array,
+                            window: Optional[int] = None, prefix_len: int = 0,
+                            scale: Optional[float] = None,
+                            block_k: int = 512,
+                            k_scale: Optional[jax.Array] = None,
+                            v_scale: Optional[jax.Array] = None,
+                            interpret: bool = False) -> jax.Array:
+    """q: [B, Tq, hd] with tiny Tq (s+1, padded to a multiple of 8 by ops.py;
+    padded rows carry q_pos = -1); k/v: [B, L, hd]; k_pos: [B, L].
+    Optional k_scale/v_scale: [B, L] per-row dequant scales for int8 k/v
+    (the kv_quant cache — tiles stream from HBM at 1 B/elem and are
+    dequantized in VMEM).  Returns [B, Tq, hd]."""
+    B, Tq, hd = q.shape
+    L = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    bk = min(block_k, L)
+    while L % bk:
+        bk -= 1
+    nk = L // bk
+    quant = k_scale is not None
+    in_specs = [
+        pl.BlockSpec((1, Tq, hd), lambda b, j: (b, 0, 0)),
+        pl.BlockSpec((1, bk, hd), lambda b, j: (b, j, 0)),
+        pl.BlockSpec((1, bk, hd), lambda b, j: (b, j, 0)),
+        pl.BlockSpec((1, Tq), lambda b, j: (b, 0)),
+        pl.BlockSpec((1, bk), lambda b, j: (b, j)),
+    ]
+    args = [q, k, v, q_pos, k_pos]
+    kern = functools.partial(_verify_kernel, scale=scale, window=window,
+                             prefix_len=prefix_len, nk=nk)
+    if quant:
+        in_specs += [pl.BlockSpec((1, bk), lambda b, j: (b, j)),
+                     pl.BlockSpec((1, bk), lambda b, j: (b, j))]
+        args += [k_scale, v_scale]
+
+        def kern(q_ref, k_ref, v_ref, qp_ref, kp_ref, ks_ref, vs_ref, o_ref,
+                 acc_ref, m_ref, l_ref):
+            return _verify_kernel(q_ref, k_ref, v_ref, qp_ref, kp_ref, o_ref,
+                                  acc_ref, m_ref, l_ref, scale=scale,
+                                  window=window, prefix_len=prefix_len,
+                                  nk=nk, ks_ref=ks_ref, vs_ref=vs_ref)
+    return pl.pallas_call(
+        kern,
+        grid=(B, nk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, Tq, hd), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Tq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((Tq, hd), jnp.float32),
+            pltpu.VMEM((Tq,), jnp.float32),
+            pltpu.VMEM((Tq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*args)

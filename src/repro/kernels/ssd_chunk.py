@@ -1,0 +1,82 @@
+"""SSD intra-chunk Pallas kernel (Mamba-2 hot spot, arXiv:2405.21060 §6).
+
+The SSD decomposition splits the sequence into chunks: within a chunk the
+recurrence is a masked-decay "attention-like" quadratic form (MXU-friendly),
+across chunks a diagonal recurrence carries the state.  This kernel computes
+the quadratic intra-chunk term plus the carried-state contributions for one
+(batch*head, chunk) grid cell; the O(n_chunks) outer recurrence stays a
+lax.scan in the model (it is sequential by construction and tiny).
+
+VMEM working set per cell: x [Q,P] + b,c [Q,N] + M [Q,Q] + state [P,N];
+with Q = 256, P = 64, N = 128 that is ~0.6 MiB fp32.  Q and N are multiples
+of 128/8 so the two dot_generals hit the MXU; the h0 contribution reuses the
+same tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_chunk_kernel(x_ref, b_ref, c_ref, dt_ref, l_ref, h0_ref,
+                      y_ref, h_ref):
+    x = x_ref[0].astype(jnp.float32)                     # [Q, P]
+    b = b_ref[0].astype(jnp.float32)                     # [Q, N]
+    c = c_ref[0].astype(jnp.float32)                     # [Q, N]
+    dt = dt_ref[0].astype(jnp.float32)                   # [Q]
+    l = l_ref[0].astype(jnp.float32)                     # [Q]
+    h0 = h0_ref[0].astype(jnp.float32)                   # [P, N]
+    Q = x.shape[0]
+
+    cs = jnp.cumsum(l)                                   # [Q]
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())))   # [Q, Q]
+    dec = cs[:, None] - cs[None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), jnp.bool_))
+    M = jnp.where(mask, cb * jnp.exp(jnp.where(mask, dec, 0.0)), 0.0)
+    y_in = jax.lax.dot_general(M * dt[None, :], x, (((1,), (0,)), ((), ())))
+    # carried-state contribution to every position
+    y_h = jax.lax.dot_general(c * jnp.exp(cs)[:, None], h0,
+                              (((1,), (1,)), ((), ())))        # [Q, P]
+    y_ref[0] = (y_in + y_h).astype(y_ref.dtype)
+    # state update for the next chunk
+    decay_end = jnp.exp(cs[-1] - cs)
+    wx = x * (dt * decay_end)[:, None]                   # [Q, P]
+    contrib = jax.lax.dot_general(wx, b, (((0,), (0,)), ((), ())))  # [P, N]
+    h_ref[0] = (jnp.exp(cs[-1]) * h0 + contrib).astype(h_ref.dtype)
+
+
+def ssd_chunk_pallas(x: jax.Array, b: jax.Array, c: jax.Array,
+                     dt: jax.Array, l: jax.Array, h0: jax.Array,
+                     interpret: bool = False):
+    """One chunk for a batch of (batch*head) slices.
+
+    x: [BH, Q, P]; b/c: [BH, Q, N]; dt/l: [BH, Q]; h0: [BH, P, N].
+    Returns (y [BH, Q, P], h_new [BH, P, N]) in fp32.
+    """
+    BH, Q, P = x.shape
+    N = b.shape[-1]
+    return pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=(BH,),
+        in_specs=[
+            pl.BlockSpec((1, Q, P), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, Q, N), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, Q, N), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, Q), lambda i: (i, 0)),
+            pl.BlockSpec((1, Q), lambda i: (i, 0)),
+            pl.BlockSpec((1, P, N), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, P), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, P, N), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, Q, P), jnp.float32),
+            jax.ShapeDtypeStruct((BH, P, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, b, c, dt, l, h0)

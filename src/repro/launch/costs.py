@@ -1,0 +1,341 @@
+"""Analytic per-step FLOP / HBM-byte model for every (arch x shape) pair.
+
+Why analytic: XLA's ``compiled.cost_analysis()`` counts each ``while`` body
+ONCE, and our models scan over layers (and flash attention scans over block
+pairs), so raw HLO numbers undercount by ~n_layers (validated empirically in
+EXPERIMENTS.md §Dry-run: a scan-of-4 matmuls reports 1x the body flops).
+Matmul-dominated cost is exact arithmetic from the config, so the roofline's
+compute/memory terms are derived here; the dry-run's cost_analysis and
+depth-variant deltas cross-check these numbers, and collective bytes come
+from the compiled HLO (launch/dryrun.py) where depth extrapolation IS exact.
+
+Conventions:
+  * FLOPs: 2 * m * n * k per matmul; elementwise ops are ignored (<1%).
+  * train = fwd + 2x bwd (+1x fwd recompute under remat) on matmul flops.
+  * HBM bytes per step: parameter bytes streamed once per step (the decode
+    regime that makes speculation profitable), plus KV-cache traffic, plus
+    the activation working set where it matters (train).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+from repro.configs.base import InputShape, ModelConfig, pad_vocab, param_count
+
+
+@dataclass(frozen=True)
+class StepCost:
+    flops: float            # total FLOPs of one step (whole batch, all chips)
+    hbm_bytes: float        # total HBM traffic of one step
+    detail: Dict[str, float]
+
+    def __add__(self, o: "StepCost") -> "StepCost":
+        d = dict(self.detail)
+        for k, v in o.detail.items():
+            d[k] = d.get(k, 0.0) + v
+        return StepCost(self.flops + o.flops, self.hbm_bytes + o.hbm_bytes, d)
+
+    def scale(self, f: float) -> "StepCost":
+        return StepCost(self.flops * f, self.hbm_bytes * f,
+                        {k: v * f for k, v in self.detail.items()})
+
+
+def _bytes_per(dtype: str) -> int:
+    return {"bfloat16": 2, "float32": 4, "float16": 2}.get(dtype, 2)
+
+
+# ---------------------------------------------------------------------------
+# per-layer matmul flops for n tokens
+
+
+def _attn_proj_flops(cfg: ModelConfig, n: float) -> float:
+    a, d = cfg.attn, cfg.d_model
+    if a.kind == "mla":
+        rd, lr, vd = a.rope_head_dim, a.kv_lora_rank, a.vdim
+        q = (2 * n * (d * a.q_lora_rank + a.q_lora_rank * a.n_heads * (a.head_dim + rd))
+             if a.q_lora_rank else 2 * n * d * a.n_heads * (a.head_dim + rd))
+        kv = 2 * n * d * (lr + rd)
+        up = 2 * n * lr * a.n_heads * (a.head_dim + vd)    # w_uk + w_uv
+        o = 2 * n * a.n_heads * vd * d
+        return q + kv + up + o
+    qkv = 2 * n * d * a.head_dim * (a.n_heads + 2 * a.n_kv_heads)
+    o = 2 * n * a.n_heads * a.head_dim * d
+    return qkv + o
+
+
+def _attn_score_flops(cfg: ModelConfig, n: float, kv_len: float) -> float:
+    """Score + weighted-value matmuls: 2 matmuls x 2 flops = 4 n K H hd."""
+    a = cfg.attn
+    hd = a.head_dim + (a.rope_head_dim if a.kind == "mla" else 0)
+    vd = a.vdim if a.kind == "mla" else a.head_dim
+    return 2 * n * kv_len * a.n_heads * (hd + vd)
+
+
+def _mlp_flops(cfg: ModelConfig, n: float) -> Tuple[float, float]:
+    """Returns (expert/dense mlp flops, moe dispatch-overhead flops)."""
+    d = cfg.d_model
+    if cfg.moe is None:
+        return 6 * n * d * cfg.d_ff, 0.0
+    m = cfg.moe
+    expert = 6 * n * d * m.d_ff_expert * m.top_k
+    shared = 6 * n * d * (m.n_shared * (m.d_ff_shared or m.d_ff_expert))
+    router = 2 * n * d * m.n_experts
+    if m.dispatch == "gather":
+        # stable-sort ragged dispatch: data movement only (validated: 3.7x
+        # compiled-flop drop on a synthetic layer vs the einsum path)
+        return expert + shared + router, 0.0
+    # GShard one-hot dispatch/combine einsums: E*C ~= tg*k*cf slots per group
+    # -> 4 n (tg k cf) d.  Real compiled cost (hillclimb target, DESIGN §8.4).
+    tg = 1024.0
+    slots = tg * m.top_k * m.capacity_factor
+    dispatch = 4 * n * slots * d
+    return expert + shared + router, dispatch
+
+
+def _ssm_flops(cfg: ModelConfig, n: float, decode: bool) -> float:
+    s = cfg.ssm
+    d = cfg.d_model
+    din = s.expand * d
+    bc = s.n_groups * s.d_state
+    H = din // s.head_dim
+    P, N = s.head_dim, s.d_state
+    proj = 2 * n * d * (2 * din + 2 * bc + H) + 2 * n * din * d
+    conv = 2 * n * s.d_conv * (din + 2 * bc)
+    if decode:
+        mix = n * H * 5 * P * N                       # sequential state updates
+    else:
+        Q = min(s.chunk, n)
+        mix = n * H * (2 * Q * (N + P) + 4 * P * N)   # chunked SSD
+    return proj + conv + mix
+
+
+def _rglru_rec_flops(cfg: ModelConfig, n: float) -> float:
+    d, w = cfg.d_model, (cfg.rglru.lru_width or cfg.d_model)
+    return 2 * n * d * w * 2 + 2 * n * w * d + 12 * n * w
+
+
+def layer_flops(cfg: ModelConfig, n: float, kv_len: float,
+                decode: bool = False, full_pairs: bool = False,
+                ) -> Dict[str, float]:
+    """FLOPs of one *decoder* layer over n tokens with kv_len visible keys.
+
+    ``full_pairs=True`` models the training attention path
+    (flash_attention_train), which computes every (q, k) score and masks —
+    window/causality then do NOT reduce score flops (documented trade-off;
+    the TPU Pallas kernel and the inference tri variant do exploit them).
+    """
+    out: Dict[str, float] = {}
+    if cfg.family == "ssm":
+        out["ssm"] = _ssm_flops(cfg, n, decode)
+        return out
+    if cfg.rglru is not None:
+        # per-layer average over the (rec, rec, attn) pattern
+        pat = cfg.rglru.pattern
+        n_rec = sum(p == "rec" for p in pat) / len(pat)
+        n_att = 1.0 - n_rec
+        w_kv = kv_len if full_pairs else min(kv_len, cfg.rglru.window)
+        out["rec"] = n_rec * _rglru_rec_flops(cfg, n)
+        out["attn_proj"] = n_att * _attn_proj_flops(cfg, n)
+        out["attn_score"] = n_att * _attn_score_flops(cfg, n, w_kv)
+        mlp, _ = _mlp_flops(cfg, n)
+        out["mlp"] = mlp
+        return out
+    a = cfg.attn
+    kv = kv_len if full_pairs else (min(kv_len, a.window) if a.window else kv_len)
+    out["attn_proj"] = _attn_proj_flops(cfg, n)
+    out["attn_score"] = _attn_score_flops(cfg, n, kv)
+    mlp, dispatch = _mlp_flops(cfg, n)
+    out["mlp"] = mlp
+    if dispatch:
+        out["moe_dispatch"] = dispatch
+    return out
+
+
+def _sum(d: Dict[str, float]) -> float:
+    return float(sum(d.values()))
+
+
+# ---------------------------------------------------------------------------
+# cache sizing (bytes)
+
+
+def kv_cache_bytes(cfg: ModelConfig, batch: int, cache_len: int,
+                   dtype_bytes: int = 2) -> float:
+    a = cfg.attn
+    if cfg.family == "ssm":
+        s = cfg.ssm
+        din = s.expand * cfg.d_model
+        H = din // s.head_dim
+        state = batch * H * s.head_dim * s.d_state * 4           # fp32 state
+        conv = batch * (s.d_conv - 1) * (din + 2 * s.n_groups * s.d_state) * dtype_bytes
+        return cfg.n_layers * (state + conv)
+    if a is None:
+        return 0.0
+    if a.kind == "mla":
+        per_row_bytes = (a.kv_lora_rank + a.rope_head_dim) * dtype_bytes
+    elif cfg.kv_quant:
+        # int8 payload + one scale per (row, kv-head) for k and v
+        per_row_bytes = 2 * a.n_kv_heads * (a.head_dim * 1 + dtype_bytes)
+    else:
+        per_row_bytes = 2 * a.n_kv_heads * a.head_dim * dtype_bytes
+    per_layer = batch * cache_len * per_row_bytes
+    if cfg.rglru is not None:
+        pat = cfg.rglru.pattern
+        n_att = sum(p == "attn" for p in pat) / len(pat)
+        w = cfg.rglru.lru_width or cfg.d_model
+        rec_state = batch * w * 4 + batch * (cfg.rglru.d_conv - 1) * w * dtype_bytes
+        win = min(cache_len, cfg.rglru.window)
+        att_rows = batch * win * per_row_bytes
+        return cfg.n_layers * ((1 - n_att) * rec_state + n_att * att_rows)
+    layers = cfg.n_layers
+    total = layers * per_layer
+    if cfg.cross_attn:  # encdec: cross-KV for the (fixed) encoder output
+        total += cfg.n_layers * batch * 1024 * per_row_bytes
+    return total
+
+
+# ---------------------------------------------------------------------------
+# step-level costs
+
+
+def decode_step_cost(tcfg: ModelConfig, dcfg: Optional[ModelConfig],
+                     shape: InputShape, s: int, cache_len_t: int,
+                     cache_len_d: int) -> StepCost:
+    """One speculative step: draft s tokens sequentially + verify s+1."""
+    B = shape.global_batch
+    wb = _bytes_per(tcfg.dtype)
+    detail: Dict[str, float] = {}
+
+    # --- verify: B*(s+1) tokens, each seeing ~cache_len keys
+    n_ver = B * (s + 1)
+    lf = layer_flops(tcfg, n_ver, cache_len_t, decode=True)
+    flops = _sum(lf) * tcfg.n_layers
+    detail.update({f"verify_{k}": v * tcfg.n_layers for k, v in lf.items()})
+    vocab = pad_vocab(tcfg.vocab_size)
+    detail["verify_unembed"] = 2 * n_ver * tcfg.d_model * vocab
+    flops += detail["verify_unembed"]
+
+    # --- draft: s sequential single-token calls (first feeds 2 tokens)
+    if dcfg is not None and s > 0:
+        n_d = B * (s + 1)          # total drafted token-positions
+        lfd = layer_flops(dcfg, n_d, cache_len_d, decode=True)
+        dflops = _sum(lfd) * dcfg.n_layers
+        dvocab = pad_vocab(dcfg.vocab_size)
+        dun = 2 * n_d * dcfg.d_model * dvocab
+        detail["draft"] = dflops + dun
+        flops += detail["draft"]
+
+    # --- HBM bytes
+    tparams = param_count(tcfg, active_only=tcfg.moe is not None)
+    # MoE: verify touches up to n_ver*top_k experts per layer; with
+    # n_ver >> E the whole expert bank streams -> use full params then
+    if tcfg.moe is not None:
+        full = param_count(tcfg, active_only=False)
+        touched = min(1.0, n_ver * tcfg.moe.top_k / tcfg.moe.n_experts)
+        tparams = tparams + (full - tparams) * touched
+    w_bytes = tparams * wb
+    cache_rd = kv_cache_bytes(tcfg, B, cache_len_t, wb)      # full sweep / step
+    detail["weights_bytes"] = w_bytes
+    detail["cache_bytes"] = cache_rd
+    hbm = w_bytes + cache_rd
+    if dcfg is not None and s > 0:
+        dw = param_count(dcfg) * wb * s                      # streamed per call
+        dcache = kv_cache_bytes(dcfg, B, cache_len_d, wb) * s
+        detail["draft_bytes"] = dw + dcache
+        hbm += dw + dcache
+    return StepCost(flops, hbm, detail)
+
+
+def prefill_step_cost(cfg: ModelConfig, shape: InputShape, cache_len: int,
+                      ) -> StepCost:
+    B, T = shape.global_batch, shape.seq_len
+    wb = _bytes_per(cfg.dtype)
+    n = B * T
+    detail: Dict[str, float] = {}
+    # causal average context = (T+1)/2, clipped by any window
+    a = cfg.attn
+    kv_avg = (T + 1) / 2
+    if cfg.family in ("encdec", "audio"):
+        # prefill_32k: encoder over T frames + short decoder prompt
+        enc = layer_flops(cfg, n, kv_avg)
+        flops = _sum(enc) * cfg.enc_layers
+        detail["encoder"] = flops
+        n_dec = B * 16
+        dec = layer_flops(cfg, n_dec, 16 / 2)
+        cross = _attn_score_flops(cfg, n_dec, T) + _attn_proj_flops(cfg, n_dec)
+        detail["decoder"] = (_sum(dec) + cross) * cfg.n_layers
+        flops += detail["decoder"]
+    else:
+        lf = layer_flops(cfg, n, kv_avg)
+        flops = _sum(lf) * cfg.n_layers
+        detail.update({k: v * cfg.n_layers for k, v in lf.items()})
+    vocab = pad_vocab(cfg.vocab_size)
+    detail["unembed"] = 2 * B * cfg.d_model * vocab          # last token only
+    flops += detail["unembed"]
+
+    params = param_count(cfg, active_only=False)
+    act = n * cfg.d_model * wb * 12                          # per-layer IO est.
+    cache_wr = kv_cache_bytes(cfg, B, min(cache_len, T), wb)
+    detail["weights_bytes"] = params * wb
+    detail["act_bytes"] = act * (cfg.n_layers + cfg.enc_layers)
+    detail["cache_bytes"] = cache_wr
+    hbm = detail["weights_bytes"] + detail["act_bytes"] + cache_wr
+    return StepCost(flops, hbm, detail)
+
+
+def train_step_cost(cfg: ModelConfig, shape: InputShape, remat: bool = True,
+                    ) -> StepCost:
+    B, T = shape.global_batch, shape.seq_len
+    wb = _bytes_per(cfg.dtype)
+    detail: Dict[str, float] = {}
+    # the train attention path computes all (q, k) pairs (full_pairs):
+    # score flops use full T, not the causal (T+1)/2
+    if cfg.family in ("encdec", "audio"):
+        n_enc = B * (T // 4)
+        n_dec = B * T
+        enc = _sum(layer_flops(cfg, n_enc, T // 4, full_pairs=True)) * cfg.enc_layers
+        dec = (_sum(layer_flops(cfg, n_dec, T, full_pairs=True))
+               + _attn_proj_flops(cfg, n_dec)
+               + _attn_score_flops(cfg, n_dec, T // 4)) * cfg.n_layers
+        fwd = enc + dec
+        n_tok = n_dec
+    elif cfg.family == "vlm":
+        n_tok = B * T                                        # prefix + text
+        fwd = _sum(layer_flops(cfg, n_tok, T, full_pairs=True)) * cfg.n_layers
+    else:
+        n_tok = B * T
+        fwd = _sum(layer_flops(cfg, n_tok, T, full_pairs=True)) * cfg.n_layers
+    vocab = pad_vocab(cfg.vocab_size)
+    fwd += 2 * n_tok * cfg.d_model * vocab
+    mult = 4.0 if remat else 3.0                             # fwd+recompute+2bwd
+    detail["matmul"] = fwd * mult
+    flops = fwd * mult
+
+    params = param_count(cfg, active_only=False)
+    # params bf16 read (fwd+bwd) + grads + fp32 m/v read+write
+    detail["weights_bytes"] = params * (2 * wb + wb + 16 + 2 * wb)
+    # remat: store/read one residual per layer boundary
+    layers = cfg.n_layers + cfg.enc_layers
+    detail["act_bytes"] = n_tok * cfg.d_model * wb * 2 * layers
+    detail["logits_bytes"] = n_tok * vocab * 4 * 2           # fp32 logits r/w
+    hbm = detail["weights_bytes"] + detail["act_bytes"] + detail["logits_bytes"]
+    return StepCost(flops, hbm, detail)
+
+
+def model_flops_6nd(cfg: ModelConfig, n_tokens: float) -> float:
+    """The reference MODEL_FLOPS = 6 N D (active params for MoE)."""
+    n_params = param_count(cfg, active_only=cfg.moe is not None)
+    return 6.0 * n_params * n_tokens
+
+
+def step_cost(arch_cfg: ModelConfig, draft_cfg: Optional[ModelConfig],
+              shape: InputShape, kind: str, *, s: int = 4,
+              cache_len_t: int = 0, cache_len_d: int = 0) -> StepCost:
+    if kind == "train":
+        return train_step_cost(arch_cfg, shape)
+    if kind == "prefill":
+        return prefill_step_cost(arch_cfg, shape, cache_len_t)
+    return decode_step_cost(arch_cfg, draft_cfg, shape, s, cache_len_t,
+                            cache_len_d)

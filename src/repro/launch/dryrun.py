@@ -1,0 +1,314 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+if os.environ.get("REPRO_DRYRUN_DEVICES"):   # CI-scale override (tests only)
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, and extract the roofline ingredients.
+
+MUST be run as its own process (the two lines above force 512 virtual CPU
+devices *before any jax import*; smoke tests and benchmarks must keep seeing
+one device, so never import this module from them).
+
+Per (arch, shape, mesh) it records into results/dryrun/<arch>__<shape>__<mesh>.json:
+  * memory_analysis(): per-device argument/output/temp bytes (proves fit);
+  * cost_analysis(): raw HLO flops/bytes (undercounts scanned layers; kept
+    for the record);
+  * collective bytes: parsed from the compiled HLO, depth-extrapolated
+    (collectives live at layer granularity, so out + L*per_layer is exact);
+  * analytic step cost (launch/costs.py) and MODEL_FLOPS = 6*N*D;
+  * the roofline terms vs TPU v5e peaks (197e12 bf16 FLOP/s, 819e9 B/s HBM,
+    50e9 B/s ICI per link).
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-9b --shape decode_32k --mesh pod
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs import registry as R
+from repro.configs.base import SHAPES, param_count
+from repro.launch import costs as C
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_plan
+from repro.runtime.meshctx import use_mesh
+
+V5E = {"peak_flops": 197e12, "hbm_bw": 819e9, "ici_bw": 50e9}
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "f64": 8, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "s16": 2,
+                "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"=\s+((?:\()?[a-z0-9:\[\]{},\s]*?(?:\))?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.IGNORECASE)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    """Sum bytes over every tensor in an HLO result-shape string."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-kind collective result-bytes in one HLO module (flat count: each
+    while-body op counted once; callers depth-extrapolate)."""
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:        # start/done pairs: count the start only
+            continue
+        kind = m.group(2).lower()
+        out[kind] = out.get(kind, 0.0) + _shape_bytes(m.group(1))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# depth variants for collective extrapolation
+
+
+def _depth_knobs(arch: str, kind: str) -> Dict[str, int]:
+    """Full values of each depth knob for this (arch, kind)."""
+    cfg = R.get_config(arch)
+    if cfg.family in ("encdec", "audio"):
+        if kind == "prefill":
+            return {"enc": cfg.enc_layers, "dec": cfg.n_layers}
+        if kind == "train":
+            return {"enc": cfg.enc_layers, "dec": cfg.n_layers}
+        return {"dec": cfg.n_layers, "draft": 4}
+    if cfg.rglru is not None:
+        blocks = cfg.n_layers / len(cfg.rglru.pattern)   # fractional tail ok
+        k = {"blocks": blocks}
+    else:
+        k = {"layers": cfg.n_layers}
+    if kind == "spec_decode":
+        k["draft"] = 4
+    return k
+
+
+def _cfg_with_depth(arch: str, knob_vals: Dict[str, float]):
+    """(target_cfg_override, draft_layers) with the given knob values."""
+    cfg = R.get_config(arch)
+    if cfg.family in ("encdec", "audio"):
+        t = cfg.with_(enc_layers=int(knob_vals.get("enc", 1)),
+                      n_layers=int(knob_vals.get("dec", 1)))
+    elif cfg.rglru is not None:
+        t = cfg.with_(n_layers=int(knob_vals["blocks"]) * len(cfg.rglru.pattern))
+    else:
+        t = cfg.with_(n_layers=int(knob_vals["layers"]))
+    return t, int(knob_vals.get("draft", 1))
+
+
+def _compile_variant(arch: str, shape_name: str, mesh, knob_vals, plan_kw):
+    """Compile a small-depth variant and return its collective byte dict."""
+    import repro.launch.specs as S
+    tcfg, dlayers = _cfg_with_depth(arch, knob_vals)
+    orig_cfg, orig_draft = R.get_config, R.get_draft_config
+    R.get_config = lambda a, _t=tcfg, _o=orig_cfg: _t if R._norm(a) == R._norm(arch) else _o(a)
+    base_d = orig_draft(arch)
+    R.get_draft_config = (lambda a, _d=base_d.with_(n_layers=dlayers), _o=orig_draft:
+                          _d if R._norm(a) == R._norm(arch) else _o(a))
+    try:
+        plan = build_plan(arch, shape_name, mesh, **plan_kw)
+        with use_mesh(mesh):
+            compiled = plan.lower().compile()
+        return collective_bytes(compiled.as_text())
+    finally:
+        R.get_config, R.get_draft_config = orig_cfg, orig_draft
+
+
+def extrapolated_collectives(arch: str, shape_name: str, mesh, plan_kw,
+                             ) -> Tuple[Dict[str, float], Dict[str, Any]]:
+    """Solve collective_bytes = base + sum_k knob_k * per_knob_k from
+    (n_knobs + 1) small-depth compiles, then evaluate at the full depths."""
+    kind = ("train" if SHAPES[shape_name].kind == "train"
+            else "prefill" if SHAPES[shape_name].kind == "prefill"
+            else "spec_decode")
+    knobs = _depth_knobs(arch, kind)
+    names = list(knobs)
+    base_vals = {k: 1 for k in names}
+    measures = [("base", dict(base_vals))]
+    for k in names:
+        v = dict(base_vals)
+        v[k] = 2
+        measures.append((k, v))
+    colls = {}
+    for tag, vals in measures:
+        colls[tag] = _compile_variant(arch, shape_name, mesh, vals, plan_kw)
+    kinds = sorted({k for c in colls.values() for k in c})
+    total: Dict[str, float] = {}
+    per_knob_log: Dict[str, Any] = {}
+    for ck in kinds:
+        base = colls["base"].get(ck, 0.0)
+        t = base
+        for k in names:
+            slope = colls[k].get(ck, 0.0) - base
+            t += slope * (knobs[k] - 1)
+            per_knob_log.setdefault(k, {})[ck] = slope
+        total[ck] = max(t, 0.0)
+    return total, {"knobs": knobs, "flat_base": colls["base"],
+                   "per_knob": per_knob_log}
+
+
+# ---------------------------------------------------------------------------
+# one dry-run cell
+
+
+def run_one(arch: str, shape_name: str, mesh_name: str,
+            plan_kw: Optional[Dict[str, Any]] = None,
+            skip_collectives: bool = False) -> Dict[str, Any]:
+    plan_kw = plan_kw or {}
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
+    chips = int(np.prod(list(mesh.shape.values())))
+    shape = SHAPES[shape_name]
+    t0 = time.time()
+    plan = build_plan(arch, shape_name, mesh, **plan_kw)
+    with use_mesh(mesh):
+        lowered = plan.lower()
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "chips": chips,
+        "kind": plan.kind,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "per_device_total": (ma.argument_size_in_bytes
+                                 + ma.temp_size_in_bytes),
+        },
+        "hlo_cost_analysis": {
+            "flops": ca.get("flops", 0.0),
+            "bytes_accessed": ca.get("bytes accessed", 0.0),
+            "note": "scan bodies counted once by XLA; see analytic block",
+        },
+    }
+
+    # collectives (depth-extrapolated)
+    if not skip_collectives:
+        coll, coll_log = extrapolated_collectives(arch, shape_name, mesh, plan_kw)
+        rec["collectives"] = coll
+        rec["collectives_debug"] = coll_log
+        coll_total = sum(coll.values())
+    else:
+        flat = collective_bytes(compiled.as_text())
+        rec["collectives"] = flat
+        rec["collectives_note"] = "flat (no depth extrapolation)"
+        coll_total = sum(flat.values())
+
+    # analytic cost + roofline
+    tcfg = plan.meta["cfg"]
+    dcfg = plan.meta.get("draft_cfg")
+    Lt = plan.meta.get("cache_len", shape.seq_len)
+    from repro.launch.specs import _cache_len
+    Ld = _cache_len(dcfg, shape.seq_len) if dcfg is not None else 0
+    cost = C.step_cost(tcfg, dcfg, shape, plan.kind, s=plan.meta.get("s", 4),
+                       cache_len_t=Lt, cache_len_d=Ld)
+    n_tok = (shape.global_batch * shape.seq_len if plan.kind == "train"
+             else shape.global_batch * shape.seq_len if plan.kind == "prefill"
+             else shape.global_batch * (plan.meta.get("s", 4) + 1))
+    # MODEL_FLOPS: 6 N D for training (fwd+bwd), 2 N D for inference steps
+    mf = C.model_flops_6nd(tcfg, n_tok)
+    if plan.kind != "train":
+        mf /= 3.0
+    compute_s = cost.flops / (chips * V5E["peak_flops"])
+    memory_s = cost.hbm_bytes / (chips * V5E["hbm_bw"])
+    coll_s = coll_total / (chips * V5E["ici_bw"])
+    dom = max((("compute", compute_s), ("memory", memory_s),
+               ("collective", coll_s)), key=lambda kv: kv[1])
+    rec["analytic"] = {
+        "flops": cost.flops, "hbm_bytes": cost.hbm_bytes,
+        "collective_bytes": coll_total,
+        "detail": cost.detail,
+        "model_flops_6nd": mf,
+        "useful_compute_ratio": mf / cost.flops if cost.flops else 0.0,
+        "tokens_per_step": n_tok,
+    }
+    rec["roofline"] = {
+        "compute_s": compute_s, "memory_s": memory_s, "collective_s": coll_s,
+        "dominant": dom[0], "step_s_lower_bound": dom[1],
+        "params": param_count(tcfg),
+        "params_active": param_count(tcfg, active_only=True),
+    }
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-collectives", action="store_true",
+                    help="flat HLO collective count only (faster)")
+    ap.add_argument("--spec-s", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    archs = R.ASSIGNED if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                tag = f"{arch}__{shape}__{mesh_name}"
+                plan_kw = {}
+                if args.spec_s is not None and SHAPES[shape].kind == "decode":
+                    plan_kw["s"] = args.spec_s
+                try:
+                    rec = run_one(arch, shape, mesh_name, plan_kw,
+                                  skip_collectives=args.skip_collectives)
+                    path = os.path.join(args.out, tag + ".json")
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1, default=float)
+                    r = rec["roofline"]
+                    print(f"[OK] {tag}: dominant={r['dominant']} "
+                          f"compute={r['compute_s']:.2e}s memory={r['memory_s']:.2e}s "
+                          f"coll={r['collective_s']:.2e}s "
+                          f"mem/dev={rec['memory']['per_device_total']/2**30:.2f}GiB "
+                          f"compile={rec['compile_s']:.0f}s", flush=True)
+                except Exception as e:
+                    failures.append((tag, repr(e)))
+                    print(f"[FAIL] {tag}: {e!r}", flush=True)
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} failures:")
+        for t, e in failures:
+            print(" ", t, e)
+        sys.exit(1)
+    print("\nall dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

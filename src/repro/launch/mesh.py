@@ -1,0 +1,33 @@
+"""Production meshes (TPU v5e).  Single pod: 256 chips as (data=16,
+model=16); two pods: (pod=2, data=16, model=16) with the pod axis as an
+outer data-parallel dimension (cross-pod traffic = gradient all-reduce only).
+
+Functions, not module constants — importing this module never touches jax
+device state (smoke tests must keep seeing 1 CPU device; only
+launch/dryrun.py forces 512 virtual devices, in its first two lines).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 2, model: int = 4):
+    """Small mesh for CI-scale pjit tests (8 virtual devices)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    """The batch-sharding axes of a mesh ('pod' folds into data-parallel)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis_size(mesh) -> int:
+    return mesh.shape.get("model", 1)

@@ -1,0 +1,335 @@
+"""Step plans for the multi-pod dry-run and the launchers.
+
+For every (architecture x input shape) this module builds:
+  * ``input_specs(arch, shape)``  — ShapeDtypeStruct stand-ins for every step
+    input (weak-type-correct, shardable, no device allocation);
+  * ``build_plan(arch, shape, mesh)`` — the jittable step function plus the
+    matching in/out sharding trees (NamedShardings on ``mesh``).
+
+Shape -> step mapping (DESIGN §5):
+  train_4k     -> train_step        (loss + grads + AdamW, remat'd scan)
+  prefill_32k  -> prefill_step      (flash forward + KV-cache build)
+  decode_32k   -> spec_decode_step  (draft s + verify s+1 — the paper's
+  long_500k    -> spec_decode_step   technique; s = 4, the adaptive default)
+
+long_500k runs every architecture: SSM/hybrid natively (O(1) state), all
+attention families through their sliding-window variant (cfg.windowed(),
+ring-buffer cache of window+pad rows) — the sub-quadratic carve-out of
+DESIGN §4.
+
+Modality frontends are stubs per the assignment: audio supplies
+``src_embeds`` [B, S, d] frame embeddings, VLM supplies ``prefix_embeds``
+[B, prefix, d] patch embeddings, both as ShapeDtypeStructs here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import registry as R
+from repro.configs.base import SHAPES, InputShape, ModelConfig
+from repro.core.spec_decode import make_spec_step
+from repro.launch.mesh import data_axes, model_axis_size
+from repro.models import common as cm
+from repro.training.optimizer import AdamWConfig, AdamWState, init_adamw
+from repro.training.train_step import make_train_step
+
+# ring-buffer slack rows beyond the attention window for windowed decode
+# (must cover s+1 in-flight rows; padded to keep kernel-block divisibility)
+_RING_PAD = 64
+DEFAULT_SPEC_S = 4
+MAX_NEW = 128
+# fixed modality-frontend lengths (DESIGN §10): audio source frames for
+# decode shapes, and the encoder length used at train time
+AUDIO_DECODE_SRC = 1024
+AUDIO_TRAIN_SRC_FRACTION = 4      # train src_len = seq_len // 4
+
+
+def _arch_cfg(arch: str, shape: InputShape, transform=None) -> ModelConfig:
+    cfg = R.get_config(arch)
+    if shape.name == "long_500k" and cfg.family not in ("ssm",):
+        cfg = cfg.windowed()      # sliding-window sub-quadratic variant
+    if transform is not None:     # hillclimb lever (e.g. MoE gather dispatch)
+        cfg = transform(cfg)
+    return cfg
+
+
+def _draft_cfg(arch: str, tcfg: ModelConfig) -> ModelConfig:
+    d = R.get_draft_config(arch)
+    if tcfg.attn is not None and tcfg.attn.window is not None:
+        # draft inherits the (possibly long-context-windowed) target window
+        if d.attn.window is None or d.attn.window > tcfg.attn.window:
+            d = d.with_(attn=dataclasses.replace(d.attn, window=tcfg.attn.window))
+    return d
+
+
+def _cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Ring-buffer length for an attention KV cache."""
+    a = cfg.attn
+    if a is not None and a.window is not None and a.window + _RING_PAD < seq_len:
+        return a.window + _RING_PAD
+    return seq_len
+
+
+# ---------------------------------------------------------------------------
+# batch / token shardings
+
+
+def _batch_spec(mesh: Mesh, batch: int, *rest) -> P:
+    """Shard the leading batch dim over as many data axes as divide it."""
+    axes = [a for a in data_axes(mesh)]
+    keep = []
+    n = 1
+    for a in reversed(axes):          # prefer inner 'data' before 'pod'
+        sz = mesh.shape[a]
+        if batch % (n * sz) == 0:
+            keep.append(a)
+            n *= sz
+    keep = tuple(reversed(keep))
+    first = keep if keep else None
+    return P(first, *rest)
+
+
+def _sds(shape, dtype=jnp.float32) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# input specs (deliverable: allocation-free stand-ins for every model input)
+
+
+def input_specs(arch: str, shape_name: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs for the *data* inputs of the step this shape runs.
+
+    train  -> tokens/labels (+ modality embeds)
+    prefill-> tokens/prompt_lens (+ modality embeds)
+    decode -> seq_lens/last2/out/n_generated/done (caches & params come from
+              the plan, which owns their shardings).
+    """
+    shape = SHAPES[shape_name]
+    cfg = _arch_cfg(arch, shape)
+    B, T, d = shape.global_batch, shape.seq_len, cfg.d_model
+    if shape.kind == "train":
+        toks = T
+        out: Dict[str, jax.ShapeDtypeStruct] = {}
+        if cfg.family in ("encdec", "audio"):
+            src = T // AUDIO_TRAIN_SRC_FRACTION
+            out["src_embeds"] = _sds((B, src, d), jnp.bfloat16)
+        elif cfg.family == "vlm":
+            toks = T - cfg.prefix_len
+            out["prefix_embeds"] = _sds((B, cfg.prefix_len, d), jnp.bfloat16)
+        out["tokens"] = _sds((B, toks), jnp.int32)
+        out["labels"] = _sds((B, toks - 1), jnp.int32)
+        return out
+    if shape.kind == "prefill":
+        out = {}
+        toks = T
+        if cfg.family in ("encdec", "audio"):
+            out["src_embeds"] = _sds((B, T, d), jnp.bfloat16)   # long audio in
+            toks = 16                                            # short tgt prompt
+        elif cfg.family == "vlm":
+            toks = T - cfg.prefix_len
+            out["prefix_embeds"] = _sds((B, cfg.prefix_len, d), jnp.bfloat16)
+        out["tokens"] = _sds((B, toks), jnp.int32)
+        out["prompt_lens"] = _sds((B,), jnp.int32)
+        return out
+    # decode: per-request control state (caches come from the plan)
+    return {
+        "seq_lens": _sds((B,), jnp.int32),
+        "last2": _sds((B, 2), jnp.int32),
+        "out": _sds((B, MAX_NEW + 9), jnp.int32),
+        "n_generated": _sds((B,), jnp.int32),
+        "done": _sds((B,), bool),
+    }
+
+
+# ---------------------------------------------------------------------------
+# plans
+
+
+@dataclass
+class StepPlan:
+    arch: str
+    shape: InputShape
+    kind: str
+    fn: Callable                      # pure step function
+    args: Tuple[Any, ...]             # ShapeDtypeStruct pytrees, fn(*args)
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any                # None = compiler-chosen
+    meta: Dict[str, Any]
+
+    donate: Tuple[int, ...] = ()
+
+    def lower(self):
+        jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                         out_shardings=self.out_shardings,
+                         donate_argnums=self.donate)
+        return jitted.lower(*self.args)
+
+
+def _ns(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _train_plan(arch: str, shape: InputShape, mesh: Mesh,
+                rules_overrides=None, remat: bool = True,
+                transform=None) -> StepPlan:
+    cfg = _arch_cfg(arch, shape, transform)
+    model = R.build_model(cfg)
+    msize = model_axis_size(mesh)
+    rules = cm.resolve_rules(cfg, msize, rules_overrides)
+    pspecs = model.specs(rules)
+    params = model.shapes(jnp.bfloat16)
+    opt_specs = AdamWState(step=P(), m=pspecs, v=jax.tree.map(lambda s: s, pspecs))
+    opt_shapes = jax.eval_shape(init_adamw, params)
+
+    ins = input_specs(arch, shape.name)
+    extra = tuple(k for k in ("src_embeds", "prefix_embeds") if k in ins)
+    batch_specs = {"tokens": _batch_spec(mesh, shape.global_batch, None),
+                   "labels": _batch_spec(mesh, shape.global_batch, None)}
+    for k in extra:
+        batch_specs[k] = _batch_spec(mesh, shape.global_batch, None, None)
+
+    opt = AdamWConfig()
+    step = make_train_step(model, cfg, opt, remat=remat, extra_keys=extra)
+    in_sh = (_ns(mesh, pspecs), _ns(mesh, opt_specs), _ns(mesh, batch_specs))
+    out_sh = (_ns(mesh, pspecs), _ns(mesh, opt_specs), None)
+    return StepPlan(arch, shape, "train", step, (params, opt_shapes, ins),
+                    in_sh, out_sh, {"cfg": cfg, "rules": rules}, donate=(0, 1))
+
+
+def _prefill_plan(arch: str, shape: InputShape, mesh: Mesh,
+                  rules_overrides=None, transform=None) -> StepPlan:
+    cfg = _arch_cfg(arch, shape, transform)
+    model = R.build_model(cfg)
+    msize = model_axis_size(mesh)
+    rules = cm.resolve_rules(cfg, msize, rules_overrides)
+    pspecs = model.specs(rules)
+    params = model.shapes(jnp.bfloat16)
+    ins = input_specs(arch, shape.name)
+    B = shape.global_batch
+    L = _cache_len(cfg, shape.seq_len)
+    bspec = _batch_spec(mesh, B)
+
+    ins_specs = {"tokens": _batch_spec(mesh, B, None),
+                 "prompt_lens": bspec}
+    if "src_embeds" in ins:
+        ins_specs["src_embeds"] = _batch_spec(mesh, B, None, None)
+    if "prefix_embeds" in ins:
+        ins_specs["prefix_embeds"] = _batch_spec(mesh, B, None, None)
+
+    batch_axis = ins_specs["tokens"][0]
+
+    def fn(params, inputs):
+        kw = {}
+        if cfg.family in ("encdec", "audio"):
+            cache = model.init_cache(B, cache_len=L, dtype=jnp.bfloat16,
+                                     src_len=inputs["src_embeds"].shape[1])
+            kw["src_embeds"] = inputs["src_embeds"]
+        elif cfg.family == "ssm":
+            cache = model.init_cache(B, dtype=jnp.bfloat16)
+        else:
+            cache = model.init_cache(B, cache_len=L, dtype=jnp.bfloat16)
+            if cfg.family == "vlm":
+                kw["prefix_embeds"] = inputs["prefix_embeds"]
+        pre = getattr(model, "prefill_flash", model.prefill)
+        logits, cache, lens = pre(params, inputs["tokens"], cache,
+                                  prompt_lens=inputs["prompt_lens"], **kw)
+        return logits, cache, lens
+
+    in_sh = (_ns(mesh, pspecs), _ns(mesh, ins_specs))
+    return StepPlan(arch, shape, "prefill", fn, (params, ins), in_sh, None,
+                    {"cfg": cfg, "rules": rules, "cache_len": L,
+                     "batch_axis": batch_axis})
+
+
+def _decode_plan(arch: str, shape: InputShape, mesh: Mesh,
+                 s: int = DEFAULT_SPEC_S, rules_overrides=None,
+                 draft_rules_overrides=None, seq_axis=None,
+                 donate: bool = True, transform=None,
+                 draft_transform=None) -> StepPlan:
+    tcfg = _arch_cfg(arch, shape, transform)
+    dcfg = _draft_cfg(arch, tcfg)
+    if draft_transform is not None:   # hillclimb lever (window/quant drafts)
+        dcfg = draft_transform(dcfg)
+    target, draft = R.build_model(tcfg), R.build_model(dcfg)
+    msize = model_axis_size(mesh)
+    trules = cm.resolve_rules(tcfg, msize, rules_overrides)
+    # draft is small: replicate its weights by default (DESIGN §8.5)
+    drules = {k: None for k in cm.resolve_rules(dcfg, msize)}
+    if draft_rules_overrides:
+        drules.update(draft_rules_overrides)
+    B = shape.global_batch
+    tp_specs, dp_specs = target.specs(trules), draft.specs(drules)
+    tparams, dparams = target.shapes(jnp.bfloat16), draft.shapes(jnp.bfloat16)
+
+    Lt = _cache_len(tcfg, shape.seq_len)
+    Ld = _cache_len(dcfg, shape.seq_len)
+    ckw: Dict[str, Any] = {}
+    if tcfg.family in ("encdec", "audio"):
+        ckw["src_len"] = AUDIO_DECODE_SRC
+    if tcfg.family == "ssm":
+        tcache = jax.eval_shape(partial(target.init_cache, B, dtype=jnp.bfloat16))
+    else:
+        tcache = jax.eval_shape(partial(target.init_cache, B, cache_len=Lt,
+                                        dtype=jnp.bfloat16, **ckw))
+    dcache = jax.eval_shape(partial(draft.init_cache, B, cache_len=Ld,
+                                    dtype=jnp.bfloat16))
+
+    bspec = _batch_spec(mesh, B)
+    batch_axis = bspec[0]
+    tc_specs = target.cache_specs(trules, batch_axis=batch_axis, seq_axis=seq_axis)
+    dc_specs = draft.cache_specs(drules, batch_axis=batch_axis, seq_axis=seq_axis)
+
+    ins = input_specs(arch, shape.name)
+    ctrl_specs = {"seq_lens": bspec, "last2": _batch_spec(mesh, B, None),
+                  "out": _batch_spec(mesh, B, None),
+                  "n_generated": bspec, "done": bspec}
+
+    prefix_offset = tcfg.prefix_len if tcfg.family == "vlm" else 0
+    fn = make_spec_step(target, draft, B, s, eos_id=-1, max_new=MAX_NEW,
+                        prefix_offset=prefix_offset)
+
+    args = (tparams, dparams, tcache, dcache, ins["seq_lens"], ins["last2"],
+            ins["out"], ins["n_generated"], ins["done"])
+    in_sh = (_ns(mesh, tp_specs), _ns(mesh, dp_specs), _ns(mesh, tc_specs),
+             _ns(mesh, dc_specs), _ns(mesh, ctrl_specs["seq_lens"]),
+             _ns(mesh, ctrl_specs["last2"]), _ns(mesh, ctrl_specs["out"]),
+             _ns(mesh, ctrl_specs["n_generated"]), _ns(mesh, ctrl_specs["done"]))
+    # outputs: (tcache', dcache', seq_lens', last2', out', n_gen', done', a, n_commit)
+    out_sh = (_ns(mesh, tc_specs), _ns(mesh, dc_specs),
+              _ns(mesh, ctrl_specs["seq_lens"]), _ns(mesh, ctrl_specs["last2"]),
+              _ns(mesh, ctrl_specs["out"]), _ns(mesh, ctrl_specs["n_generated"]),
+              _ns(mesh, ctrl_specs["done"]), _ns(mesh, bspec), _ns(mesh, bspec))
+    donate_args: Tuple[int, ...] = (2, 3, 4, 5, 6, 7, 8)
+    if tcfg.family in ("ssm", "hybrid"):
+        # commit() restores the base cache structure, so output specs equal
+        # the input cache specs; leaving them compiler-chosen replicated the
+        # committed state at small depths and poisoned the collective
+        # extrapolation (EXPERIMENTS §Perf C1/C2).  tcache stays undonated
+        # (the checkpoint selection makes buffer reuse shape-incompatible).
+        out_sh = (_ns(mesh, tc_specs), *out_sh[1:])
+        donate_args = (3, 4, 5, 6, 7, 8)
+    if not donate:
+        donate_args = ()
+    return StepPlan(arch, shape, "spec_decode", fn, args, in_sh, out_sh,
+                    {"cfg": tcfg, "draft_cfg": dcfg, "rules": trules, "s": s,
+                     "cache_len": Lt, "batch_axis": batch_axis},
+                    donate=donate_args)
+
+
+def build_plan(arch: str, shape_name: str, mesh: Mesh, **kw) -> StepPlan:
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return _train_plan(arch, shape, mesh, **kw)
+    if shape.kind == "prefill":
+        return _prefill_plan(arch, shape, mesh, **kw)
+    return _decode_plan(arch, shape, mesh, **kw)

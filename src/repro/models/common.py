@@ -1,0 +1,400 @@
+"""Shared model machinery: ParamDef registry, sharding rules, norms, RoPE,
+attention (reference and chunked-flash), embeddings.
+
+Models in this package are *pure functions* over parameter pytrees.  Each
+model exposes ``param_defs(cfg)`` returning a nested dict of :class:`ParamDef`;
+from that single source of truth we derive initialized parameters, partition
+specs and ShapeDtypeStructs (for the allocation-free dry-run).
+
+Layer parameters are *stacked* along a leading ``n_layers`` axis and the
+forward pass scans over them (``jax.lax.scan``), so HLO size and compile time
+are depth-independent.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import AttnConfig, ModelConfig
+
+Params = Any  # nested dict of jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# ParamDef
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axis name per dim (no stacked dim)
+    init: str = "normal"              # normal | zeros | ones
+    scale: Optional[float] = None     # stddev for "normal" (default fan-in)
+    stacked: bool = False             # leading n_layers dim added implicitly
+
+    def full_shape(self, n_layers: int) -> Tuple[int, ...]:
+        return (n_layers, *self.shape) if self.stacked else self.shape
+
+
+def _iter_defs(defs: Dict, prefix=()):
+    for k, v in defs.items():
+        if isinstance(v, ParamDef):
+            yield (*prefix, k), v
+        else:
+            yield from _iter_defs(v, (*prefix, k))
+
+
+def _set_nested(tree: Dict, path, value):
+    for k in path[:-1]:
+        tree = tree.setdefault(k, {})
+    tree[path[-1]] = value
+
+
+def init_params(defs: Dict, key: jax.Array, n_layers: int, dtype=jnp.float32) -> Params:
+    """Initialize a parameter pytree from defs (deterministic per path)."""
+    out: Dict = {}
+    flat = list(_iter_defs(defs))
+    keys = jax.random.split(key, max(len(flat), 1))
+    for (path, d), k in zip(flat, keys):
+        shape = d.full_shape(n_layers)
+        if d.init == "zeros":
+            arr = jnp.zeros(shape, dtype)
+        elif d.init == "ones":
+            arr = jnp.ones(shape, dtype)
+        else:
+            fan_in = d.shape[0] if len(d.shape) >= 2 else max(d.shape[-1], 1)
+            scale = d.scale if d.scale is not None else 1.0 / math.sqrt(fan_in)
+            arr = (jax.random.normal(k, shape, jnp.float32) * scale).astype(dtype)
+        _set_nested(out, path, arr)
+    return out
+
+
+def param_shapes(defs: Dict, n_layers: int, dtype=jnp.bfloat16) -> Params:
+    out: Dict = {}
+    for path, d in _iter_defs(defs):
+        _set_nested(out, path, jax.ShapeDtypeStruct(d.full_shape(n_layers), dtype))
+    return out
+
+
+def param_specs(defs: Dict, rules: Dict[str, Optional[str]]) -> Params:
+    """PartitionSpec pytree from logical-axis rules ({logical: mesh_axis|None}).
+
+    A mesh axis may appear at most once per tensor; when two logical axes of
+    one tensor map to the same mesh axis (e.g. MLA's ``lora`` and ``heads``
+    both on 'model'), the first occurrence wins and later ones replicate.
+    """
+    out: Dict = {}
+    for path, d in _iter_defs(defs):
+        axes = []
+        seen = set()
+        for a in d.axes:
+            m = rules.get(a) if a else None
+            if m is not None:
+                parts = tuple(m) if isinstance(m, (tuple, list)) else (m,)
+                kept = tuple(p for p in parts if p not in seen)
+                seen.update(kept)
+                m = (kept if len(kept) > 1 else kept[0] if kept else None)
+            axes.append(m)
+        if d.stacked:
+            axes = [None, *axes]
+        _set_nested(out, path, P(*axes))
+    return out
+
+
+def param_count_tree(params: Params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+
+
+def resolve_rules(cfg: ModelConfig, model_axis_size: int,
+                  overrides: Optional[Dict[str, Optional[str]]] = None,
+                  ) -> Dict[str, Optional[str]]:
+    """Map logical parameter axes to mesh axes, with divisibility fallbacks.
+
+    Attention sharding mode:
+      * ``kv_head``  -- shard q-heads and kv-heads on 'model' (needs both divisible)
+      * ``head_dim`` -- shard the head_dim (and MLA lora dim) on 'model';
+                        heads replicated; induces a partial-score all-reduce.
+    """
+    m = "model"
+    rules: Dict[str, Optional[str]] = {
+        "vocab": m, "d_model": None, "ffn": m, "experts": m,
+        "expert_ff": None,          # hillclimb lever: "data" = FSDP experts
+        "heads": None, "kv_heads": None, "head_dim": None,
+        "lora": None, "rope_dim": None,
+        "ssm_heads": m, "state": None, "conv_bc": None,
+    }
+    a = cfg.attn
+    if a is not None:
+        q_ok = a.n_heads % model_axis_size == 0
+        kv_ok = a.n_kv_heads % model_axis_size == 0
+        if a.kind == "mla":
+            # shard q heads if possible; shard the compressed-kv (lora) dim
+            rules["heads"] = m if q_ok else None
+            rules["lora"] = m if a.kv_lora_rank % model_axis_size == 0 else None
+        elif q_ok and kv_ok:
+            rules["heads"] = m
+            rules["kv_heads"] = m
+        elif a.head_dim % model_axis_size == 0:
+            rules["head_dim"] = m          # fallback: shard the reduction dim
+        elif q_ok:
+            rules["heads"] = m             # replicate kv entirely
+    if cfg.ssm is not None:
+        d_in = cfg.ssm.expand * cfg.d_model
+        nheads = d_in // cfg.ssm.head_dim
+        rules["ssm_heads"] = m if nheads % model_axis_size == 0 else None
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def attn_mode(cfg: ModelConfig, model_axis_size: int) -> str:
+    a = cfg.attn
+    if a is None:
+        return "none"
+    if a.kind == "mla":
+        return "mla"
+    if a.n_heads % model_axis_size == 0 and a.n_kv_heads % model_axis_size == 0:
+        return "kv_head"
+    if a.head_dim % model_axis_size == 0:
+        return "head_dim"
+    return "replicate_kv"
+
+
+# ---------------------------------------------------------------------------
+# basic layers
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * gamma
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., T, n_heads, head_dim]; positions: broadcastable to [..., T]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., T, hd/2]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention masks
+#
+# Mask semantics are position-based so that ragged batches and ring-buffer
+# KV caches share one implementation (DESIGN §3): a key row is attendable iff
+#   k_abs <= q_abs  and  k_abs > q_abs - window  and  k_abs >= 0 (written)
+# plus an optional bidirectional prefix (PaliGemma): OR (k_abs < prefix_len
+# and k_abs valid).
+
+
+def position_mask(q_pos: jax.Array, k_pos: jax.Array, window: Optional[int],
+                  prefix_len: int = 0) -> jax.Array:
+    """q_pos: [..., Tq]; k_pos: [..., Tk] absolute positions (-1 = unwritten).
+    Returns bool [..., Tq, Tk]."""
+    q = q_pos[..., :, None]
+    k = k_pos[..., None, :]
+    ok = (k >= 0) & (k <= q)
+    if window is not None:
+        ok &= k > q - window
+    if prefix_len:
+        ok |= (k >= 0) & (k < prefix_len)
+    return ok
+
+
+# ---------------------------------------------------------------------------
+# attention computation
+
+
+def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array,
+                  scale: Optional[float] = None) -> jax.Array:
+    """Reference grouped-query attention.
+
+    q: [B, Tq, H, hd]; k/v: [B, Tk, KVH, hd]; mask: [B, Tq, Tk] bool.
+    Returns [B, Tq, H, hd].  Computes the full score matrix (memory O(Tq·Tk));
+    use :func:`flash_attention_tri` for long sequences.
+    """
+    B, Tq, H, hd = q.shape
+    KVH, vd = k.shape[2], v.shape[-1]
+    G = H // KVH
+    qg = q.reshape(B, Tq, KVH, G, hd)
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("btkgh,bskh->bkgts", qg, k).astype(jnp.float32) * scale
+    scores = jnp.where(mask[:, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgts,bskh->btkgh", p.astype(v.dtype), v)
+    return out.reshape(B, Tq, H, vd)
+
+
+def flash_attention_tri(q: jax.Array, k: jax.Array, v: jax.Array,
+                        q_pos: jax.Array, k_pos: jax.Array,
+                        window: Optional[int] = None, prefix_len: int = 0,
+                        block_q: int = 512, block_k: int = 512,
+                        scale: Optional[float] = None) -> jax.Array:
+    """Causal flash attention in pure jnp, scanning only the lower-triangular
+    (q-block, k-block) pairs so compiled FLOPs are causal-optimal (~L²/2).
+
+    Shapes as :func:`gqa_attention`; q_pos/k_pos: [B, Tq]/[B, Tk] absolute
+    positions.  Online-softmax accumulation in fp32.
+    """
+    B, Tq, H, hd = q.shape
+    Tk, KVH, vd = k.shape[1], k.shape[2], v.shape[-1]
+    G = H // KVH
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    def fit(block, n):
+        block = min(block, n)
+        while n % block:
+            block -= 1
+        return block
+
+    block_q, block_k = fit(block_q, Tq), fit(block_k, Tk)
+    nq, nk = Tq // block_q, Tk // block_k
+
+    # static list of blocks to visit: for self-attention with aligned q/k
+    # (Tq == Tk) only the lower triangle (plus bidirectional-prefix blocks);
+    # otherwise all pairs (masked).
+    if Tq == Tk:
+        def want(i, j):
+            if prefix_len and j * block_k < prefix_len:
+                return True
+            if j > i:
+                return False
+            if window is not None:
+                return j >= i - (-(-window // block_k) + 1)
+            return True
+        pairs = [(i, j) for i in range(nq) for j in range(nk) if want(i, j)]
+    else:
+        pairs = [(i, j) for i in range(nq) for j in range(nk)]
+    pairs = jnp.asarray(pairs, jnp.int32)  # [n_pairs, 2], ordered by i then j
+
+    qg = q.reshape(B, nq, block_q, KVH, G, hd)
+    kb = k.reshape(B, nk, block_k, KVH, hd)
+    vb = v.reshape(B, nk, block_k, KVH, vd)
+    qp = q_pos.reshape(B, nq, block_q)
+    kp = k_pos.reshape(B, nk, block_k)
+
+    acc0 = jnp.zeros((B, nq, block_q, KVH, G, vd), jnp.float32)
+    m0 = jnp.full((B, nq, block_q, KVH, G), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, nq, block_q, KVH, G), jnp.float32)
+
+    def body(carry, pair):
+        acc, m, l = carry
+        i, j = pair[0], pair[1]
+        qi = jax.lax.dynamic_index_in_dim(qg, i, 1, keepdims=False)   # [B,bq,KVH,G,hd]
+        kj = jax.lax.dynamic_index_in_dim(kb, j, 1, keepdims=False)   # [B,bk,KVH,hd]
+        vj = jax.lax.dynamic_index_in_dim(vb, j, 1, keepdims=False)
+        qpi = jax.lax.dynamic_index_in_dim(qp, i, 1, keepdims=False)  # [B,bq]
+        kpj = jax.lax.dynamic_index_in_dim(kp, j, 1, keepdims=False)  # [B,bk]
+        s = jnp.einsum("bqkgh,bskh->bqkgs", qi, kj).astype(jnp.float32) * scale
+        msk = position_mask(qpi, kpj, window, prefix_len)             # [B,bq,bk]
+        s = jnp.where(msk[:, :, None, None, :], s, -jnp.inf)
+        mi = jax.lax.dynamic_index_in_dim(m, i, 1, keepdims=False)
+        li = jax.lax.dynamic_index_in_dim(l, i, 1, keepdims=False)
+        acci = jax.lax.dynamic_index_in_dim(acc, i, 1, keepdims=False)
+        m_new = jnp.maximum(mi, s.max(axis=-1))
+        m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(msk[:, :, None, None, :], p, 0.0)
+        corr = jnp.where(jnp.isneginf(mi), 0.0, jnp.exp(mi - m_safe))
+        l_new = li * corr + p.sum(axis=-1)
+        acc_new = acci * corr[..., None] + jnp.einsum(
+            "bqkgs,bskh->bqkgh", p, vj.astype(jnp.float32))
+        return (jax.lax.dynamic_update_index_in_dim(acc, acc_new, i, 1),
+                jax.lax.dynamic_update_index_in_dim(m, m_new, i, 1),
+                jax.lax.dynamic_update_index_in_dim(l, l_new, i, 1)), None
+
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), pairs)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Tq, H, vd).astype(q.dtype)
+
+
+def flash_attention_train(q: jax.Array, k: jax.Array, v: jax.Array,
+                          q_pos: jax.Array, k_pos: jax.Array,
+                          window: Optional[int] = None, prefix_len: int = 0,
+                          block_q: int = 512,
+                          scale: Optional[float] = None) -> jax.Array:
+    """Training-path attention: scan over q blocks, each block's body
+    rematerialized (jax.checkpoint), scoring against ALL keys with the
+    position mask.
+
+    Memory-optimal for the backward pass: blocks are independent (no online
+    softmax carry), so reverse-mode saves only per-block outputs — the
+    per-pair residuals that make :func:`flash_attention_tri` untrainable at
+    32k vanish.  The cost: masked-out upper-triangle scores are still
+    computed (~2x causal-optimal FLOPs on the score term; the TPU Pallas
+    kernel and the tri variant exploit causality — a documented trade-off in
+    launch/costs.py, and a Perf-loop lever).
+    """
+    B, Tq, H, hd = q.shape
+    Tk, KVH, vd = k.shape[1], k.shape[2], v.shape[-1]
+    G = H // KVH
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    bq = min(block_q, Tq)
+    while Tq % bq:
+        bq -= 1
+    nq = Tq // bq
+    qb = q.reshape(B, nq, bq, KVH, G, hd)
+    qp = q_pos.reshape(B, nq, bq)
+
+    @jax.checkpoint
+    def block(args):
+        qi, qpi = args                                   # [B,bq,KVH,G,hd], [B,bq]
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qi, k).astype(jnp.float32) * scale
+        msk = position_mask(qpi, k_pos, window, prefix_len)   # [B,bq,Tk]
+        s = jnp.where(msk[:, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        p = jnp.where(msk[:, None, None].any(-1, keepdims=True), p, 0.0)
+        return jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v)
+
+    out = jax.lax.map(block, (jnp.moveaxis(qb, 1, 0), jnp.moveaxis(qp, 1, 0)))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, Tq, H, vd)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+
+
+def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x: jax.Array, table: jax.Array, true_vocab: int) -> jax.Array:
+    """Logits with padded vocab ids masked to -inf."""
+    logits = jnp.einsum("...d,vd->...v", x, table).astype(jnp.float32)
+    v = table.shape[0]
+    if true_vocab < v:
+        mask = jnp.arange(v) < true_vocab
+        logits = jnp.where(mask, logits, -1e30)
+    return logits

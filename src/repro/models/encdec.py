@@ -1,0 +1,293 @@
+"""Encoder-decoder transformer backbone (SeamlessM4T-large-v2 assignment,
+arXiv:2308.11596).  The modality frontend is a stub per the assignment: the
+encoder consumes precomputed frame embeddings ``src_embeds`` [B, S, d]
+(``input_specs`` provides ShapeDtypeStructs of the right shape).
+
+Decoder = causal self-attention (ring-buffer KV cache, speculative rollback
+free) + cross-attention to the encoder output (cross-KV computed once at
+prefill, never rolled back) + SwiGLU MLP.
+
+Bidirectional/cross visibility reuses the position-mask machinery: encoder
+self-attention and cross-attention pass ``q_pos = S`` (a constant at least as
+large as every key position) so ``k_pos <= q_pos`` admits all valid keys,
+while padded source rows carry ``k_pos = -1`` and stay masked.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, pad_vocab
+from repro.models import common as cm
+from repro.models.common import ParamDef
+from repro.runtime.meshctx import shard
+
+Params = Any
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.attn is not None and cfg.enc_layers > 0
+        self.cfg = cfg
+        self.padded_vocab = pad_vocab(cfg.vocab_size)
+
+    # ------------------------------------------------------------------
+    def _attn_defs(self, rope_on_kv: bool = True) -> Dict[str, ParamDef]:
+        a, d = self.cfg.attn, self.cfg.d_model
+        return {
+            "wq": ParamDef((d, a.n_heads, a.head_dim), ("d_model", "heads", "head_dim"), stacked=True),
+            "wk": ParamDef((d, a.n_kv_heads, a.head_dim), ("d_model", "kv_heads", "head_dim"), stacked=True),
+            "wv": ParamDef((d, a.n_kv_heads, a.head_dim), ("d_model", "kv_heads", "head_dim"), stacked=True),
+            "wo": ParamDef((a.n_heads, a.head_dim, d), ("heads", "head_dim", "d_model"), stacked=True),
+        }
+
+    def _mlp_defs(self) -> Dict[str, ParamDef]:
+        c = self.cfg
+        return {
+            "w_gate": ParamDef((c.d_model, c.d_ff), ("d_model", "ffn"), stacked=True),
+            "w_up": ParamDef((c.d_model, c.d_ff), ("d_model", "ffn"), stacked=True),
+            "w_down": ParamDef((c.d_ff, c.d_model), ("ffn", "d_model"), stacked=True),
+        }
+
+    def param_defs(self) -> Dict:
+        c = self.cfg
+        d = c.d_model
+        norm = lambda: ParamDef((d,), ("d_model",), init="ones", stacked=True)
+        enc = {"attn_norm": norm(), "mlp_norm": norm(), **self._attn_defs(), **self._mlp_defs()}
+        dec = {
+            "self_norm": norm(), "cross_norm": norm(), "mlp_norm": norm(),
+            **{f"self_{k}": v for k, v in self._attn_defs().items()},
+            **{f"cross_{k}": v for k, v in self._attn_defs().items()},
+            **self._mlp_defs(),
+        }
+        return {
+            "embed": ParamDef((self.padded_vocab, d), ("vocab", "d_model"), scale=0.02),
+            "enc_final_norm": ParamDef((d,), ("d_model",), init="ones"),
+            "final_norm": ParamDef((d,), ("d_model",), init="ones"),
+            "unembed": ParamDef((self.padded_vocab, d), ("vocab", "d_model"), scale=0.02),
+            "enc": enc,   # stacked enc_layers
+            "dec": dec,   # stacked n_layers
+        }
+
+    def init(self, key, dtype=jnp.float32) -> Params:
+        defs = self.param_defs()
+        top = cm.init_params({k: v for k, v in defs.items() if isinstance(v, ParamDef)},
+                             jax.random.fold_in(key, 0), 0, dtype)
+        enc = cm.init_params(defs["enc"], jax.random.fold_in(key, 1), self.cfg.enc_layers, dtype)
+        dec = cm.init_params(defs["dec"], jax.random.fold_in(key, 2), self.cfg.n_layers, dtype)
+        return dict(top, enc=enc, dec=dec)
+
+    def shapes(self, dtype=jnp.bfloat16) -> Params:
+        defs = self.param_defs()
+        out = cm.param_shapes({k: v for k, v in defs.items() if isinstance(v, ParamDef)}, 0, dtype)
+        out["enc"] = cm.param_shapes(defs["enc"], self.cfg.enc_layers, dtype)
+        out["dec"] = cm.param_shapes(defs["dec"], self.cfg.n_layers, dtype)
+        return out
+
+    def specs(self, rules) -> Params:
+        defs = self.param_defs()
+        out = cm.param_specs({k: v for k, v in defs.items() if isinstance(v, ParamDef)}, rules)
+        out["enc"] = cm.param_specs(defs["enc"], rules)
+        out["dec"] = cm.param_specs(defs["dec"], rules)
+        return out
+
+    # ------------------------------------------------------------------
+    def init_cache(self, batch: int, cache_len: int, dtype=jnp.float32,
+                   src_len: int = 0) -> Dict:
+        c, a = self.cfg, self.cfg.attn
+        L = min(cache_len, a.window) if a.window else cache_len
+        return {
+            "k": jnp.zeros((c.n_layers, batch, L, a.n_kv_heads, a.head_dim), dtype),
+            "v": jnp.zeros((c.n_layers, batch, L, a.n_kv_heads, a.head_dim), dtype),
+            "pos": jnp.full((batch, L), -1, jnp.int32),
+            "xk": jnp.zeros((c.n_layers, batch, src_len, a.n_kv_heads, a.head_dim), dtype),
+            "xv": jnp.zeros((c.n_layers, batch, src_len, a.n_kv_heads, a.head_dim), dtype),
+            "xpos": jnp.full((batch, src_len), -1, jnp.int32),
+        }
+
+    def cache_specs(self, rules, batch_axis="data", seq_axis=None) -> Dict:
+        kv, hd = rules.get("kv_heads"), rules.get("head_dim")
+        return {
+            "k": P(None, batch_axis, seq_axis, kv, hd),
+            "v": P(None, batch_axis, seq_axis, kv, hd),
+            "pos": P(batch_axis, seq_axis),
+            "xk": P(None, batch_axis, None, kv, hd),
+            "xv": P(None, batch_axis, None, kv, hd),
+            "xpos": P(batch_axis, None),
+        }
+
+    # ------------------------------------------------------------------
+    def encode(self, params: Params, src_embeds: jax.Array,
+               src_lens: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+        """Returns (enc_out [B,S,d], src_pos [B,S] with -1 padding)."""
+        c = self.cfg
+        B, S, _ = src_embeds.shape
+        x = shard(src_embeds.astype(jnp.dtype(c.dtype) if isinstance(c.dtype, str) else c.dtype),
+                  "data", None, None)
+        if src_lens is None:
+            src_lens = jnp.full((B,), S, jnp.int32)
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        src_pos = jnp.where(pos < src_lens[:, None], pos, -1)
+        full_q = jnp.full((B, S), S, jnp.int32)  # bidirectional: see module docstring
+
+        @jax.checkpoint                        # remat per layer
+        def layer(h, lp):
+            hn = cm.rms_norm(h, lp["attn_norm"], c.norm_eps)
+            q = cm.apply_rope(jnp.einsum("btd,dhk->bthk", hn, lp["wq"]), pos, c.attn.rope_theta)
+            k = cm.apply_rope(jnp.einsum("btd,dhk->bthk", hn, lp["wk"]), pos, c.attn.rope_theta)
+            v = jnp.einsum("btd,dhk->bthk", hn, lp["wv"])
+            # bidirectional: must visit ALL (q, k) blocks — the triangular
+            # tri variant would silently skip the upper half
+            o = cm.flash_attention_train(q, k, v, full_q, src_pos)
+            h = h + shard(jnp.einsum("bthk,hkd->btd", o, lp["wo"]), "data", None, None)
+            m = cm.swiglu(cm.rms_norm(h, lp["mlp_norm"], c.norm_eps),
+                          lp["w_gate"], lp["w_up"], lp["w_down"])
+            return h + shard(m, "data", None, None), None
+
+        x, _ = jax.lax.scan(layer, x, params["enc"])
+        return cm.rms_norm(x, params["enc_final_norm"], c.norm_eps), src_pos
+
+    def _cross(self, lp, hn, xk, xv, xpos):
+        """Cross-attention of decoder states hn [B,T,d] over cached encoder KV."""
+        B, T, _ = hn.shape
+        q = jnp.einsum("btd,dhk->bthk", hn, lp["cross_wq"])
+        S = xk.shape[1]
+        full_q = jnp.full((B, T), S, jnp.int32)
+        mask = cm.position_mask(full_q, xpos, None)
+        o = cm.gqa_attention(q, xk, xv, mask)
+        return jnp.einsum("bthk,hkd->btd", o, lp["cross_wo"])
+
+    # ------------------------------------------------------------------
+    def forward(self, params: Params, tokens: jax.Array,
+                src_embeds: Optional[jax.Array] = None,
+                src_lens: Optional[jax.Array] = None,
+                ) -> Tuple[jax.Array, jax.Array]:
+        """Training forward: encode src, decode tgt causally. Returns logits."""
+        c = self.cfg
+        enc_out, src_pos = self.encode(params, src_embeds, src_lens)
+        x = cm.embed(tokens, params["embed"])
+        B, T, _ = x.shape
+        x = shard(x, "data", "model", None)   # sequence-parallel residual
+        pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+
+        @jax.checkpoint                        # remat per layer
+        def layer(h, lp):
+            hn = cm.rms_norm(h, lp["self_norm"], c.norm_eps)
+            q = cm.apply_rope(jnp.einsum("btd,dhk->bthk", hn, lp["self_wq"]), pos, c.attn.rope_theta)
+            k = cm.apply_rope(jnp.einsum("btd,dhk->bthk", hn, lp["self_wk"]), pos, c.attn.rope_theta)
+            v = jnp.einsum("btd,dhk->bthk", hn, lp["self_wv"])
+            o = cm.flash_attention_train(q, k, v, pos, pos, window=c.attn.window)
+            h = h + shard(jnp.einsum("bthk,hkd->btd", o, lp["self_wo"]), "data", "model", None)
+            hn = cm.rms_norm(h, lp["cross_norm"], c.norm_eps)
+            xk = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross_wk"])
+            xv = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross_wv"])
+            h = h + shard(self._cross(lp, hn, xk, xv, src_pos), "data", "model", None)
+            m = cm.swiglu(cm.rms_norm(h, lp["mlp_norm"], c.norm_eps),
+                          lp["w_gate"], lp["w_up"], lp["w_down"])
+            return h + shard(m, "data", "model", None), None
+
+        x, _ = jax.lax.scan(layer, x, params["dec"])
+        x = cm.rms_norm(x, params["final_norm"], c.norm_eps)
+        return cm.unembed(x, params["unembed"], c.vocab_size), jnp.zeros((), jnp.float32)
+
+    # ------------------------------------------------------------------
+    def prefill(self, params: Params, tokens: jax.Array, cache: Dict,
+                prompt_lens: Optional[jax.Array] = None,
+                src_embeds: Optional[jax.Array] = None,
+                src_lens: Optional[jax.Array] = None,
+                ) -> Tuple[jax.Array, Dict, jax.Array]:
+        """Encode the source, fill cross-KV, prefill decoder self-KV on the
+        (right-padded) target prompt."""
+        c = self.cfg
+        enc_out, src_pos = self.encode(params, src_embeds, src_lens)
+        # cross-KV for every decoder layer, computed once
+        def xkv(lp):
+            xk = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross_wk"])
+            xv = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross_wv"])
+            return xk, xv
+        xks, xvs = jax.lax.map(xkv, params["dec"])
+
+        x = cm.embed(tokens, params["embed"])
+        B, T, _ = x.shape
+        x = shard(x, "data", None, None)
+        if prompt_lens is None:
+            prompt_lens = jnp.full((B,), T, jnp.int32)
+        pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+        valid = pos < prompt_lens[:, None]
+        qk_pos = jnp.where(valid, pos, -1)
+        L = cache["pos"].shape[1]
+        rows = pos % L
+        pos_arr = cache["pos"].at[jnp.arange(B)[:, None], rows].set(qk_pos)
+
+        def layer(h, xs):
+            lp, lk, lv, xk, xv = xs
+            hn = cm.rms_norm(h, lp["self_norm"], c.norm_eps)
+            q = cm.apply_rope(jnp.einsum("btd,dhk->bthk", hn, lp["self_wq"]), pos, c.attn.rope_theta)
+            k = cm.apply_rope(jnp.einsum("btd,dhk->bthk", hn, lp["self_wk"]), pos, c.attn.rope_theta)
+            v = jnp.einsum("btd,dhk->bthk", hn, lp["self_wv"])
+            bidx = jnp.arange(B)[:, None]
+            nk = lk.at[bidx, rows].set(k.astype(lk.dtype))
+            nv = lv.at[bidx, rows].set(v.astype(lv.dtype))
+            o = cm.flash_attention_tri(q, k, v, qk_pos, qk_pos, window=c.attn.window)
+            h = h + shard(jnp.einsum("bthk,hkd->btd", o, lp["self_wo"]), "data", None, None)
+            hn = cm.rms_norm(h, lp["cross_norm"], c.norm_eps)
+            h = h + shard(self._cross(lp, hn, xk, xv, src_pos), "data", None, None)
+            m = cm.swiglu(cm.rms_norm(h, lp["mlp_norm"], c.norm_eps),
+                          lp["w_gate"], lp["w_up"], lp["w_down"])
+            return h + shard(m, "data", None, None), (nk, nv)
+
+        x, (nks, nvs) = jax.lax.scan(layer, x, (params["dec"], cache["k"], cache["v"],
+                                                xks, xvs))
+        x = cm.rms_norm(x, params["final_norm"], c.norm_eps)
+        last = jnp.take_along_axis(x, (prompt_lens - 1)[:, None, None], axis=1)[:, 0]
+        logits = cm.unembed(last, params["unembed"], c.vocab_size)
+        dt = cache["xk"].dtype
+        new_cache = {"k": nks, "v": nvs, "pos": pos_arr,
+                     "xk": xks.astype(dt), "xv": xvs.astype(dt), "xpos": src_pos}
+        return logits, new_cache, prompt_lens
+
+    # ------------------------------------------------------------------
+    def decode_step(self, params: Params, tokens: jax.Array, cache: Dict,
+                    seq_lens: jax.Array) -> Tuple[jax.Array, Dict]:
+        c = self.cfg
+        B, T = tokens.shape
+        x = cm.embed(tokens, params["embed"])
+        x = shard(x, "data", None, None)
+        L = cache["pos"].shape[1]
+        positions = (seq_lens - 1)[:, None] + jnp.arange(T, dtype=jnp.int32)[None]
+        rows = positions % L
+        pos_arr = cache["pos"].at[jnp.arange(B)[:, None], rows].set(positions)
+
+        def layer(h, xs):
+            lp, lk, lv, xk, xv = xs
+            hn = cm.rms_norm(h, lp["self_norm"], c.norm_eps)
+            q = cm.apply_rope(jnp.einsum("btd,dhk->bthk", hn, lp["self_wq"]),
+                              positions, c.attn.rope_theta)
+            k = cm.apply_rope(jnp.einsum("btd,dhk->bthk", hn, lp["self_wk"]),
+                              positions, c.attn.rope_theta)
+            v = jnp.einsum("btd,dhk->bthk", hn, lp["self_wv"])
+            bidx = jnp.arange(B)[:, None]
+            nk = lk.at[bidx, rows].set(k.astype(lk.dtype))
+            nv = lv.at[bidx, rows].set(v.astype(lv.dtype))
+            mask = cm.position_mask(positions, pos_arr, c.attn.window)
+            o = cm.gqa_attention(q, nk, nv, mask)
+            h = h + shard(jnp.einsum("bthk,hkd->btd", o, lp["self_wo"]), "data", None, None)
+            hn = cm.rms_norm(h, lp["cross_norm"], c.norm_eps)
+            h = h + shard(self._cross(lp, hn, xk, xv, cache["xpos"]), "data", None, None)
+            m = cm.swiglu(cm.rms_norm(h, lp["mlp_norm"], c.norm_eps),
+                          lp["w_gate"], lp["w_up"], lp["w_down"])
+            return h + shard(m, "data", None, None), (nk, nv)
+
+        x, (nks, nvs) = jax.lax.scan(
+            layer, x, (params["dec"], cache["k"], cache["v"], cache["xk"], cache["xv"]))
+        x = cm.rms_norm(x, params["final_norm"], c.norm_eps)
+        logits = cm.unembed(x, params["unembed"], c.vocab_size)
+        return logits, dict(cache, k=nks, v=nvs, pos=pos_arr)
+
+    @staticmethod
+    def commit(cache_out: Dict, accept_idx: jax.Array) -> Dict:
+        return cache_out

@@ -1,0 +1,437 @@
+"""RecurrentGemma / Griffin-style hybrid LM (arXiv:2402.19427):
+repeating (recurrent, recurrent, local-attention) blocks, each followed by an
+MLP.  The temporal mixer is an RG-LRU: a gated diagonal linear recurrence
+  r_t = sigmoid(g_a . x_t + b_a);  i_t = sigmoid(g_x . x_t + b_x)
+  a_t = exp(-c . softplus(lam) . r_t)
+  h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t . x_t)
+preceded by a short causal depthwise conv.  (We use diagonal gate weights —
+Griffin uses block-diagonal; documented deviation.)
+
+Full-sequence paths use ``jax.lax.associative_scan`` (log-depth).  Decode
+checkpoints the recurrent state per verified position for speculative
+rollback, exactly like the Mamba2 module; the local-attention KV cache is a
+window-sized ring buffer whose rollback is a free length update.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, pad_vocab
+from repro.models import common as cm
+from repro.models.common import ParamDef
+from repro.runtime.meshctx import shard
+
+Params = Any
+_C = 8.0  # RG-LRU decay sharpness constant (Griffin)
+
+
+class RGLRUHybridLM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.rglru is not None and cfg.attn is not None
+        self.cfg = cfg
+        r = cfg.rglru
+        self.w = r.lru_width or cfg.d_model
+        pat = r.pattern
+        self.n_full = cfg.n_layers // len(pat)
+        tail = cfg.n_layers % len(pat)
+        assert all(p == "rec" for p in pat[:tail]), "tail layers must be recurrent"
+        self.n_tail = tail
+        self.n_rec = sum(p == "rec" for p in pat) * self.n_full + tail
+        self.n_attn = sum(p == "attn" for p in pat) * self.n_full
+        self.rec_per_block = sum(p == "rec" for p in pat)
+        self.padded_vocab = pad_vocab(cfg.vocab_size)
+
+    # ------------------------------------------------------------------
+    def param_defs(self) -> Dict:
+        c, a, r = self.cfg, self.cfg.attn, self.cfg.rglru
+        d, w, hd = c.d_model, self.w, a.head_dim
+        mlp = lambda: {
+            "mlp_norm": ParamDef((d,), ("d_model",), init="ones", stacked=True),
+            "w_gate": ParamDef((d, c.d_ff), ("d_model", "ffn"), stacked=True),
+            "w_up": ParamDef((d, c.d_ff), ("d_model", "ffn"), stacked=True),
+            "w_down": ParamDef((c.d_ff, d), ("ffn", "d_model"), stacked=True),
+        }
+        rec = {
+            "norm": ParamDef((d,), ("d_model",), init="ones", stacked=True),
+            "w_b1": ParamDef((d, w), ("d_model", "ffn"), stacked=True),
+            "w_b2": ParamDef((d, w), ("d_model", "ffn"), stacked=True),
+            "conv_w": ParamDef((r.d_conv, w), (None, "ffn"), scale=0.5, stacked=True),
+            "conv_b": ParamDef((w,), ("ffn",), init="zeros", stacked=True),
+            "lam": ParamDef((w,), ("ffn",), init="ones", stacked=True),
+            "g_a": ParamDef((w,), ("ffn",), init="ones", stacked=True),
+            "b_a": ParamDef((w,), ("ffn",), init="zeros", stacked=True),
+            "g_x": ParamDef((w,), ("ffn",), init="ones", stacked=True),
+            "b_x": ParamDef((w,), ("ffn",), init="zeros", stacked=True),
+            "w_out": ParamDef((w, d), ("ffn", "d_model"), stacked=True),
+            **mlp(),
+        }
+        attn = {
+            "norm": ParamDef((d,), ("d_model",), init="ones", stacked=True),
+            "wq": ParamDef((d, a.n_heads, hd), ("d_model", "heads", "head_dim"), stacked=True),
+            "wk": ParamDef((d, a.n_kv_heads, hd), ("d_model", "kv_heads", "head_dim"), stacked=True),
+            "wv": ParamDef((d, a.n_kv_heads, hd), ("d_model", "kv_heads", "head_dim"), stacked=True),
+            "wo": ParamDef((a.n_heads, hd, d), ("heads", "head_dim", "d_model"), stacked=True),
+            **mlp(),
+        }
+        return {
+            "embed": ParamDef((self.padded_vocab, d), ("vocab", "d_model"), scale=0.02),
+            "final_norm": ParamDef((d,), ("d_model",), init="ones"),
+            "unembed": ParamDef((self.padded_vocab, d), ("vocab", "d_model"), scale=0.02),
+            "rec": rec,    # stacked n_rec
+            "attn": attn,  # stacked n_attn
+        }
+
+    def init(self, key, dtype=jnp.float32) -> Params:
+        defs = self.param_defs()
+        rec = cm.init_params(defs["rec"], jax.random.fold_in(key, 1), self.n_rec, dtype)
+        attn = cm.init_params(defs["attn"], jax.random.fold_in(key, 2), self.n_attn, dtype)
+        top = cm.init_params({k: v for k, v in defs.items() if isinstance(v, ParamDef)},
+                             jax.random.fold_in(key, 0), 0, dtype)
+        # lam init so decay a spans (0.9, 0.999) at r=0.5
+        lam0 = jnp.log(jnp.expm1(-jnp.log(jnp.linspace(0.9, 0.999, self.w)) * 2.0 / _C))
+        rec["lam"] = jnp.broadcast_to(lam0, (self.n_rec, self.w)).astype(dtype)
+        return dict(top, rec=rec, attn=attn)
+
+    def shapes(self, dtype=jnp.bfloat16) -> Params:
+        defs = self.param_defs()
+        out = cm.param_shapes({k: v for k, v in defs.items() if isinstance(v, ParamDef)}, 0, dtype)
+        out["rec"] = cm.param_shapes(defs["rec"], self.n_rec, dtype)
+        out["attn"] = cm.param_shapes(defs["attn"], self.n_attn, dtype)
+        return out
+
+    def specs(self, rules) -> Params:
+        defs = self.param_defs()
+        out = cm.param_specs({k: v for k, v in defs.items() if isinstance(v, ParamDef)}, rules)
+        out["rec"] = cm.param_specs(defs["rec"], rules)
+        out["attn"] = cm.param_specs(defs["attn"], rules)
+        return out
+
+    # ------------------------------------------------------------------
+    def init_cache(self, batch: int, cache_len: int, dtype=jnp.float32) -> Dict:
+        c, a, r = self.cfg, self.cfg.attn, self.cfg.rglru
+        L = min(cache_len, r.window)
+        return {
+            "k": jnp.zeros((self.n_attn, batch, L, a.n_kv_heads, a.head_dim), dtype),
+            "v": jnp.zeros((self.n_attn, batch, L, a.n_kv_heads, a.head_dim), dtype),
+            "pos": jnp.full((batch, L), -1, jnp.int32),
+            "state": jnp.zeros((self.n_rec, batch, self.w), jnp.float32),
+            "conv": jnp.zeros((self.n_rec, batch, r.d_conv - 1, self.w), dtype),
+        }
+
+    def cache_specs(self, rules, batch_axis="data", seq_axis=None) -> Dict:
+        kv, hd, f = rules.get("kv_heads"), rules.get("head_dim"), rules.get("ffn")
+        return {
+            "k": P(None, batch_axis, seq_axis, kv, hd),
+            "v": P(None, batch_axis, seq_axis, kv, hd),
+            "pos": P(batch_axis, seq_axis),
+            "state": P(None, batch_axis, f),
+            "conv": P(None, batch_axis, None, f),
+        }
+
+    def ckpt_cache_specs(self, rules, batch_axis="data") -> Dict:
+        """Output-cache specs of decode_step (see mamba2.ckpt_cache_specs)."""
+        base = self.cache_specs(rules, batch_axis)
+        f = rules.get("ffn")
+        return dict(base,
+                    state_ckpt=P(None, batch_axis, None, f),
+                    conv_ckpt=P(None, batch_axis, None, None, f))
+
+    # ------------------------------------------------------------------
+    # RG-LRU pieces
+
+    def _gates(self, lp, xc):
+        """xc: post-conv input [.., w] -> (log_a, bx) in fp32."""
+        x32 = xc.astype(jnp.float32)
+        r = jax.nn.sigmoid(x32 * lp["g_a"].astype(jnp.float32) + lp["b_a"].astype(jnp.float32))
+        i = jax.nn.sigmoid(x32 * lp["g_x"].astype(jnp.float32) + lp["b_x"].astype(jnp.float32))
+        log_a = -_C * jax.nn.softplus(lp["lam"].astype(jnp.float32)) * r
+        a = jnp.exp(log_a)
+        b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * x32)
+        return a, b
+
+    @staticmethod
+    def _conv_full(x, wk, bk):
+        K = wk.shape[0]
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+        return sum(xp[:, i:i + x.shape[1], :] * wk[i] for i in range(K)) + bk
+
+    def _rec_full(self, lp, x, valid_mask, gather_idx):
+        """Full-sequence recurrent mixer.  x: [B,T,d] (normed).
+        Returns (out [B,T,d], lcache {state, conv})."""
+        B, T, _ = x.shape
+        b1 = jax.nn.gelu(jnp.einsum("btd,dw->btw", x, lp["w_b1"]))
+        b2_raw = jnp.einsum("btd,dw->btw", x, lp["w_b2"])
+        xc = self._conv_full(b2_raw, lp["conv_w"], lp["conv_b"])
+        a, b = self._gates(lp, xc)
+        if valid_mask is not None:  # padded rows: identity element (a=1, b=0)
+            a = jnp.where(valid_mask[..., None], a, 1.0)
+            b = jnp.where(valid_mask[..., None], b, 0.0)
+        A, Bc = jax.lax.associative_scan(
+            lambda l, r_: (r_[0] * l[0], r_[0] * l[1] + r_[1]), (a, b), axis=1)
+        h = Bc  # h0 = 0
+        out = jnp.einsum("btw,wd->btd", (h.astype(x.dtype) * b1), lp["w_out"])
+        bidx = jnp.arange(B)[:, None]
+        state = jnp.take_along_axis(h, (gather_idx[:, -1:] )[..., None], axis=1)[:, 0] \
+            if gather_idx is not None else h[:, -1]
+        conv_rows = b2_raw[bidx, gather_idx] if gather_idx is not None \
+            else b2_raw[:, T - (lp["conv_w"].shape[0] - 1):]
+        return out, {"state": state, "conv": conv_rows.astype(x.dtype)}
+
+    def _rec_step(self, lp, x, lstate, lconv):
+        """Incremental recurrent mixer with per-position checkpoints.
+        x: [B,T,d] normed. Returns (out, {state, conv}, ckpts)."""
+        B, T, _ = x.shape
+        K = lp["conv_w"].shape[0]
+        w = K - 1
+        b1 = jax.nn.gelu(jnp.einsum("btd,dw->btw", x, lp["w_b1"]))
+        b2_raw = jnp.einsum("btd,dw->btw", x, lp["w_b2"])
+        full = jnp.concatenate([lconv, b2_raw.astype(lconv.dtype)], axis=1)
+        xc = sum(full[:, w - (K - 1) + i: w - (K - 1) + i + T] * lp["conv_w"][i]
+                 for i in range(K)) + lp["conv_b"]
+        a, b = self._gates(lp, xc)
+
+        def step(h, i):
+            h = a[:, i] * h + b[:, i]
+            return h, h
+
+        h_fin, hs = jax.lax.scan(step, lstate, jnp.arange(T))
+        h_all = jnp.moveaxis(hs, 0, 1)                          # [B,T,w]
+        out = jnp.einsum("btw,wd->btd", h_all.astype(x.dtype) * b1, lp["w_out"])
+        idx = jnp.arange(T)[:, None] + 1 + jnp.arange(w)[None]
+        ckpts = {"state": h_all, "conv": full[:, idx]}          # [B,T,w],[B,T,w,ch]
+        return out, {"state": h_fin, "conv": full[:, T:]}, ckpts
+
+    def _mlp(self, lp, x):
+        return cm.swiglu(cm.rms_norm(x, lp["mlp_norm"], self.cfg.norm_eps),
+                         lp["w_gate"], lp["w_up"], lp["w_down"])
+
+    # ------------------------------------------------------------------
+    def _split(self, stacked, n_take, per_block):
+        """Slice the first n_take entries of a stacked pytree into per-block
+        groups: returns list of per_block trees each [n_full, ...]."""
+        return [jax.tree.map(lambda p: p[j:n_take:per_block], stacked)
+                for j in range(per_block)]
+
+    def forward(self, params: Params, tokens: jax.Array,
+                prefix_embeds: Optional[jax.Array] = None,
+                ) -> Tuple[jax.Array, jax.Array]:
+        c = self.cfg
+        x = cm.embed(tokens, params["embed"])
+        B, T, _ = x.shape
+        x = shard(x, "data", "model", None)   # sequence-parallel residual
+        positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+
+        def rec_layer(h, lp):
+            o, _ = self._rec_full(lp, cm.rms_norm(h, lp["norm"], c.norm_eps), None, None)
+            h = h + shard(o, "data", "model", None)
+            return h + self._mlp(lp, h)
+
+        def attn_layer(h, lp):
+            hn = cm.rms_norm(h, lp["norm"], c.norm_eps)
+            q = cm.apply_rope(jnp.einsum("btd,dhk->bthk", hn, lp["wq"]), positions, c.attn.rope_theta)
+            k = cm.apply_rope(jnp.einsum("btd,dhk->bthk", hn, lp["wk"]), positions, c.attn.rope_theta)
+            v = jnp.einsum("btd,dhk->bthk", hn, lp["wv"])
+            o = cm.flash_attention_train(q, k, v, positions, positions,
+                                         window=c.rglru.window)
+            h = h + shard(jnp.einsum("bthk,hkd->btd", o, lp["wo"]), "data", "model", None)
+            return h + self._mlp(lp, h)
+
+        nb, rpb = self.n_full, self.rec_per_block
+        rec_groups = self._split(params["rec"], nb * rpb, rpb)
+
+        @jax.checkpoint                        # remat per superblock
+        def superblock(h, xs):
+            rec_ps, attn_p = xs
+            for j in range(rpb):
+                h = rec_layer(h, jax.tree.map(lambda p, jj=j: p[jj], rec_ps))
+            return attn_layer(h, attn_p), None
+
+        rec_stack = jax.tree.map(lambda *xs: jnp.stack(xs, 1), *rec_groups)  # [nb, rpb, ...]
+        rec_stack = jax.tree.map(lambda p: jnp.moveaxis(p, 1, 1), rec_stack)
+        x, _ = jax.lax.scan(
+            superblock, x,
+            (jax.tree.map(lambda p: jnp.moveaxis(p, 0, 0), rec_stack), params["attn"]))
+        for t in range(self.n_tail):
+            x = rec_layer(x, jax.tree.map(lambda p, i=nb * rpb + t: p[i], params["rec"]))
+        x = cm.rms_norm(x, params["final_norm"], c.norm_eps)
+        return cm.unembed(x, params["unembed"], c.vocab_size), jnp.zeros((), jnp.float32)
+
+    # ------------------------------------------------------------------
+    def prefill(self, params: Params, tokens: jax.Array, cache: Dict,
+                prompt_lens: Optional[jax.Array] = None,
+                prefix_embeds: Optional[jax.Array] = None,
+                ) -> Tuple[jax.Array, Dict, jax.Array]:
+        c, r = self.cfg, self.cfg.rglru
+        x = cm.embed(tokens, params["embed"])
+        B, T, _ = x.shape
+        x = shard(x, "data", None, None)
+        if prompt_lens is None:
+            prompt_lens = jnp.full((B,), T, jnp.int32)
+        positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+        valid = positions < prompt_lens[:, None]
+        qk_pos = jnp.where(valid, positions, -1)
+        L = cache["pos"].shape[1]
+        rows = positions % L
+        pos_arr = cache["pos"].at[jnp.arange(B)[:, None], rows].set(qk_pos)
+        K = r.d_conv
+        gather_idx = jnp.clip(prompt_lens[:, None] - (K - 1) + jnp.arange(K - 1)[None], 0, T - 1)
+        conv_valid = (prompt_lens[:, None] - (K - 1) + jnp.arange(K - 1)[None]) >= 0
+
+        nb, rpb = self.n_full, self.rec_per_block
+        rec_groups = self._split(params["rec"], nb * rpb, rpb)
+        rec_stack = jax.tree.map(lambda *xs: jnp.stack(xs, 1), *rec_groups)
+
+        def rec_layer(h, lp):
+            o, lc = self._rec_full(lp, cm.rms_norm(h, lp["norm"], c.norm_eps), valid, gather_idx)
+            lc["conv"] = lc["conv"] * conv_valid[..., None].astype(lc["conv"].dtype)
+            h = h + shard(o, "data", None, None)
+            return h + self._mlp(lp, h), lc
+
+        def attn_layer(h, lp, lk, lv):
+            hn = cm.rms_norm(h, lp["norm"], c.norm_eps)
+            q = cm.apply_rope(jnp.einsum("btd,dhk->bthk", hn, lp["wq"]), positions, c.attn.rope_theta)
+            k = cm.apply_rope(jnp.einsum("btd,dhk->bthk", hn, lp["wk"]), positions, c.attn.rope_theta)
+            v = jnp.einsum("btd,dhk->bthk", hn, lp["wv"])
+            o = cm.flash_attention_tri(q, k, v, qk_pos, qk_pos, window=r.window)
+            bidx = jnp.arange(B)[:, None]
+            nk = lk.at[bidx, rows].set(k.astype(lk.dtype))
+            nv = lv.at[bidx, rows].set(v.astype(lv.dtype))
+            h = h + shard(jnp.einsum("bthk,hkd->btd", o, lp["wo"]), "data", None, None)
+            return h + self._mlp(lp, h), nk, nv
+
+        def superblock(h, xs):
+            rec_ps, attn_p, lk, lv = xs
+            lcs = []
+            for j in range(rpb):
+                h, lc = rec_layer(h, jax.tree.map(lambda p, jj=j: p[jj], rec_ps))
+                lcs.append(lc)
+            h, nk, nv = attn_layer(h, attn_p, lk, lv)
+            lcs = jax.tree.map(lambda *ys: jnp.stack(ys, 0), *lcs)   # [rpb, ...]
+            return h, (lcs, nk, nv)
+
+        x, (rec_lcs, nk, nv) = jax.lax.scan(
+            superblock, x, (rec_stack, params["attn"], cache["k"], cache["v"]))
+        tail_lcs = []
+        for t in range(self.n_tail):
+            x, lc = rec_layer(x, jax.tree.map(lambda p, i=nb * rpb + t: p[i], params["rec"]))
+            tail_lcs.append(lc)
+        x = cm.rms_norm(x, params["final_norm"], c.norm_eps)
+        last = jnp.take_along_axis(x, (prompt_lens - 1)[:, None, None], axis=1)[:, 0]
+        logits = cm.unembed(last, params["unembed"], c.vocab_size)
+
+        # reassemble [n_rec, ...] from [nb, rpb, ...] + tail
+        def reasm(grouped, tails):
+            flat = jnp.swapaxes(grouped, 0, 1).reshape(nb * rpb, *grouped.shape[2:])
+            # interleave back: grouped[i, j] is rec index i*rpb+j -> need order by (i*rpb+j)?
+            return jnp.concatenate([flat] + [t[None] for t in tails], 0)
+
+        new_rec = jax.tree.map(
+            lambda g, *ts: jnp.concatenate(
+                [g.reshape(nb * rpb, *g.shape[2:])] + [t[None] for t in ts], 0),
+            rec_lcs, *tail_lcs) if tail_lcs else jax.tree.map(
+            lambda g: g.reshape(nb * rpb, *g.shape[2:]), rec_lcs)
+        return logits, {"k": nk, "v": nv, "pos": pos_arr,
+                        "state": new_rec["state"], "conv": new_rec["conv"]}, prompt_lens
+
+    # ------------------------------------------------------------------
+    def decode_step(self, params: Params, tokens: jax.Array, cache: Dict,
+                    seq_lens: jax.Array) -> Tuple[jax.Array, Dict]:
+        c, r = self.cfg, self.cfg.rglru
+        B, T = tokens.shape
+        x = cm.embed(tokens, params["embed"])
+        x = shard(x, "data", None, None)
+        L = cache["pos"].shape[1]
+        positions = (seq_lens - 1)[:, None] + jnp.arange(T, dtype=jnp.int32)[None]
+        rows = positions % L
+        pos_arr = cache["pos"].at[jnp.arange(B)[:, None], rows].set(positions)
+
+        nb, rpb = self.n_full, self.rec_per_block
+        rec_groups = self._split(params["rec"], nb * rpb, rpb)
+        rec_stack = jax.tree.map(lambda *xs: jnp.stack(xs, 1), *rec_groups)
+        st_groups = self._split(cache["state"], nb * rpb, rpb)
+        st_stack = jax.tree.map(lambda *xs: jnp.stack(xs, 1), *st_groups)
+        cv_groups = self._split(cache["conv"], nb * rpb, rpb)
+        cv_stack = jax.tree.map(lambda *xs: jnp.stack(xs, 1), *cv_groups)
+
+        def rec_layer(h, lp, st, cv):
+            o, lc, ck = self._rec_step(lp, cm.rms_norm(h, lp["norm"], c.norm_eps), st, cv)
+            h = h + shard(o, "data", None, None)
+            return h + self._mlp(lp, h), lc, ck
+
+        def attn_layer(h, lp, lk, lv):
+            hn = cm.rms_norm(h, lp["norm"], c.norm_eps)
+            q = cm.apply_rope(jnp.einsum("btd,dhk->bthk", hn, lp["wq"]), positions, c.attn.rope_theta)
+            k = cm.apply_rope(jnp.einsum("btd,dhk->bthk", hn, lp["wk"]), positions, c.attn.rope_theta)
+            v = jnp.einsum("btd,dhk->bthk", hn, lp["wv"])
+            bidx = jnp.arange(B)[:, None]
+            nk = lk.at[bidx, rows].set(k.astype(lk.dtype))
+            nv = lv.at[bidx, rows].set(v.astype(lv.dtype))
+            mask = cm.position_mask(positions, pos_arr, r.window)
+            o = cm.gqa_attention(q, nk, nv, mask)
+            h = h + shard(jnp.einsum("bthk,hkd->btd", o, lp["wo"]), "data", None, None)
+            return h + self._mlp(lp, h), nk, nv
+
+        def superblock(h, xs):
+            rec_ps, attn_p, sts, cvs, lk, lv = xs
+            lcs, cks = [], []
+            for j in range(rpb):
+                h, lc, ck = rec_layer(h, jax.tree.map(lambda p, jj=j: p[jj], rec_ps),
+                                      sts[j], cvs[j])
+                lcs.append(lc); cks.append(ck)
+            h, nk, nv = attn_layer(h, attn_p, lk, lv)
+            stack = lambda seq: jax.tree.map(lambda *ys: jnp.stack(ys, 0), *seq)
+            return h, (stack(lcs), stack(cks), nk, nv)
+
+        x, (rec_lcs, rec_cks, nk, nv) = jax.lax.scan(
+            superblock, x,
+            (rec_stack, params["attn"], st_stack, cv_stack, cache["k"], cache["v"]))
+        tail_lcs, tail_cks = [], []
+        for t in range(self.n_tail):
+            i = nb * rpb + t
+            x, lc, ck = rec_layer(x, jax.tree.map(lambda p, ii=i: p[ii], params["rec"]),
+                                  cache["state"][i], cache["conv"][i])
+            tail_lcs.append(lc); tail_cks.append(ck)
+        x = cm.rms_norm(x, params["final_norm"], c.norm_eps)
+        logits = cm.unembed(x, params["unembed"], c.vocab_size)
+
+        def flatten(grouped, tails):
+            return jax.tree.map(
+                lambda g, *ts: jnp.concatenate(
+                    [g.reshape(self.n_rec - self.n_tail, *g.shape[2:])]
+                    + [tt[None] for tt in ts], 0),
+                grouped, *tails) if tails else jax.tree.map(
+                lambda g: g.reshape(self.n_rec, *g.shape[2:]), grouped)
+
+        new_rec = flatten(rec_lcs, tail_lcs)
+        cks = flatten(rec_cks, tail_cks)
+        out_cache = {
+            "k": nk, "v": nv, "pos": pos_arr,
+            "state": new_rec["state"], "conv": new_rec["conv"],
+            "state_ckpt": cks["state"],   # [n_rec,B,T,w]
+            "conv_ckpt": cks["conv"],     # [n_rec,B,T,K-1,w]
+        }
+        return logits, out_cache
+
+    @staticmethod
+    def commit(cache_out: Dict, accept_idx: jax.Array) -> Dict:
+        # one-hot masked sum over the s+1 checkpoint axis: GSPMD keeps it
+        # local, whereas the batched gather replicated + all-reduced the
+        # checkpoint stack (see mamba2.commit / EXPERIMENTS §Perf C2)
+        T = cache_out["state_ckpt"].shape[2]
+        onehot = (jnp.arange(T)[None] == accept_idx[:, None])    # [B, T]
+
+        def sel(a):  # a: [nR, B, T, ...]
+            oh = onehot.reshape(1, *onehot.shape,
+                                *([1] * (a.ndim - 3))).astype(a.dtype)
+            return (a * oh).sum(axis=2)
+
+        return {
+            "k": cache_out["k"], "v": cache_out["v"], "pos": cache_out["pos"],
+            "state": sel(cache_out["state_ckpt"]),
+            "conv": sel(cache_out["conv_ckpt"]),
+        }

@@ -1,0 +1,54 @@
+"""Ambient mesh context: lets model code place sharding constraints without
+threading the mesh through every call.  When no mesh is active (CPU tests),
+constraints are no-ops.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE: list = []
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    _ACTIVE.append(mesh)
+    try:
+        if mesh is not None:
+            with mesh:
+                yield mesh
+        else:
+            yield None
+    finally:
+        _ACTIVE.pop()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+def shard(x: jax.Array, *axes) -> jax.Array:
+    """Apply a sharding constraint if a mesh is active; drop axis names the
+    mesh does not have (lets the same model run single-pod and multi-pod)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+
+    def keep(a):
+        if a is None:
+            return None
+        if isinstance(a, (tuple, list)):
+            kept = tuple(x_ for x_ in a if x_ in mesh.axis_names)
+            return kept if kept else None
+        return a if a in mesh.axis_names else None
+
+    spec = P(*(keep(a) for a in axes))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(spec: P, mesh: Optional[Mesh] = None) -> Optional[NamedSharding]:
+    mesh = mesh or current_mesh()
+    return None if mesh is None else NamedSharding(mesh, spec)

@@ -1,0 +1,4 @@
+from repro.serving.request import BatchRecord, Request
+from repro.serving.server import EngineBackend, ServeResult, SimBackend, serve
+from repro.serving.traffic import (TrafficPhase, alternating_traffic,
+                                   make_requests, uniform_traffic)

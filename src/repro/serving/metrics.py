@@ -1,0 +1,55 @@
+"""Latency metrics & timeline grouping for the serving experiments."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.serving.request import Request
+from repro.serving.server import ServeResult
+
+
+@dataclass(frozen=True)
+class LatencySummary:
+    mean: float
+    p50: float
+    p90: float
+    p99: float
+    max: float
+    n: int
+
+    @staticmethod
+    def of(latencies: Sequence[float]) -> "LatencySummary":
+        a = np.asarray(latencies, dtype=np.float64)
+        return LatencySummary(
+            mean=float(a.mean()), p50=float(np.percentile(a, 50)),
+            p90=float(np.percentile(a, 90)), p99=float(np.percentile(a, 99)),
+            max=float(a.max()), n=len(a))
+
+
+def summarize(result: ServeResult) -> LatencySummary:
+    return LatencySummary.of(result.latencies)
+
+
+def timeline_groups(result: ServeResult, group: int = 40,
+                    ) -> List[Tuple[float, float]]:
+    """Fig. 6 view: (timestamp of first request in group, mean latency of the
+    group) for consecutive groups of ``group`` requests in arrival order."""
+    reqs = sorted(result.requests, key=lambda r: r.arrival)
+    out = []
+    for i in range(0, len(reqs) - group + 1, group):
+        chunk = reqs[i:i + group]
+        out.append((chunk[0].arrival, float(np.mean([r.latency for r in chunk]))))
+    return out
+
+
+def batch_size_histogram(result: ServeResult) -> Dict[int, int]:
+    h: Dict[int, int] = {}
+    for b in result.batches:
+        h[b.batch_size] = h.get(b.batch_size, 0) + 1
+    return h
+
+
+def speedup(base: ServeResult, new: ServeResult) -> float:
+    return base.mean_latency / new.mean_latency

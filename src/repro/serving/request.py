@@ -1,0 +1,50 @@
+"""Request / completion records for the serving layer (paper §5.3).
+
+Latency is measured exactly as the paper does: ``t_b - t_a`` where ``t_a`` is
+the client send time and ``t_b`` the time the server finishes the request —
+queueing time included.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    rid: int
+    arrival: float                 # t_a, seconds
+    tokens: np.ndarray             # [Tp] prompt token ids
+    prompt_len: int
+    max_new: int = 128
+    # filled in by the server
+    start: Optional[float] = None  # batch execution start
+    finish: Optional[float] = None # t_b
+
+    @property
+    def latency(self) -> float:
+        assert self.finish is not None
+        return self.finish - self.arrival
+
+    @property
+    def queue_wait(self) -> float:
+        assert self.start is not None
+        return self.start - self.arrival
+
+
+@dataclass
+class BatchRecord:
+    """One executed batch (for timelines and per-batch diagnostics)."""
+    start: float
+    duration: float
+    batch_size: int
+    s_used: int
+    tokens_generated: int
+    n_steps: int
+    rids: tuple = ()
+
+    @property
+    def per_token_latency(self) -> float:
+        return self.duration / max(self.tokens_generated, 1)

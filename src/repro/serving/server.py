@@ -1,0 +1,266 @@
+"""Server loop (paper §5.3): a message queue feeding a batched speculative
+decoding engine.
+
+Pending requests are merged into one batched request (up to ``max_batch``,
+16 in the paper), the controller picks the speculation length for that batch
+size, and the batch runs to completion before the next batch is formed.
+
+Two execution backends:
+
+  * :class:`EngineBackend` — drives a live
+    :class:`~repro.core.spec_decode.SpecDecodeEngine` and uses its wall-clock
+    time (the paper's setup, used by tests/examples at CPU-friendly scale);
+  * :class:`SimBackend` — discrete-event simulation from a fitted
+    :class:`~repro.core.analytical.LatencyModel` with stochastic acceptance,
+    so the 1000-request traffic studies (Figs. 5-6) run in milliseconds and
+    can be projected onto hardware we do not have.
+
+Both backends answer ``run_batch(requests, s) -> (duration_s, BatchRecord)``;
+the server's virtual clock advances by the returned duration, so the loop is
+deterministic and backend-agnostic.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.adaptive import AdaptiveController
+from repro.core.analytical import LatencyModel
+from repro.serving.request import BatchRecord, Request
+
+
+# ---------------------------------------------------------------------------
+# backends
+
+
+class EngineBackend:
+    """Wall-clock execution on a live SpecDecodeEngine.
+
+    Batches are padded to the next power of two so the engine's per-(B, s)
+    jit cache stays bounded (profiled sizes are powers of two anyway).
+    """
+
+    def __init__(self, engine, tparams, dparams, cache_len: int = 256):
+        self.engine = engine
+        self.tparams = tparams
+        self.dparams = dparams
+        self.cache_len = cache_len
+        self._warm = set()
+
+    @staticmethod
+    def _pad_pow2(b: int) -> int:
+        p = 1
+        while p < b:
+            p *= 2
+        return p
+
+    def run_batch(self, reqs: Sequence[Request], s: int) -> Tuple[float, BatchRecord]:
+        b = len(reqs)
+        B = self._pad_pow2(b)
+        tp = max(max(r.prompt_len for r in reqs), 4)
+        tokens = np.ones((B, tp), np.int32)
+        lens = np.full((B,), 4, np.int32)
+        for i, r in enumerate(reqs):
+            tokens[i, :r.prompt_len] = r.tokens
+            lens[i] = r.prompt_len
+        max_new = max(r.max_new for r in reqs)
+        # jit-warm this (B, prompt-shape, s) combination outside the timed
+        # region: serving latency is steady-state (the paper profiles before
+        # deployment; compile time must not contaminate scheme comparisons)
+        wkey = (B, tokens.shape[1], s)
+        if wkey not in self._warm:
+            state = self.engine.prefill(self.tparams, self.dparams, tokens,
+                                        lens, self.cache_len)
+            self.engine.step(self.tparams, self.dparams, state, s)
+            self._warm.add(wkey)
+        t0 = time.perf_counter()
+        out, stats, n_steps = self.engine.generate(
+            self.tparams, self.dparams, tokens, lens, s=s,
+            cache_len=self.cache_len, max_new=max_new, collect_stats=True)
+        dt = time.perf_counter() - t0
+        toks = b * max_new
+        return dt, BatchRecord(start=0.0, duration=dt, batch_size=b, s_used=s,
+                               tokens_generated=toks, n_steps=n_steps,
+                               rids=tuple(r.rid for r in reqs))
+
+
+def _match_prob(l_target: float, s: int) -> float:
+    """p such that the truncated-geometric expected run sum_{i=1..s} p^i
+    equals ``l_target`` (how SimBackend inverts the acceptance curve)."""
+    l_target = min(max(l_target, 0.0), s - 1e-9)
+    lo, hi = 0.0, 1.0 - 1e-12
+    for _ in range(60):
+        mid = 0.5 * (lo + hi)
+        val = sum(mid ** i for i in range(1, s + 1))
+        if val < l_target:
+            lo = mid
+        else:
+            hi = mid
+    return 0.5 * (lo + hi)
+
+
+class SimBackend:
+    """Discrete-event simulation of batched speculative decoding.
+
+    Per step at (b, s): duration t_L(b, s) + s * t_S(b, 1) from the latency
+    model; each live request independently accepts a truncated-geometric
+    number of drafts whose mean matches l(s), then commits a + 1 tokens.
+    """
+
+    def __init__(self, model: LatencyModel, seed: int = 0):
+        self.model = model
+        self.rng = np.random.default_rng(seed)
+        self._p_cache = {}
+
+    def _batch_key(self, b: int) -> int:
+        """Nearest profiled batch size >= b (clamped to the largest)."""
+        bs = self.model.batch_sizes
+        for x in bs:
+            if x >= b:
+                return x
+        return bs[-1]
+
+    def run_batch(self, reqs: Sequence[Request], s: int) -> Tuple[float, BatchRecord]:
+        b = len(reqs)
+        bk = self._batch_key(b)
+        step_t = self.model.t_verify(bk, s) + s * self.model.t_s[bk]
+        remaining = np.array([r.max_new for r in reqs], dtype=np.int64)
+        n_steps, toks = 0, 0
+        if s > 0:
+            key = s
+            if key not in self._p_cache:
+                self._p_cache[key] = _match_prob(self.model.l_of_s(s), s)
+            p = self._p_cache[key]
+        while remaining.max() > 0:
+            if s > 0:
+                # run length = leading accepted drafts, truncated geometric
+                u = self.rng.random((b, s))
+                accepted = (np.cumprod(u < p, axis=1)).sum(axis=1)
+            else:
+                accepted = np.zeros(b, dtype=np.int64)
+            commit = np.minimum(accepted + 1, np.maximum(remaining, 0))
+            commit = np.where(remaining > 0, commit, 0)
+            toks += int(commit.sum())
+            remaining -= commit
+            n_steps += 1
+        return n_steps * step_t, BatchRecord(
+            start=0.0, duration=n_steps * step_t, batch_size=b, s_used=s,
+            tokens_generated=toks, n_steps=n_steps,
+            rids=tuple(r.rid for r in reqs))
+
+
+# ---------------------------------------------------------------------------
+# the server
+
+
+@dataclass
+class ServeResult:
+    requests: List[Request]
+    batches: List[BatchRecord]
+
+    @property
+    def latencies(self) -> np.ndarray:
+        return np.array([r.latency for r in self.requests])
+
+    @property
+    def mean_latency(self) -> float:
+        return float(self.latencies.mean())
+
+
+def serve_continuous(requests: Sequence[Request], model: LatencyModel,
+                     controller: AdaptiveController, max_batch: int = 16,
+                     seed: int = 0) -> ServeResult:
+    """Iteration-level (Orca-style) continuous batching x speculation.
+
+    Beyond-paper: the paper's server runs each batch to completion (§5.3);
+    here requests JOIN and LEAVE the running batch at speculative-step
+    granularity, and the controller re-chooses s every iteration from the
+    *current* batch size — the finest-grained use of the adaptive LUT.
+    Simulation counterpart of :class:`SimBackend` (same latency model, same
+    stochastic acceptance), so the two scheduling policies are comparable
+    on identical traces.
+    """
+    rng = np.random.default_rng(seed)
+    pending = sorted(requests, key=lambda r: r.arrival)
+    active: List[Request] = []
+    remaining: Dict[int, int] = {}
+    clock, i, n = 0.0, 0, len(pending)
+    batches: List[BatchRecord] = []
+    done: List[Request] = []
+    p_cache: Dict[int, float] = {}
+    while len(done) < n:
+        # admit arrivals into free slots
+        while i < n and pending[i].arrival <= clock and len(active) < max_batch:
+            r = pending[i]
+            r.start = clock
+            active.append(r)
+            remaining[r.rid] = r.max_new
+            i += 1
+        if not active:
+            clock = pending[i].arrival
+            continue
+        b = len(active)
+        s = controller.choose(b)
+        bk = min((x for x in model.batch_sizes if x >= b),
+                 default=model.batch_sizes[-1])
+        step_t = model.t_verify(bk, s) + s * model.t_s[bk]
+        if s > 0:
+            if s not in p_cache:
+                p_cache[s] = _match_prob(model.l_of_s(s), s)
+            u = rng.random((b, s))
+            accepted = (np.cumprod(u < p_cache[s], axis=1)).sum(axis=1)
+        else:
+            accepted = np.zeros(b, dtype=np.int64)
+        clock += step_t
+        toks = 0
+        still: List[Request] = []
+        for r, a in zip(active, accepted):
+            c = int(min(a + 1, remaining[r.rid]))
+            remaining[r.rid] -= c
+            toks += c
+            if remaining[r.rid] <= 0:
+                r.finish = clock
+                done.append(r)
+            else:
+                still.append(r)
+        active = still
+        batches.append(BatchRecord(start=clock - step_t, duration=step_t,
+                                   batch_size=b, s_used=s,
+                                   tokens_generated=toks, n_steps=1))
+    return ServeResult(requests=list(pending), batches=batches)
+
+
+def serve(requests: Sequence[Request], backend, controller: AdaptiveController,
+          max_batch: int = 16) -> ServeResult:
+    """Run the paper's server loop over a pre-generated request trace.
+
+    The clock is virtual: it advances by each batch's execution duration (the
+    backend decides whether that duration is wall-clock or simulated), so the
+    same trace evaluates every comparison point reproducibly (§5.3:
+    "we generate only one sequence of requests, which is used to evaluate all
+    comparison points").
+    """
+    reqs = sorted(requests, key=lambda r: r.arrival)
+    clock = 0.0
+    i, n = 0, len(reqs)
+    batches: List[BatchRecord] = []
+    while i < n:
+        if reqs[i].arrival > clock:
+            clock = reqs[i].arrival           # idle until next arrival
+        j = i
+        while j < n and reqs[j].arrival <= clock and j - i < max_batch:
+            j += 1
+        batch = reqs[i:j]
+        s = controller.choose(len(batch))
+        duration, rec = backend.run_batch(batch, s)
+        rec.start = clock
+        for r in batch:
+            r.start = clock
+            r.finish = clock + duration
+        clock += duration
+        batches.append(rec)
+        i = j
+    return ServeResult(requests=list(reqs), batches=batches)

@@ -1,0 +1,7 @@
+from repro.training.checkpoint import restore, save
+from repro.training.data import DataConfig, batch_at, stream
+from repro.training.optimizer import (AdamWConfig, AdamWState, adamw_update,
+                                      init_adamw, lr_schedule)
+from repro.training.train_step import (cross_entropy, make_distill_step,
+                                       make_eval_step, make_loss_fn,
+                                       make_train_step)

@@ -1,0 +1,89 @@
+"""Checkpointing: flat-key npz of any parameter/optimizer pytree.
+
+No external deps (orbax is absent in this container); arrays are stored under
+their '/'-joined tree paths, the optimizer step as a scalar.  Restore maps
+into an existing template pytree so dtypes/structure are authoritative.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+Params = Any
+
+
+def _flatten(tree: Params, prefix: str = "") -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (tuple, list)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def save(path: str, params: Params, opt_state=None, step: Optional[int] = None,
+         ) -> None:
+    flat = {f"params/{k}": v for k, v in _flatten(params).items()}
+    if opt_state is not None:
+        flat.update({f"opt/m/{k}": v for k, v in _flatten(opt_state.m).items()})
+        flat.update({f"opt/v/{k}": v for k, v in _flatten(opt_state.v).items()})
+        flat["opt/step"] = np.asarray(opt_state.step)
+    if step is not None:
+        flat["meta/step"] = np.asarray(step)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    # atomic write: tmp + rename
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".", suffix=".tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **flat)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+
+
+def _unflatten_into(template: Params, flat: Dict[str, np.ndarray],
+                    prefix: str = "") -> Params:
+    if isinstance(template, dict):
+        return {k: _unflatten_into(v, flat, f"{prefix}{k}/")
+                for k, v in template.items()}
+    if isinstance(template, (tuple, list)):
+        vals = [_unflatten_into(v, flat, f"{prefix}{i}/")
+                for i, v in enumerate(template)]
+        return type(template)(vals)
+    key = prefix[:-1]
+    arr = flat[key]
+    t = template
+    assert tuple(arr.shape) == tuple(t.shape), f"{key}: {arr.shape} != {t.shape}"
+    return jax.numpy.asarray(arr, dtype=t.dtype)
+
+
+def restore(path: str, params_template: Params, opt_template=None,
+            ) -> Tuple[Params, Any, int]:
+    """Returns (params, opt_state | None, step)."""
+    with np.load(path) as z:
+        flat = {k: z[k] for k in z.files}
+    params = _unflatten_into(params_template,
+                             {k[len("params/"):]: v for k, v in flat.items()
+                              if k.startswith("params/")})
+    opt_state = None
+    if opt_template is not None and any(k.startswith("opt/") for k in flat):
+        from repro.training.optimizer import AdamWState
+        m = _unflatten_into(opt_template.m,
+                            {k[len("opt/m/"):]: v for k, v in flat.items()
+                             if k.startswith("opt/m/")})
+        v = _unflatten_into(opt_template.v,
+                            {k[len("opt/v/"):]: v for k, v in flat.items()
+                             if k.startswith("opt/v/")})
+        opt_state = AdamWState(step=jax.numpy.asarray(flat["opt/step"]), m=m, v=v)
+    step = int(flat.get("meta/step", flat.get("opt/step", np.asarray(0))))
+    return params, opt_state, step

@@ -1,0 +1,87 @@
+"""AdamW in pure JAX (pytree-native, shardable: optimizer state inherits the
+parameter PartitionSpecs, so m/v shard exactly like their parameters)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Params
+    v: Params
+
+
+def init_adamw(params: Params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros))
+
+
+def adamw_state_specs(param_specs: Params):
+    """Optimizer-state PartitionSpecs mirroring the parameter specs."""
+    from jax.sharding import PartitionSpec as P
+    return AdamWState(step=P(), m=param_specs, v=jax.tree.map(lambda s: s, param_specs))
+
+
+def lr_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_ratio * lr."""
+    step_f = step.astype(jnp.float32)
+    warm = jnp.minimum(step_f / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step_f - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    decay = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree: Params) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, grads: Params, state: AdamWState,
+                 params: Params) -> Tuple[Params, AdamWState, jax.Array]:
+    """One AdamW step with global-norm clipping; returns (params', state', gnorm)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+    b1t = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2t = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m_ = cfg.b1 * m + (1 - cfg.b1) * g
+        v_ = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh, vh = m_ / b1t, v_ / b2t
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m_, v_
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    new = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    params_ = treedef.unflatten([x[0] for x in new])
+    m_ = treedef.unflatten([x[1] for x in new])
+    v_ = treedef.unflatten([x[2] for x in new])
+    return params_, AdamWState(step=step, m=m_, v=v_), gnorm

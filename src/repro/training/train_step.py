@@ -1,0 +1,116 @@
+"""Training step: next-token cross-entropy + MoE aux loss, grads, AdamW.
+
+Used three ways:
+  * CPU smoke tests (one step on reduced configs; finiteness + shape asserts);
+  * the draft-distillation example (the paper's SSM must mimic the target);
+  * the ``train_4k`` dry-run shape (lower + compile on the production mesh).
+
+The loss recomputes activations through the model's scanned layers;
+``jax.checkpoint`` around the model forward gives the standard remat-per-layer
+policy (scan carries only layer boundaries, each recomputed on the backward
+pass), which is what makes train_4k fit at 48-60 layers.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.training.optimizer import AdamWConfig, AdamWState, adamw_update
+
+Params = Any
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token NLL. logits [B,T,V] fp32; labels [B,T] int32."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def make_loss_fn(model, cfg: ModelConfig, remat: bool = True,
+                 extra_keys: Tuple[str, ...] = ()):
+    """loss(params, batch) -> (loss, metrics).  batch: tokens [B,T+1] plus
+    optional modality extras (src_embeds / prefix_embeds)."""
+
+    # NOTE: rematerialization is owned by the models themselves — every
+    # family jax.checkpoint's its scanned layer body (remat-per-layer), which
+    # is the policy that makes train_4k fit at 48-60 layers.  The ``remat``
+    # flag is kept for API stability but adds no outer wrapper (an outer
+    # checkpoint around the whole forward would *not* bound scan residuals).
+    def fwd(params, inputs, kw):
+        return model.forward(params, inputs, **kw)
+
+    def loss_fn(params, batch: Dict[str, jax.Array]):
+        tokens = batch["tokens"]
+        inputs = tokens[:, :-1]
+        labels = batch.get("labels", tokens[:, 1:])
+        kw = {k: batch[k] for k in extra_keys if k in batch}
+        logits, aux = fwd(params, inputs, kw)
+        # modality-prefix positions (vlm) predict nothing: slice them off
+        if logits.shape[1] != inputs.shape[1]:
+            logits = logits[:, logits.shape[1] - inputs.shape[1]:]
+        ce = cross_entropy(logits, labels, batch.get("mask"))
+        loss = ce + aux
+        return loss, {"loss": loss, "ce": ce, "aux": aux}
+
+    return loss_fn
+
+
+def make_train_step(model, cfg: ModelConfig, opt: AdamWConfig,
+                    remat: bool = True, extra_keys: Tuple[str, ...] = ()):
+    """Returns train_step(params, opt_state, batch) -> (params', opt_state',
+    metrics).  Pure; jit/pjit it at the call site with the right shardings."""
+    loss_fn = make_loss_fn(model, cfg, remat, extra_keys)
+
+    def train_step(params: Params, opt_state: AdamWState, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        params, opt_state, gnorm = adamw_update(opt, grads, opt_state, params)
+        metrics = dict(metrics, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model, cfg: ModelConfig, extra_keys: Tuple[str, ...] = ()):
+    loss_fn = make_loss_fn(model, cfg, remat=False, extra_keys=extra_keys)
+
+    def eval_step(params, batch):
+        _, metrics = loss_fn(params, batch)
+        return metrics
+
+    return eval_step
+
+
+# ---------------------------------------------------------------------------
+# draft distillation (beyond-paper utility): train the SSM on the target's
+# greedy outputs so l(s) is non-trivial on synthetic data.
+
+
+def make_distill_step(draft_model, cfg: ModelConfig, opt: AdamWConfig,
+                      temperature: float = 1.0):
+    """Distill target logits into the draft: KL(target || draft) on the same
+    token stream.  batch: {tokens [B,T+1], teacher_logits [B,T,V]}."""
+
+    def loss_fn(params, batch):
+        inputs = batch["tokens"][:, :-1]
+        logits, _ = draft_model.forward(params, inputs)
+        t = jax.nn.log_softmax(batch["teacher_logits"] / temperature, axis=-1)
+        d = jax.nn.log_softmax(logits[..., :batch["teacher_logits"].shape[-1]], axis=-1)
+        kl = jnp.sum(jnp.exp(t) * (t - d), axis=-1).mean()
+        return kl, {"kl": kl}
+
+    def step(params, opt_state, batch):
+        (kl, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        params, opt_state, gnorm = adamw_update(opt, grads, opt_state, params)
+        return params, opt_state, dict(metrics, grad_norm=gnorm)
+
+    return step

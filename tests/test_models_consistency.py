@@ -1,0 +1,133 @@
+"""Cache-consistency invariants: for every architecture family, incremental
+decoding through the (ring-buffer / recurrent-state) cache must reproduce the
+full-sequence forward logits at the same positions.  This is the substrate
+invariant speculative verification relies on.
+
+Engine convention (uniform across attention and recurrent families):
+after prefill of a p-token prompt the model state covers positions
+0..p-2 (prefill feeds p-1 tokens), n = p tokens are committed, and every
+decode step feeds [t_{n-1}, ...] — so recurrent states never double-apply
+a token and attention caches satisfy "holds rows 0..n-2".
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry as R
+
+ARCHS = R.ASSIGNED + ["opt-6.7b"]
+
+
+def _inputs(cfg, B, seed=0):
+    kw = {}
+    if cfg.family in ("encdec", "audio"):
+        kw["src_embeds"] = jax.random.normal(jax.random.PRNGKey(seed + 7),
+                                             (B, 12, cfg.d_model)) * 0.1
+    elif cfg.family == "vlm":
+        kw["prefix_embeds"] = jax.random.normal(jax.random.PRNGKey(seed + 7),
+                                                (B, cfg.prefix_len, cfg.d_model)) * 0.1
+    return kw
+
+
+def _setup(arch, B=2, T=24):
+    cfg = R.get_smoke_config(arch)
+    model = R.build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), jnp.float32)
+    tokens = np.array(jax.random.randint(jax.random.PRNGKey(1), (B, T), 0, cfg.vocab_size))
+    return cfg, model, params, tokens
+
+
+def prefill_committed(cfg, model, params, tokens, p, kw, cache_len=64):
+    """Prefill the first p tokens under the engine convention; returns
+    (cache, seq_lens) with seq_lens = committed count (incl. any prefix)."""
+    feed = jnp.asarray(tokens[:, :p - 1])
+    if cfg.family in ("encdec", "audio"):
+        cache = model.init_cache(tokens.shape[0], cache_len=cache_len,
+                                 src_len=kw["src_embeds"].shape[1])
+        _, cache, total = model.prefill(params, feed, cache, src_embeds=kw["src_embeds"])
+    elif cfg.family == "ssm":
+        cache = model.init_cache(tokens.shape[0])
+        _, cache, total = model.prefill(params, feed, cache)
+    elif cfg.family == "vlm":
+        cache = model.init_cache(tokens.shape[0], cache_len=cache_len)
+        _, cache, total = model.prefill(params, feed, cache,
+                                        prefix_embeds=kw["prefix_embeds"])
+    else:
+        cache = model.init_cache(tokens.shape[0], cache_len=cache_len)
+        _, cache, total = model.prefill(params, feed, cache)
+    return cache, total + 1
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch):
+    """prefill(prompt) then decode_step(rest) must equal forward() logits."""
+    B, T, p = 2, 24, 9
+    cfg, model, params, tokens = _setup(arch, B, T)
+    kw = _inputs(cfg, B)
+    full_logits, _ = model.forward(params, jnp.asarray(tokens), **kw)
+    prefix = cfg.prefix_len if (cfg.family == "vlm") else 0
+
+    cache, seq_lens = prefill_committed(cfg, model, params, tokens, p, kw)
+    # feed [t_{p-1}, t_p, ..., t_{T-2}] -> logits for positions p-1 .. T-2
+    feed = jnp.asarray(tokens[:, p - 1:T - 1])
+    logits, _ = model.decode_step(params, feed, cache, seq_lens)
+    want = full_logits[:, prefix + p - 1: prefix + T - 1]
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ["yi-9b", "mamba2-1.3b", "recurrentgemma-2b",
+                                  "deepseek-v2-236b", "seamless-m4t-large-v2",
+                                  "paligemma-3b"])
+def test_stepwise_decode_matches_block_decode(arch):
+    """Token-by-token decoding (with per-step commit) equals one multi-token
+    decode step — the rollback/checkpoint machinery is exact."""
+    B, T, p = 2, 20, 8
+    cfg, model, params, tokens = _setup(arch, B, T)
+    kw = _inputs(cfg, B)
+
+    cache, seq_lens = prefill_committed(cfg, model, params, tokens, p, kw)
+    feed = jnp.asarray(tokens[:, p - 1:T - 1])
+    block_logits, _ = model.decode_step(params, feed, cache, seq_lens)
+
+    cache, seq_lens = prefill_committed(cfg, model, params, tokens, p, kw)
+    outs = []
+    for i in range(feed.shape[1]):
+        logits, cache_out = model.decode_step(params, feed[:, i:i + 1], cache, seq_lens)
+        outs.append(np.asarray(logits[:, 0]))
+        cache = model.commit(cache_out, jnp.zeros((B,), jnp.int32))
+        seq_lens = seq_lens + 1
+    np.testing.assert_allclose(np.stack(outs, 1), np.asarray(block_logits),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ["yi-9b", "mamba2-1.3b", "recurrentgemma-2b"])
+def test_commit_rollback_exact(arch):
+    """Decode s+1 positions, roll back to an interior acceptance point, and
+    check subsequent decoding matches having never speculated at all."""
+    B, T, p, s = 2, 22, 8, 4
+    cfg, model, params, tokens = _setup(arch, B, T)
+    kw = _inputs(cfg, B)
+
+    # speculate with junk drafts, accept a=1 (commit t_{p}), roll back
+    cache, seq_lens = prefill_committed(cfg, model, params, tokens, p, kw)
+    junk = np.array(tokens[:, p - 1:p + s])        # [B, s+1]
+    junk[:, 2:] = (junk[:, 2:] + 1) % cfg.vocab_size  # corrupt drafts after idx 1
+    _, cache_out = model.decode_step(params, jnp.asarray(junk), cache, seq_lens)
+    accept = jnp.ones((B,), jnp.int32)             # a = 1 accepted draft
+    cache = model.commit(cache_out, accept)
+    seq_lens = seq_lens + 2                        # a + 1 committed
+
+    # reference: never speculated, decoded the same committed tokens stepwise
+    cache_ref, seq_ref = prefill_committed(cfg, model, params, tokens, p, kw)
+    for i in range(2):
+        _, co = model.decode_step(params, jnp.asarray(tokens[:, p - 1 + i:p + i]),
+                                  cache_ref, seq_ref)
+        cache_ref = model.commit(co, jnp.zeros((B,), jnp.int32))
+        seq_ref = seq_ref + 1
+
+    feed = jnp.asarray(tokens[:, p + 1:T - 1])
+    got, _ = model.decode_step(params, feed, cache, seq_lens)
+    want, _ = model.decode_step(params, feed, cache_ref, seq_ref)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3)

@@ -1,0 +1,159 @@
+"""Serving layer: traffic statistics, server-loop queueing invariants,
+simulation determinism, metrics."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.adaptive import AdaptiveController, SpeculationLUT, fixed_controller
+from repro.core.analytical import LatencyModel
+from repro.serving.metrics import batch_size_histogram, summarize, timeline_groups
+from repro.serving.server import SimBackend, _match_prob, serve
+from repro.serving.traffic import (TrafficPhase, alternating_traffic,
+                                   arrival_times, gamma_intervals,
+                                   uniform_traffic)
+
+
+def _model(batches=(1, 2, 4, 8, 16, 32)):
+    return LatencyModel(alpha={b: 1e-4 * b ** 0.8 for b in batches},
+                        beta={b: 5e-3 for b in batches},
+                        t_s={b: 2e-4 for b in batches}, c=0.9, gamma=0.548)
+
+
+# ---------------------------------------------------------------------------
+# traffic
+
+
+@given(st.floats(0.05, 2.0), st.sampled_from([0.5, 1.0, 2.0, 5.0]))
+@settings(max_examples=12, deadline=None)
+def test_gamma_interval_statistics(mean, cv):
+    rng = np.random.default_rng(0)
+    x = gamma_intervals(40_000, mean, cv, rng)
+    assert abs(x.mean() - mean) / mean < 0.05
+    assert abs(x.std() / x.mean() - cv) / cv < 0.05
+
+
+def test_arrival_times_monotone_and_phased():
+    rng = np.random.default_rng(1)
+    at = arrival_times(500, [TrafficPhase(0.1, 1.0, 10.0),
+                             TrafficPhase(1.0, 1.0, 10.0)], rng)
+    assert (np.diff(at) >= 0).all()
+    # intense phases should pack more arrivals per unit time
+    in_first = ((at % 20) < 10).sum()
+    assert in_first > 0.7 * 500 * (10 / (10 + 1)) * 0.5  # loose sanity
+
+
+def test_alternating_traffic_request_fields():
+    reqs = alternating_traffic(50, vocab=100, seed=0)
+    assert len(reqs) == 50
+    assert all(r.prompt_len == len(r.tokens) for r in reqs)
+    assert all(reqs[i].arrival <= reqs[i + 1].arrival for i in range(49))
+
+
+# ---------------------------------------------------------------------------
+# simulation backend
+
+
+def test_match_prob_inverts_expected_run():
+    for s in (2, 4, 8):
+        for l_target in (0.3, 1.0, min(2.5, s - 0.2)):
+            p = _match_prob(l_target, s)
+            got = sum(p ** i for i in range(1, s + 1))
+            assert abs(got - l_target) < 1e-6
+
+
+def test_sim_backend_deterministic():
+    m = _model()
+    reqs = uniform_traffic(40, 0.01, 1.0, 100, seed=3, max_new=32)
+    r1 = serve([r for r in reqs], SimBackend(m, seed=9), fixed_controller(4))
+    reqs2 = uniform_traffic(40, 0.01, 1.0, 100, seed=3, max_new=32)
+    r2 = serve([r for r in reqs2], SimBackend(m, seed=9), fixed_controller(4))
+    np.testing.assert_allclose(r1.latencies, r2.latencies)
+
+
+def test_sim_backend_step_accounting():
+    m = _model()
+    be = SimBackend(m, seed=0)
+    reqs = uniform_traffic(8, 0.0, 1.0, 100, seed=0, max_new=16)
+    dur, rec = be.run_batch(reqs, s=4)
+    assert rec.tokens_generated == 8 * 16
+    # duration = n_steps * (t_L + s * t_S) exactly
+    step_t = m.t_verify(8, 4) + 4 * m.t_s[8]
+    assert abs(dur - rec.n_steps * step_t) < 1e-12
+    # speculation needs fewer steps than no-spec
+    dur0, rec0 = SimBackend(m, seed=0).run_batch(reqs, s=0)
+    assert rec0.n_steps == 16 and rec.n_steps < 16
+
+
+# ---------------------------------------------------------------------------
+# server loop invariants
+
+
+def test_server_queueing_invariants():
+    m = _model()
+    reqs = uniform_traffic(60, 0.002, 2.0, 100, seed=5, max_new=32)
+    res = serve(reqs, SimBackend(m, seed=1), fixed_controller(2), max_batch=16)
+    assert all(r.finish is not None for r in res.requests)
+    for r in res.requests:
+        assert r.start >= r.arrival - 1e-12          # no time travel
+        assert r.finish > r.start
+    assert all(b.batch_size <= 16 for b in res.batches)
+    # batches execute back-to-back or after an idle gap, never overlapping
+    starts = sorted((b.start, b.duration) for b in res.batches)
+    for (s1, d1), (s2, _) in zip(starts, starts[1:]):
+        assert s2 >= s1 + d1 - 1e-9
+    # FIFO: requests are served in arrival order
+    order = [r.rid for r in sorted(res.requests, key=lambda r: (r.start, r.arrival))]
+    assert order == sorted(order, key=lambda rid: res.requests[rid].arrival)
+
+
+def test_adaptive_not_worse_than_fixed_in_simulation():
+    """End-to-end paper claim at simulation level: adaptive <= best fixed."""
+    m = _model()
+    from repro.core.adaptive import lut_from_model
+    lut = lut_from_model(m, s_max=8)
+    means = {}
+    for name, ctrl in {
+        "s0": fixed_controller(0), "s2": fixed_controller(2),
+        "s4": fixed_controller(4), "ad": AdaptiveController(lut=lut),
+    }.items():
+        tot = 0.0
+        for interval in (0.001, 0.01, 0.05):
+            reqs = uniform_traffic(150, interval, 1.0, 100, seed=7, max_new=64)
+            res = serve(reqs, SimBackend(m, seed=2), ctrl, max_batch=16)
+            tot += res.mean_latency
+        means[name] = tot
+    assert means["ad"] <= min(means["s2"], means["s4"]) * 1.02
+    assert means["ad"] < means["s0"]
+
+
+def test_metrics_shapes():
+    m = _model()
+    reqs = uniform_traffic(80, 0.01, 1.0, 100, seed=8, max_new=16)
+    res = serve(reqs, SimBackend(m, seed=0), fixed_controller(2))
+    s = summarize(res)
+    assert s.n == 80 and s.p50 <= s.p90 <= s.p99 <= s.max
+    tl = timeline_groups(res, group=40)
+    assert len(tl) == 2
+    hist = batch_size_histogram(res)
+    assert sum(k * v for k, v in hist.items()) == 80
+
+
+def test_continuous_batching_invariants_and_wins_under_load():
+    """Iteration-level scheduling must preserve per-request semantics and
+    beat run-to-completion at mixed arrival times (beyond-paper fig7)."""
+    from repro.serving.server import serve_continuous
+    from repro.core.adaptive import lut_from_model
+    m = _model()
+    lut = lut_from_model(m, s_max=8)
+    ctrl = AdaptiveController(lut=lut)
+    reqs = uniform_traffic(120, 0.01, 2.0, 100, seed=4, max_new=48)
+    res_c = serve_continuous(reqs, m, ctrl, max_batch=16, seed=1)
+    assert all(r.finish is not None and r.finish > r.arrival
+               for r in res_c.requests)
+    total_tokens = sum(b.tokens_generated for b in res_c.batches)
+    assert total_tokens == 120 * 48                      # every token served
+    assert max(b.batch_size for b in res_c.batches) <= 16
+    reqs2 = uniform_traffic(120, 0.01, 2.0, 100, seed=4, max_new=48)
+    res_r = serve(reqs2, SimBackend(m, seed=1), ctrl, max_batch=16)
+    # head-of-line blocking makes run-to-completion strictly worse here
+    assert res_c.mean_latency < res_r.mean_latency

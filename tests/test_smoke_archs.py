@@ -1,0 +1,125 @@
+"""Per-architecture smoke tests (deliverable f): every assigned architecture
+instantiates a REDUCED same-family variant and runs one forward + one train
+step on CPU, asserting output shapes and finiteness.  Full configs are
+exercised only via the allocation-free dry-run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry as R
+from repro.configs.base import SHAPES, param_count
+from repro.training import AdamWConfig, init_adamw, make_train_step
+
+ARCHS = R.ASSIGNED
+
+
+def _batch(cfg, B=2, T=16, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, T + 1)),
+                                   jnp.int32)}
+    extra = ()
+    if cfg.family in ("encdec", "audio"):
+        batch["src_embeds"] = jnp.asarray(rng.normal(size=(B, 8, cfg.d_model)) * 0.1,
+                                          jnp.float32)
+        extra = ("src_embeds",)
+    elif cfg.family == "vlm":
+        batch["prefix_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.prefix_len, cfg.d_model)) * 0.1, jnp.float32)
+        extra = ("prefix_embeds",)
+    return batch, extra
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_config_limits(arch):
+    cfg = R.get_smoke_config(arch)
+    assert cfg.n_layers <= 2 and cfg.d_model <= 512
+    if cfg.moe is not None:
+        assert cfg.moe.n_experts <= 4
+    full = R.get_config(arch)
+    assert full.family == cfg.family
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = R.get_smoke_config(arch)
+    model = R.build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, T = 2, 16
+    batch, _ = _batch(cfg, B, T)
+    kw = {k: v for k, v in batch.items() if k != "tokens"}
+    logits, aux = model.forward(params, batch["tokens"][:, :-1], **kw)
+    expect_t = T + (cfg.prefix_len if cfg.family == "vlm" else 0)
+    assert logits.shape == (B, expect_t, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step_no_nans(arch):
+    cfg = R.get_smoke_config(arch)
+    model = R.build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    state = init_adamw(params)
+    batch, extra = _batch(cfg, 2, 16)
+    step = jax.jit(make_train_step(model, cfg, opt, extra_keys=extra))
+    params2, state2, m = step(params, state, batch)
+    assert np.isfinite(float(m["loss"])) and np.isfinite(float(m["grad_norm"]))
+    assert int(state2.step) == 1
+    # every parameter stays finite and at least one changed
+    leaves = jax.tree.leaves(params2)
+    assert all(np.isfinite(np.asarray(x)).all() for x in leaves)
+    changed = any(not np.array_equal(np.asarray(a), np.asarray(b))
+                  for a, b in zip(jax.tree.leaves(params), leaves))
+    assert changed
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The full config must carry the exact assigned numbers."""
+    cfg = R.get_config(arch)
+    expect = {
+        "qwen3-moe-30b-a3b": dict(n_layers=48, d_model=2048, vocab_size=151936),
+        "yi-9b": dict(n_layers=48, d_model=4096, d_ff=11008, vocab_size=64000),
+        "seamless-m4t-large-v2": dict(n_layers=24, d_model=1024, d_ff=8192,
+                                      vocab_size=256206),
+        "paligemma-3b": dict(n_layers=18, d_model=2048, d_ff=16384,
+                             vocab_size=257216),
+        "mamba2-1.3b": dict(n_layers=48, d_model=2048, vocab_size=50280),
+        "qwen3-8b": dict(n_layers=36, d_model=4096, d_ff=12288, vocab_size=151936),
+        "recurrentgemma-2b": dict(n_layers=26, d_model=2560, d_ff=7680,
+                                  vocab_size=256000),
+        "deepseek-v2-236b": dict(n_layers=60, d_model=5120, vocab_size=102400),
+        "yi-34b": dict(n_layers=60, d_model=7168, d_ff=20480, vocab_size=64000),
+        "internlm2-1.8b": dict(n_layers=24, d_model=2048, d_ff=8192,
+                               vocab_size=92544),
+    }[arch]
+    for k, v in expect.items():
+        assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+    if arch == "qwen3-moe-30b-a3b":
+        assert cfg.moe.n_experts == 128 and cfg.moe.top_k == 8
+    if arch == "deepseek-v2-236b":
+        assert cfg.moe.n_experts == 160 and cfg.moe.top_k == 6
+        assert cfg.attn.kv_lora_rank == 512 and cfg.moe.n_shared == 2
+    if arch == "mamba2-1.3b":
+        assert cfg.ssm.d_state == 128
+    # parameter count lands in the right ballpark of the model's name
+    n = param_count(cfg)
+    expected_scale = {
+        "qwen3-moe-30b-a3b": 30e9, "yi-9b": 9e9, "seamless-m4t-large-v2": 2.3e9,
+        "paligemma-3b": 2.6e9, "mamba2-1.3b": 1.3e9, "qwen3-8b": 8e9,
+        "recurrentgemma-2b": 2.6e9, "deepseek-v2-236b": 236e9, "yi-34b": 34e9,
+        "internlm2-1.8b": 1.8e9,
+    }[arch]
+    assert 0.45 * expected_scale < n < 1.9 * expected_scale, (arch, n)
+
+
+def test_input_specs_cover_every_pair():
+    from repro.launch.specs import input_specs
+    for arch in ARCHS:
+        for shape in SHAPES:
+            specs = input_specs(arch, shape)
+            assert specs, (arch, shape)
+            for k, v in specs.items():
+                assert all(int(d) > 0 for d in v.shape), (arch, shape, k)

@@ -1,0 +1,99 @@
+"""Stochastic speculative sampling (Leviathan/Chen-style, beyond-paper).
+
+The load-bearing property: for ANY draft, the tokens produced by
+speculative sampling are distributed EXACTLY as sampling from the target
+alone.  We verify it empirically on a tiny model with a small vocab by
+comparing the first-token distribution across many seeded runs against the
+target's softmax, plus structural invariants (acceptance bounds, perfect
+acceptance when draft == target).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry as R
+from repro.core.spec_decode import SpecDecodeEngine
+
+VOCAB_SMALL = 512
+
+
+def _setup(sample=True, temperature=1.0, draft_same=False):
+    tcfg = R.get_smoke_config("yi-9b")
+    if draft_same:
+        dcfg = tcfg
+    else:
+        dcfg = dataclasses.replace(R.get_smoke_config("internlm2-1.8b"),
+                                   vocab_size=tcfg.vocab_size)
+    eng = SpecDecodeEngine(tcfg, dcfg, max_new=8, sample=sample,
+                           temperature=temperature)
+    tp = eng.target.init(jax.random.PRNGKey(0))
+    dp = tp if draft_same else eng.draft.init(jax.random.PRNGKey(1))
+    return eng, tp, dp, tcfg
+
+
+def test_draft_equals_target_accepts_everything():
+    eng, tp, dp, tcfg = _setup(draft_same=True)
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, tcfg.vocab_size, (2, 8)).astype(np.int32)
+    lens = np.full((2,), 8, np.int32)
+    state = eng.prefill(tp, dp, toks, lens, 64)
+    for i in range(3):
+        state, st = eng.step(tp, dp, state, 4, rng=jax.random.PRNGKey(i))
+        live = ~np.asarray(state.done)
+        # p == q for every draft token -> acceptance prob 1 -> a == s
+        assert (st.accepted[:2] == 4).all() or not live.any()
+
+
+def test_acceptance_bounds_hold_when_sampling():
+    eng, tp, dp, tcfg = _setup()
+    rng = np.random.default_rng(1)
+    toks = rng.integers(0, tcfg.vocab_size, (3, 8)).astype(np.int32)
+    lens = np.full((3,), 8, np.int32)
+    state = eng.prefill(tp, dp, toks, lens, 64)
+    for i in range(3):
+        state, st = eng.step(tp, dp, state, 5, rng=jax.random.PRNGKey(10 + i))
+        assert (st.accepted >= 0).all() and (st.accepted <= 5).all()
+        assert (st.committed <= st.accepted + 1).all()
+
+
+def test_first_token_distribution_matches_target():
+    """Chi-square-style check: empirical first-token frequencies from
+    speculative sampling match the target's softmax at the prompt tip."""
+    eng, tp, dp, tcfg = _setup()
+    rng = np.random.default_rng(2)
+    toks = rng.integers(0, tcfg.vocab_size, (1, 8)).astype(np.int32)
+    lens = np.full((1,), 8, np.int32)
+
+    # target distribution at the next position
+    m = eng.target
+    cache = m.init_cache(1, 64)
+    logits, _, _ = m.prefill(tp, jnp.asarray(toks), cache,
+                             prompt_lens=jnp.asarray(lens) - 1)
+    p = np.asarray(jax.nn.softmax(logits[0]))
+
+    N = 600
+    counts = np.zeros(tcfg.vocab_size)
+    state0 = eng.prefill(tp, dp, toks, lens, 64)
+    for i in range(N):
+        st, _ = eng.step(tp, dp, state0, 3, rng=jax.random.PRNGKey(1000 + i))
+        first = int(np.asarray(st.out)[0, 0])
+        counts[first] += 1
+    emp = counts / N
+    # compare on the top-probability support (rare tokens are noise-limited)
+    top = np.argsort(p)[::-1][:20]
+    tv_top = 0.5 * np.abs(emp[top] - p[top]).sum()
+    assert tv_top < 0.12, (tv_top, p[top][:5], emp[top][:5])
+
+
+def test_greedy_mode_unaffected():
+    """sample=False path must be byte-identical to before (golden)."""
+    eng_g, tp, dp, tcfg = _setup(sample=False)
+    rng = np.random.default_rng(3)
+    toks = rng.integers(0, tcfg.vocab_size, (2, 8)).astype(np.int32)
+    lens = np.full((2,), 8, np.int32)
+    ref, _, _ = eng_g.generate(tp, dp, toks, lens, s=0, cache_len=64)
+    spec, _, _ = eng_g.generate(tp, dp, toks, lens, s=3, cache_len=64)
+    np.testing.assert_array_equal(ref, spec)

@@ -1,0 +1,198 @@
+"""§Perf hillclimb driver: run named (arch, shape, lever) experiments through
+the production dry-run and record before/after roofline terms.
+
+  PYTHONPATH=src python tools/hillclimb.py <experiment> [...]
+  PYTHONPATH=src python tools/hillclimb.py --list
+
+Each experiment re-runs launch/dryrun.run_one with a lever (sharding-rule
+override, config transform, spec length) on the single-pod mesh and writes
+results/perf/<name>.json.  Baselines are the untouched results/dryrun/
+records.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+import dataclasses
+import json
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import dryrun as D
+
+
+def moe_gather(cfg):
+    return cfg.with_(moe=dataclasses.replace(cfg.moe, dispatch="gather"))
+
+
+def draft_window(w):
+    return {"draft_rules_overrides": None}  # placeholder, see below
+
+
+EXPERIMENTS = {
+    # ---- pair A: qwen3-moe-30b-a3b x decode_32k (paper-representative) ----
+    "A1_qwen3moe_gather_dispatch": dict(
+        arch="qwen3-moe-30b-a3b", shape="decode_32k",
+        plan_kw={"transform": moe_gather},
+        hypothesis="one-hot dispatch/combine einsums cost 2.6e12 flops/step "
+                   "(> the experts' own 2.3e12); sort-based gather dispatch "
+                   "removes them -> compute term -40%"),
+    "A2_qwen3moe_higher_s": dict(
+        arch="qwen3-moe-30b-a3b", shape="decode_32k",
+        plan_kw={"transform": moe_gather, "s": 8},
+        hypothesis="memory term is weight+cache streaming amortized over "
+                   "committed tokens; s=8 doubles verified tokens per sweep "
+                   "-> per-TOKEN memory cost drops ~2x if acceptance holds"),
+    "A3_qwen3moe_kv_int8": dict(
+        arch="qwen3-moe-30b-a3b", shape="decode_32k",
+        plan_kw={"transform": lambda cfg: cfg.with_(
+            kv_quant=True, moe=dataclasses.replace(cfg.moe, dispatch="gather"))},
+        hypothesis="the 412 GB/step KV-cache sweep is 67% of the memory term "
+                   "(weights only 61 GB); int8 cache with per-row scales "
+                   "halves it -> memory term -33%, still correct decode "
+                   "(golden invariant holds; logits err ~5e-3)"),
+    # ---- pair B: deepseek-v2-236b x decode_32k (capacity + MLA) ----
+    "B1_deepseek_expert_fsdp": dict(
+        arch="deepseek-v2-236b", shape="decode_32k",
+        plan_kw={"rules_overrides": {"expert_ff": "data"}},
+        hypothesis="routed-expert weights (29.5 GiB/dev) are replicated "
+                   "across the data axis and blow the 16 GiB HBM budget; "
+                   "sharding d_ff_expert over data=16 cuts weight residency "
+                   "~16x while moving only activation-sized collectives"),
+    "B2_deepseek_fsdp_plus_gather": dict(
+        arch="deepseek-v2-236b", shape="decode_32k",
+        plan_kw={"rules_overrides": {"expert_ff": "data"},
+                 "transform": moe_gather},
+        hypothesis="B1 + A1 compose: dispatch einsums are 6e12 flops here"),
+    "B3_deepseek_train_fsdp": dict(
+        arch="deepseek-v2-236b", shape="train_4k",
+        plan_kw={"rules_overrides": {"expert_ff": "data"}},
+        hypothesis="train_4k args are 144 GiB/dev (fp32 AdamW m/v of 236B "
+                   "params replicated over data); expert-ff FSDP shards the "
+                   "dominant expert m/v 16x more -> ~9x smaller residency, "
+                   "gradient all-reduce unchanged (it becomes reduce-scatter "
+                   "sized by the sharded dim)"),
+    "B4_deepseek_train_full_zero3": dict(
+        arch="deepseek-v2-236b", shape="train_4k",
+        plan_kw={"rules_overrides": {"expert_ff": "data", "d_model": "data"}},
+        hypothesis="B3 leaves 20.5 GiB/dev (dense attention/MLA params + "
+                   "their fp32 m/v still replicated over data); sharding "
+                   "d_model over data = full ZeRO-3 -> under the 16 GiB "
+                   "budget, at the cost of per-layer weight all-gathers "
+                   "(acceptable at train arithmetic intensity)"),
+    "C3_mamba2_higher_s": dict(
+        arch="mamba2-1.3b", shape="decode_32k",
+        plan_kw={"s": 8},
+        hypothesis="after the commit fix the SSM decode is memory-bound on "
+                   "WEIGHT streaming (2.9 GB/step, no big cache to sweep); "
+                   "s=8 amortizes the same sweep over ~30% more committed "
+                   "tokens (l sublinear) -> per-token memory down, and "
+                   "checkpoint traffic (state x s+1) is the only cost"),
+    "C4_mamba2_cheap_draft": dict(
+        arch="mamba2-1.3b", shape="decode_32k",
+        plan_kw={"draft_transform": lambda d: d.with_(
+            kv_quant=True,
+            attn=__import__("dataclasses").replace(d.attn, window=1024))},
+        hypothesis="C3 refuted because draft streaming (18 GB/step, 53% of "
+                   "the sweep growth) outpaces sublinear acceptance; int8 + "
+                   "1k window on the draft cuts its cache sweep ~8x, making "
+                   "the target weights the true floor"),
+    "C5_mamba2_cheap_draft_s8": dict(
+        arch="mamba2-1.3b", shape="decode_32k",
+        plan_kw={"s": 8,
+                 "draft_transform": lambda d: d.with_(
+            kv_quant=True,
+            attn=__import__("dataclasses").replace(d.attn, window=1024))},
+        hypothesis="with the draft cheapened (C4), retry s=8: the fixed "
+                   "target sweep now amortizes over l(8)+1=3.8 tokens vs "
+                   "2.9 -> per-token memory should finally drop"),
+    # ---- pair C: mamba2-1.3b x decode_32k (most collective-bound) ----
+    "C1_mamba2_replicated_embed": dict(
+        arch="mamba2-1.3b", shape="decode_32k",
+        plan_kw={"rules_overrides": {"vocab": None}},
+        hypothesis="the vocab-sharded embedding gather + logits all-reduce "
+                   "dominate the 826 MB/step collectives; the table is only "
+                   "206 MB - replicating it trades 206 MB HBM/dev for "
+                   "killing the per-step embed/unembed collectives"),
+}
+
+
+def main(argv):
+    if "--list" in argv or not argv:
+        for k, v in EXPERIMENTS.items():
+            print(f"{k}: {v['hypothesis'][:100]}")
+        return
+    os.makedirs("results/perf", exist_ok=True)
+    for name in argv:
+        exp = EXPERIMENTS[name]
+        print(f"=== {name} ===\nhypothesis: {exp['hypothesis']}", flush=True)
+        rec = D.run_one(exp["arch"], exp["shape"], "pod", exp["plan_kw"])
+        rec["experiment"] = name
+        rec["hypothesis"] = exp["hypothesis"]
+        with open(f"results/perf/{name}.json", "w") as f:
+            json.dump(rec, f, indent=1, default=float)
+        base_path = f"results/dryrun/{exp['arch']}__{exp['shape']}__pod.json"
+        base = json.load(open(base_path)) if os.path.exists(base_path) else None
+        r = rec["roofline"]
+        print(f"after : compute={r['compute_s']:.3e} memory={r['memory_s']:.3e} "
+              f"coll={r['collective_s']:.3e} dom={r['dominant']} "
+              f"arg/dev={rec['memory']['argument_bytes']/2**30:.2f}GiB")
+        if base:
+            b = base["roofline"]
+            print(f"before: compute={b['compute_s']:.3e} memory={b['memory_s']:.3e} "
+                  f"coll={b['collective_s']:.3e} dom={b['dominant']} "
+                  f"arg/dev={base['memory']['argument_bytes']/2**30:.2f}GiB",
+                  flush=True)
+
+
+def _a4_draft(cfg):
+    import dataclasses as dc
+    return cfg.with_(kv_quant=True,
+                     attn=dc.replace(cfg.attn, window=2048))
+
+
+EXPERIMENTS["A4_qwen3moe_draft_window_int8"] = dict(
+    arch="qwen3-moe-30b-a3b", shape="decode_32k",
+    plan_kw={"transform": lambda c: __import__("dataclasses").replace(
+                 c, kv_quant=True,
+                 moe=__import__("dataclasses").replace(c.moe, dispatch="gather")),
+             "draft_transform": _a4_draft},
+    hypothesis="after A3 the draft's 137 GB/step cache sweep (34 GB x s=4 "
+               "calls at full 32k context) is the next slab; a 2k sliding "
+               "window + int8 on the DRAFT cache cuts it ~30x (drafts only "
+               "need local context to propose) -> memory term -25%")
+
+
+# bonus appendix: the B-series ZeRO levers applied to the remaining
+# over-HBM-budget train cells from the baseline sweep
+for _arch, _name in [("yi-34b", "X1_yi34b_train_zero3"),
+                     ("qwen3-moe-30b-a3b", "X2_qwen3moe_train_zero3"),
+                     ("yi-9b", "X3_yi9b_train_zero3")]:
+    EXPERIMENTS[_name] = dict(
+        arch=_arch, shape="train_4k",
+        plan_kw={"rules_overrides": {"expert_ff": "data", "d_model": "data"}},
+        hypothesis=f"{_arch} train_4k exceeds the 16 GiB/dev budget at "
+                   "baseline (fp32 m/v replicated over data); the B4 ZeRO-3 "
+                   "overrides apply verbatim")
+
+
+for _arch, _shape, _name, _rules in [
+        ("deepseek-v2-236b", "prefill_32k", "X4_deepseek_prefill_fsdp",
+         {"expert_ff": "data"}),
+        ("deepseek-v2-236b", "long_500k", "X5_deepseek_long_fsdp",
+         {"expert_ff": "data"}),
+        ("yi-34b", "decode_32k", "X6_yi34b_decode_int8", None)]:
+    EXPERIMENTS[_name] = dict(
+        arch=_arch, shape=_shape,
+        plan_kw=({"rules_overrides": _rules} if _rules else
+                 {"transform": lambda c: c.with_(kv_quant=True),
+                  "draft_transform": lambda d: d.with_(kv_quant=True)}),
+        hypothesis=f"close the remaining over-budget {_arch} x {_shape} "
+                   "cell with the already-validated lever")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])
