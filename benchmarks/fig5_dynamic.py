@@ -33,7 +33,10 @@ MAX_BATCH = 16
 def build_model_from_measurements(quick: bool = False) -> LatencyModel:
     f3 = fig3_tl_scaling.run(quick=quick)
     f2 = fig2_acceptance.run(quick=quick)
-    alpha = {int(b): v["alpha"] for b, v in f3["linear_fits"].items()}
+    # clamp like core.analytical.fit_latency_model: noisy quick-mode wall
+    # clocks can fit a negative slope, which would run the virtual clock
+    # backwards (negative step durations -> negative latencies)
+    alpha = {int(b): max(v["alpha"], 1e-9) for b, v in f3["linear_fits"].items()}
     beta = {int(b): max(v["beta"], 1e-6) for b, v in f3["linear_fits"].items()}
     t_s = {int(b): v for b, v in f3["t_S_b1"].items()}
     return LatencyModel(alpha=alpha, beta=beta, t_s=t_s,

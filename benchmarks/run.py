@@ -23,6 +23,7 @@ BENCHES = {
     "fig5_dynamic": fig5_dynamic.run,
     "fig6_timeline": fig6_timeline.run,
     "fig7_continuous": fig7_continuous.run,
+    "fig7_live": fig7_continuous.run_live,
     "roofline": roofline.run,
 }
 

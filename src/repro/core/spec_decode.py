@@ -21,6 +21,16 @@ no-speculation baseline) with the identical code path.
 
 The engine jit-caches one step function per (batch, s) pair — exactly the
 grid the adaptive profiler (core/adaptive.py) measures.
+
+Slot-level runtime support (continuous batching, serving/scheduler.py): a
+fixed-capacity :class:`DecodeState` acts as a KV *slot pool*.  Empty slots
+are simply rows with ``done = True`` (the step function already masks them
+out), so the same compiled step serves every occupancy level.
+:meth:`SpecDecodeEngine.init_slots` allocates the pool,
+:meth:`SpecDecodeEngine.prefill_into` injects one new request into a live
+batch — a jit-cached B=1 prefill followed by a jit-cached per-capacity
+scatter into the slot — and :meth:`SpecDecodeEngine.retire_slot` frees a
+row, all without recompiling the (capacity, s) step function.
 """
 from __future__ import annotations
 
@@ -37,6 +47,11 @@ from repro.configs.base import ModelConfig
 from repro.configs.registry import build_model
 
 Params = Any
+
+# headroom rows in the per-request output buffer: one speculative step can
+# commit up to s + 1 tokens past max_new, and prefill_into scatters B=1
+# buffers into pool buffers, so both must size `out` identically
+S_MAX = 8
 
 
 @dataclasses.dataclass
@@ -77,6 +92,7 @@ class SpecDecodeEngine:
         self.prefix_offset = target_cfg.prefix_len if target_cfg.family == "vlm" else 0
         self._step_fns: Dict[Tuple[int, int], Any] = {}
         self._prefill_fns: Dict[Tuple[int, int, int], Any] = {}
+        self._inject_fn: Any = None
 
     # ------------------------------------------------------------------
     # prefill
@@ -85,19 +101,13 @@ class SpecDecodeEngine:
         tgt, drf = self.target, self.draft
 
         def fn(tparams, dparams, tokens, prompt_lens, tkw):
-            if self.tcfg.family in ("encdec", "audio"):
-                tcache = tgt.init_cache(B, cache_len=cache_len, dtype=self.dtype,
-                                        src_len=tkw["src_embeds"].shape[1])
-            elif self.tcfg.family == "ssm":
-                tcache = tgt.init_cache(B, dtype=self.dtype)
-            else:
-                tcache = tgt.init_cache(B, cache_len=cache_len, dtype=self.dtype)
+            src_len = (tkw["src_embeds"].shape[1]
+                       if self.tcfg.family in ("encdec", "audio") else None)
+            tcache, dcache = self._init_caches(B, cache_len, src_len)
             _, tcache, total = tgt.prefill(tparams, tokens, tcache,
                                            prompt_lens=prompt_lens - 1, **tkw)
             seq_lens = total + 1
-            dcache = None
             if drf is not None:
-                dcache = drf.init_cache(B, cache_len=cache_len, dtype=self.dtype)
                 _, dcache, _ = drf.prefill(dparams, tokens, dcache,
                                            prompt_lens=prompt_lens - 2)
             bidx = jnp.arange(B)
@@ -117,13 +127,92 @@ class SpecDecodeEngine:
         tcache, dcache, seq_lens, last2 = self._prefill_fns[key](
             tparams, dparams, jnp.asarray(tokens), jnp.asarray(prompt_lens),
             target_extras or {})
-        s_max = 8
         return DecodeState(
             tcache=tcache, dcache=dcache, seq_lens=seq_lens, last2=last2,
-            out=jnp.zeros((B, self.max_new + s_max + 1), jnp.int32),
+            out=jnp.zeros((B, self.max_new + S_MAX + 1), jnp.int32),
             n_generated=jnp.zeros((B,), jnp.int32),
             done=jnp.zeros((B,), bool),
         )
+
+    # ------------------------------------------------------------------
+    # slot pool (continuous batching; serving/scheduler.py drives this)
+
+    def _init_caches(self, B: int, cache_len: int, src_len: Optional[int] = None):
+        tgt, drf = self.target, self.draft
+        if self.tcfg.family in ("encdec", "audio"):
+            tcache = tgt.init_cache(B, cache_len=cache_len, dtype=self.dtype,
+                                    src_len=src_len or cache_len)
+        elif self.tcfg.family == "ssm":
+            tcache = tgt.init_cache(B, dtype=self.dtype)
+        else:
+            tcache = tgt.init_cache(B, cache_len=cache_len, dtype=self.dtype)
+        dcache = (drf.init_cache(B, cache_len=cache_len, dtype=self.dtype)
+                  if drf is not None else None)
+        return tcache, dcache
+
+    def init_slots(self, capacity: int, cache_len: int,
+                   src_len: Optional[int] = None) -> DecodeState:
+        """Blank fixed-capacity slot pool: every row is an empty slot
+        (``done = True``), ready to be claimed via :meth:`prefill_into`."""
+        tcache, dcache = self._init_caches(capacity, cache_len, src_len)
+        return DecodeState(
+            tcache=tcache, dcache=dcache,
+            # seq_lens = 2 keeps the masked step's positions non-negative
+            seq_lens=jnp.full((capacity,), 2, jnp.int32),
+            last2=jnp.zeros((capacity, 2), jnp.int32),
+            out=jnp.zeros((capacity, self.max_new + S_MAX + 1), jnp.int32),
+            n_generated=jnp.zeros((capacity,), jnp.int32),
+            done=jnp.ones((capacity,), bool))
+
+    @staticmethod
+    def _slot_axis(full_shape, single_shape) -> int:
+        """The one axis where a B=1 leaf differs from the pool leaf."""
+        diff = [i for i, (f, g) in enumerate(zip(full_shape, single_shape))
+                if f != g]
+        assert len(diff) == 1, (full_shape, single_shape)
+        return diff[0]
+
+    def _build_inject(self):
+        def fn(full, single, slot):
+            def upd(f, x):
+                ax = self._slot_axis(f.shape, x.shape)
+                starts = tuple(slot if i == ax else 0 for i in range(f.ndim))
+                return jax.lax.dynamic_update_slice(f, x.astype(f.dtype), starts)
+            return jax.tree.map(upd, full, single)
+        return jax.jit(fn)
+
+    def prefill_into(self, tparams, dparams, state: DecodeState, slot: int,
+                     tokens, prompt_len: int, cache_len: int,
+                     target_extras: Optional[Dict] = None) -> DecodeState:
+        """Inject one new request into row ``slot`` of a live slot pool.
+
+        Runs the (jit-cached, B=1) prefill for the prompt, then scatters every
+        per-slot leaf — KV/state caches, seq_lens, last2, out, n_generated,
+        done — into the pool with one jit-cached dynamic-update-slice tree.
+        The (capacity, s) step function is untouched, so admitting a request
+        never recompiles the serving step.
+        """
+        tokens = np.asarray(tokens, np.int32).reshape(1, -1)
+        single = self.prefill(tparams, dparams, tokens,
+                              np.array([prompt_len], np.int32), cache_len,
+                              target_extras)
+        capacity = int(state.seq_lens.shape[0])
+        if capacity == 1:
+            return single
+        if self._inject_fn is None:
+            self._inject_fn = self._build_inject()
+        full = (state.tcache, state.dcache, state.seq_lens, state.last2,
+                state.out, state.n_generated, state.done)
+        one = (single.tcache, single.dcache, single.seq_lens, single.last2,
+               single.out, single.n_generated, single.done)
+        return DecodeState(*self._inject_fn(full, one, jnp.int32(slot)))
+
+    def retire_slot(self, state: DecodeState, slot: int) -> DecodeState:
+        """Free a slot (mark done): the masked step stops committing for it,
+        and the row can be re-claimed by the next :meth:`prefill_into`."""
+        done = np.asarray(state.done).copy()
+        done[slot] = True
+        return dataclasses.replace(state, done=jnp.asarray(done))
 
     # ------------------------------------------------------------------
     # one speculative step

@@ -57,6 +57,15 @@ _COLL_RE = re.compile(
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 
 
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """Normalize ``compiled.cost_analysis()`` across jax versions: newer jax
+    returns one dict, older returns a one-element list of per-device dicts."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
 def _shape_bytes(shape_str: str) -> float:
     """Sum bytes over every tensor in an HLO result-shape string."""
     total = 0.0
@@ -192,7 +201,7 @@ def run_one(arch: str, shape_name: str, mesh_name: str,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     rec: Dict[str, Any] = {
         "arch": arch, "shape": shape_name, "mesh": mesh_name, "chips": chips,
         "kind": plan.kind,

@@ -1,4 +1,12 @@
+from repro.serving.acceptance import GeometricAcceptance, match_prob
 from repro.serving.request import BatchRecord, Request
-from repro.serving.server import EngineBackend, ServeResult, SimBackend, serve
+from repro.serving.scheduler import (AdmissionPolicy, ContinuousEngineBackend,
+                                     ContinuousScheduler, FCFSBacklog,
+                                     ImmediateAdmit, PrefillBudgetAdmit,
+                                     SimStepBackend, replay_sources,
+                                     serve_continuous_live)
+from repro.serving.server import (EngineBackend, ServeResult, SimBackend,
+                                  serve, serve_continuous)
+from repro.serving.slots import SlotPool
 from repro.serving.traffic import (TrafficPhase, alternating_traffic,
                                    make_requests, uniform_traffic)

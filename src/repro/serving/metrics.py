@@ -53,3 +53,37 @@ def batch_size_histogram(result: ServeResult) -> Dict[int, int]:
 
 def speedup(base: ServeResult, new: ServeResult) -> float:
     return base.mean_latency / new.mean_latency
+
+
+# ---------------------------------------------------------------------------
+# iteration-level (continuous batching) metrics: TTFT / ITL / occupancy
+# — only schedulers that commit at step granularity fill these in
+
+
+def ttft_summary(result: ServeResult) -> LatencySummary:
+    """Time-to-first-token distribution (arrival -> first committed token)."""
+    vals = [r.ttft for r in result.requests if r.ttft is not None]
+    if not vals:
+        raise ValueError("no per-request first-token times recorded "
+                         "(run an iteration-level scheduler)")
+    return LatencySummary.of(vals)
+
+
+def itl_summary(result: ServeResult) -> LatencySummary:
+    """Mean inter-token-latency distribution across requests."""
+    vals = [r.itl for r in result.requests if r.itl is not None]
+    if not vals:
+        raise ValueError("no per-request inter-token latencies recorded")
+    return LatencySummary.of(vals)
+
+
+def occupancy_timeline(result: ServeResult) -> List[Tuple[float, int]]:
+    """(step start time, live batch size) per executed iteration."""
+    return [(b.start, b.batch_size) for b in result.batches]
+
+
+def mean_occupancy(result: ServeResult) -> float:
+    """Time-weighted mean live batch size over the serving run."""
+    num = sum(b.batch_size * b.duration for b in result.batches)
+    den = sum(b.duration for b in result.batches)
+    return num / max(den, 1e-12)

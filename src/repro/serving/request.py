@@ -20,8 +20,10 @@ class Request:
     prompt_len: int
     max_new: int = 128
     # filled in by the server
-    start: Optional[float] = None  # batch execution start
-    finish: Optional[float] = None # t_b
+    start: Optional[float] = None        # batch execution start
+    finish: Optional[float] = None       # t_b
+    first_token: Optional[float] = None  # first committed token (TTFT end)
+    n_generated: int = 0                 # tokens actually committed
 
     @property
     def latency(self) -> float:
@@ -32,6 +34,18 @@ class Request:
     def queue_wait(self) -> float:
         assert self.start is not None
         return self.start - self.arrival
+
+    @property
+    def ttft(self) -> Optional[float]:
+        """Time to first token (iteration-level schedulers fill this in)."""
+        return None if self.first_token is None else self.first_token - self.arrival
+
+    @property
+    def itl(self) -> Optional[float]:
+        """Mean inter-token latency after the first token."""
+        if self.first_token is None or self.finish is None or self.n_generated < 2:
+            return None
+        return (self.finish - self.first_token) / (self.n_generated - 1)
 
 
 @dataclass

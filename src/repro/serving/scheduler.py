@@ -1,0 +1,393 @@
+"""Iteration-level (Orca-style) continuous-batching scheduler.
+
+Requests JOIN and LEAVE the running batch at *speculative-step* granularity:
+every iteration the scheduler (1) admits arrived requests into free KV slots
+via a pluggable :class:`AdmissionPolicy`, (2) asks the
+:class:`~repro.core.adaptive.AdaptiveController` for the speculation length
+at the **live occupancy** — the finest-grained use of the paper's b -> s_opt
+LUT — and (3) runs one speculative step, retiring finished slots.
+
+Two step backends answer the same protocol, so the identical scheduling code
+runs against hardware truth and against the fitted simulation:
+
+  * :class:`ContinuousEngineBackend` — a live
+    :class:`~repro.core.spec_decode.SpecDecodeEngine` slot pool
+    (``prefill_into`` / masked step / ``retire_slot``), wall-clock timed
+    with compiles warmed outside the timed region;
+  * :class:`SimStepBackend` — one discrete-event step from a fitted
+    :class:`~repro.core.analytical.LatencyModel` with the shared
+    truncated-geometric acceptance process (serving/acceptance.py).
+
+``serve_continuous_live()`` is the live entrypoint mirroring
+:func:`repro.serving.server.serve_continuous` (which now runs this same
+scheduler over :class:`SimStepBackend`), so Fig. 5-7 traffic studies can be
+replayed on a real engine and validated against the simulation
+(sim-vs-live parity on identical traces).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.adaptive import AdaptiveController
+from repro.core.analytical import LatencyModel
+from repro.serving.acceptance import GeometricAcceptance
+from repro.serving.request import BatchRecord, Request
+from repro.serving.slots import SlotPool
+
+
+# ---------------------------------------------------------------------------
+# admission policies
+
+
+class AdmissionPolicy:
+    """Chooses which backlog requests to admit into free slots this step."""
+
+    def select(self, backlog: Sequence[Request], free_slots: int,
+               clock: float) -> List[Request]:
+        raise NotImplementedError
+
+
+class ImmediateAdmit(AdmissionPolicy):
+    """Admit FCFS into every free slot (Orca-style, the default)."""
+
+    def select(self, backlog, free_slots, clock):
+        return list(backlog[:free_slots])
+
+
+class PrefillBudgetAdmit(AdmissionPolicy):
+    """Chunked-prefill-style admission: cap the prefill tokens injected per
+    iteration so admission work cannot starve the running batch (bounds the
+    inter-token latency hit of each admission burst; SNIPPETS §2).
+
+    Always admits at least one request when a slot is free, so the policy
+    never deadlocks on a prompt longer than the budget.
+    """
+
+    def __init__(self, token_budget: int = 64):
+        self.token_budget = token_budget
+
+    def select(self, backlog, free_slots, clock):
+        out: List[Request] = []
+        used = 0
+        for req in backlog[:free_slots]:
+            if out and used + req.prompt_len > self.token_budget:
+                break
+            out.append(req)
+            used += req.prompt_len
+        return out
+
+
+class FCFSBacklog(AdmissionPolicy):
+    """At most ``max_per_step`` admissions per iteration (rate-limited FCFS,
+    the gentlest admission schedule)."""
+
+    def __init__(self, max_per_step: int = 1):
+        self.max_per_step = max_per_step
+
+    def select(self, backlog, free_slots, clock):
+        return list(backlog[:min(free_slots, self.max_per_step)])
+
+
+# ---------------------------------------------------------------------------
+# step backends
+
+
+class ContinuousEngineBackend:
+    """Live-engine step backend: a SpecDecodeEngine slot pool on hardware.
+
+    Prefill compiles (per prompt bucket) and step compiles (per s) are warmed
+    outside the timed regions — serving latency is steady-state, matching
+    EngineBackend's treatment of compile time.
+    """
+
+    def __init__(self, engine, tparams, dparams, capacity: int,
+                 cache_len: int = 256, warm_s: Sequence[int] = ()):
+        if engine.tcfg.family in ("encdec", "audio", "vlm"):
+            # these families need per-request modality extras (src_embeds /
+            # prefix_embeds) that the admission path does not plumb yet; see
+            # ROADMAP open items
+            raise NotImplementedError(
+                f"continuous batching does not support family "
+                f"'{engine.tcfg.family}' yet (per-request modality extras)")
+        self.engine = engine
+        self.tparams = tparams
+        self.dparams = dparams
+        self.capacity = capacity
+        self.cache_len = cache_len
+        self.state = engine.init_slots(capacity, cache_len)
+        self._warm_prefill: set = set()
+        self._warm_step: set = set()
+        for s in warm_s:
+            self.warm_step(s)
+
+    def warm_step(self, s: int) -> None:
+        if s not in self._warm_step:
+            self.engine.step(self.tparams, self.dparams, self.state, s)
+            self._warm_step.add(s)
+
+    @staticmethod
+    def _bucket(n: int) -> int:
+        p = 4
+        while p < n:
+            p *= 2
+        return p
+
+    def prefill(self, req: Request, slot: int) -> float:
+        """Inject ``req`` into ``slot``; returns seconds of prefill work."""
+        P = self._bucket(req.prompt_len)
+        toks = np.ones((P,), np.int32)
+        toks[:req.prompt_len] = req.tokens[:req.prompt_len]
+        if P not in self._warm_prefill:
+            # compile the B=1 prefill + inject for this bucket off the clock
+            self.engine.prefill_into(self.tparams, self.dparams, self.state,
+                                     slot, toks, req.prompt_len, self.cache_len)
+            self._warm_prefill.add(P)
+        t0 = time.perf_counter()
+        self.state = self.engine.prefill_into(
+            self.tparams, self.dparams, self.state, slot, toks,
+            req.prompt_len, self.cache_len)
+        np.asarray(self.state.seq_lens)          # block until ready
+        return time.perf_counter() - t0
+
+    def step(self, s: int) -> Tuple[float, np.ndarray, np.ndarray]:
+        """One speculative step at live occupancy.  Returns
+        (wall seconds, committed[capacity], done[capacity])."""
+        self.warm_step(s)
+        t0 = time.perf_counter()
+        self.state, st = self.engine.step(self.tparams, self.dparams,
+                                          self.state, s)
+        committed = np.asarray(st.committed)     # forces sync
+        dt = time.perf_counter() - t0
+        return dt, committed, np.asarray(self.state.done)
+
+    def retire(self, slot: int) -> None:
+        self.state = self.engine.retire_slot(self.state, slot)
+
+    def output_for(self, slot: int) -> np.ndarray:
+        return np.asarray(self.state.out)[slot, :self.engine.max_new]
+
+
+class SimStepBackend:
+    """Discrete-event step backend over a fitted LatencyModel.
+
+    Step duration at live occupancy b is t_L(bk, s) + s * t_S(bk, 1) with bk
+    the nearest profiled batch size >= b; acceptance is the shared
+    truncated-geometric process — or, for sim-vs-live parity tests, a
+    replayed ``accept_source(step_idx, rids, s) -> accepted`` trace.
+    """
+
+    def __init__(self, model: LatencyModel, capacity: int, seed: int = 0,
+                 accept_source: Optional[Callable] = None,
+                 duration_source: Optional[Callable] = None,
+                 prefill_source: Optional[Callable] = None):
+        self.model = model
+        self.capacity = capacity
+        self.acceptance = GeometricAcceptance(model, seed)
+        self.accept_source = accept_source
+        self.duration_source = duration_source
+        self.prefill_source = prefill_source
+        self.done = np.ones(capacity, dtype=bool)
+        self.rids = np.full(capacity, -1, dtype=np.int64)
+        self._step_idx = 0
+
+    def _batch_key(self, b: int) -> int:
+        for x in self.model.batch_sizes:
+            if x >= b:
+                return x
+        return self.model.batch_sizes[-1]
+
+    def prefill(self, req: Request, slot: int) -> float:
+        self.done[slot] = False
+        self.rids[slot] = req.rid
+        if self.prefill_source is not None:
+            return float(self.prefill_source(req.rid))
+        return 0.0                     # prefill is outside the fitted model
+
+    def step(self, s: int) -> Tuple[float, np.ndarray, np.ndarray]:
+        active = np.where(~self.done)[0]
+        b = len(active)
+        bk = self._batch_key(b)
+        if self.duration_source is not None:
+            dt = float(self.duration_source(self._step_idx, b, s))
+        else:
+            dt = self.model.t_verify(bk, s) + s * self.model.t_s[bk]
+        if self.accept_source is not None:
+            accepted = np.asarray(
+                self.accept_source(self._step_idx, self.rids[active], s))
+        else:
+            accepted = self.acceptance.draw(b, s)
+        committed = np.zeros(self.capacity, dtype=np.int64)
+        # accepted = -1 encodes a replayed zero-commit step (the live engine
+        # had already stopped this request: EOS / engine-level max_new);
+        # mirror the live backend by marking the slot done so the scheduler
+        # retires it the same iteration
+        committed[active] = np.maximum(accepted + 1, 0)
+        self.done[active[committed[active] == 0]] = True
+        self._step_idx += 1
+        return dt, committed, self.done.copy()
+
+    def retire(self, slot: int) -> None:
+        self.done[slot] = True
+        self.rids[slot] = -1
+
+
+# ---------------------------------------------------------------------------
+# the scheduler
+
+
+@dataclass
+class StepTrace:
+    """Per-iteration scheduling record (drives sim-vs-live parity tests)."""
+    clock: float
+    occupancy: int
+    s: int
+    rids: Tuple[int, ...]
+    committed: Dict[int, int]          # rid -> raw committed this step
+    admitted: Tuple[int, ...] = ()
+    duration: float = 0.0              # step duration charged to the clock
+    prefill_s: Tuple[float, ...] = ()  # per-admission prefill seconds
+
+
+def replay_sources(trace: Sequence[StepTrace]):
+    """(accept, duration, prefill) replay callbacks from a recorded trace.
+
+    Feeding these into :class:`SimStepBackend` pins every *outcome* (commit
+    counts, step durations, prefill costs) to the recorded run, so a second
+    scheduler run over the sim backend must reproduce the recorded admission
+    order and batch-size sequence exactly — the sim-vs-live parity check.
+    """
+    prefill: Dict[int, float] = {}
+    for t in trace:
+        for rid, dt in zip(t.admitted, t.prefill_s):
+            prefill[rid] = dt
+
+    def accept(step_idx, rids, s):
+        # committed - 1; a recorded 0 maps to -1 (zero-commit step: the
+        # recorded run had retired this request via EOS / engine max_new)
+        rec = trace[step_idx].committed
+        return np.array([rec.get(int(r), 1) - 1 for r in rids])
+
+    def duration(step_idx, b, s):
+        return trace[step_idx].duration
+
+    def prefill_src(rid):
+        return prefill.get(rid, 0.0)
+
+    return accept, duration, prefill_src
+
+
+class ContinuousScheduler:
+    """Iteration-level serving loop over any step backend.
+
+    After :meth:`run`, ``self.trace`` holds one :class:`StepTrace` per
+    iteration (admission order, live batch size, per-request commits) —
+    the observable scheduling behaviour compared in parity tests.
+    """
+
+    def __init__(self, backend, controller: AdaptiveController,
+                 policy: Optional[AdmissionPolicy] = None,
+                 observe: bool = False):
+        self.backend = backend
+        self.controller = controller
+        self.policy = policy or ImmediateAdmit()
+        self.observe = observe
+        self.trace: List[StepTrace] = []
+
+    def run(self, requests: Sequence[Request]):
+        from repro.serving.server import ServeResult   # avoid import cycle
+        pending = sorted(requests, key=lambda r: r.arrival)
+        pool = SlotPool(self.backend.capacity)
+        backlog: List[Request] = []
+        batches: List[BatchRecord] = []
+        self.trace = []
+        clock, i, n_done, n = 0.0, 0, 0, len(pending)
+        while n_done < n:
+            while i < n and pending[i].arrival <= clock:
+                backlog.append(pending[i])
+                i += 1
+            admitted: List[int] = []
+            prefill_s: List[float] = []
+            for req in self.policy.select(backlog, pool.free_count, clock):
+                backlog.remove(req)
+                slot = pool.claim(req)
+                req.start = clock
+                p_dt = self.backend.prefill(req, slot)
+                clock += p_dt
+                admitted.append(req.rid)
+                prefill_s.append(p_dt)
+            if pool.occupancy == 0:
+                if not backlog and i < n:
+                    clock = max(clock, pending[i].arrival)
+                continue
+            b = pool.occupancy
+            s = self.controller.choose(b)
+            dt, committed, backend_done = self.backend.step(s)
+            clock += dt
+            toks = 0
+            raw: Dict[int, int] = {}
+            accepted_live: List[int] = []
+            for slot in pool.active_slots():
+                req = pool.request_at(slot)
+                c_raw = int(committed[slot])
+                raw[req.rid] = c_raw
+                accepted_live.append(max(c_raw - 1, 0))
+                c = min(c_raw, pool.remaining(slot))
+                if c > 0 and req.first_token is None:
+                    req.first_token = clock
+                pool.consume(slot, c)
+                req.n_generated += c
+                toks += c
+                # finished: served its token budget, or the backend stopped
+                # committing for it (EOS / engine-level max_new)
+                if pool.remaining(slot) <= 0 or (c_raw == 0 and backend_done[slot]):
+                    req.finish = clock
+                    pool.retire(slot)
+                    self.backend.retire(slot)
+                    n_done += 1
+            if self.observe and s > 0:
+                self.controller.observe(np.asarray(accepted_live), s)
+            batches.append(BatchRecord(
+                start=clock - dt, duration=dt, batch_size=b, s_used=s,
+                tokens_generated=toks, n_steps=1,
+                rids=tuple(sorted(raw))))
+            self.trace.append(StepTrace(
+                clock=clock - dt, occupancy=b, s=s,
+                rids=tuple(sorted(raw)), committed=raw,
+                admitted=tuple(admitted), duration=dt,
+                prefill_s=tuple(prefill_s)))
+        return ServeResult(requests=list(pending), batches=batches)
+
+
+def serve_continuous_live(requests: Sequence[Request], engine, tparams,
+                          dparams, controller: AdaptiveController, *,
+                          capacity: int = 8, cache_len: int = 256,
+                          policy: Optional[AdmissionPolicy] = None,
+                          observe: bool = False,
+                          backend: Optional[ContinuousEngineBackend] = None):
+    """Serve a request trace on a LIVE SpecDecodeEngine with iteration-level
+    continuous batching: requests join/leave at speculative-step granularity
+    and the controller re-chooses s from live occupancy every step.
+
+    The virtual clock advances by measured wall time (compiles warmed
+    outside the timed regions), so results are directly comparable with the
+    run-to-completion :func:`repro.serving.server.serve` loop and with the
+    :class:`SimStepBackend` simulation on the same trace.
+    """
+    for r in requests:
+        if r.max_new > engine.max_new:
+            raise ValueError(
+                f"request {r.rid} wants {r.max_new} tokens but the engine "
+                f"slot pool is sized for max_new={engine.max_new}")
+    if backend is None:
+        warm = sorted(set(controller.lut.table.values()))
+        backend = ContinuousEngineBackend(engine, tparams, dparams,
+                                          capacity=capacity,
+                                          cache_len=cache_len, warm_s=warm)
+    sched = ContinuousScheduler(backend, controller, policy, observe=observe)
+    result = sched.run(requests)
+    result.trace = sched.trace
+    return result

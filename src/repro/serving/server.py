@@ -18,18 +18,29 @@ Two execution backends:
 Both backends answer ``run_batch(requests, s) -> (duration_s, BatchRecord)``;
 the server's virtual clock advances by the returned duration, so the loop is
 deterministic and backend-agnostic.
+
+Iteration-level (continuous-batching) scheduling lives in
+:mod:`repro.serving.scheduler`: :func:`serve_continuous` below runs that
+scheduler over the simulated step backend, and
+:func:`~repro.serving.scheduler.serve_continuous_live` runs the identical
+scheduling code on a live engine's KV slot pool.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.adaptive import AdaptiveController
 from repro.core.analytical import LatencyModel
+from repro.serving.acceptance import GeometricAcceptance, match_prob
 from repro.serving.request import BatchRecord, Request
+
+# retained name: tests and notebooks import the inverse-acceptance solver
+# from here; the implementation lives in serving/acceptance.py now
+_match_prob = match_prob
 
 
 # ---------------------------------------------------------------------------
@@ -87,33 +98,19 @@ class EngineBackend:
                                rids=tuple(r.rid for r in reqs))
 
 
-def _match_prob(l_target: float, s: int) -> float:
-    """p such that the truncated-geometric expected run sum_{i=1..s} p^i
-    equals ``l_target`` (how SimBackend inverts the acceptance curve)."""
-    l_target = min(max(l_target, 0.0), s - 1e-9)
-    lo, hi = 0.0, 1.0 - 1e-12
-    for _ in range(60):
-        mid = 0.5 * (lo + hi)
-        val = sum(mid ** i for i in range(1, s + 1))
-        if val < l_target:
-            lo = mid
-        else:
-            hi = mid
-    return 0.5 * (lo + hi)
-
-
 class SimBackend:
     """Discrete-event simulation of batched speculative decoding.
 
     Per step at (b, s): duration t_L(b, s) + s * t_S(b, 1) from the latency
     model; each live request independently accepts a truncated-geometric
-    number of drafts whose mean matches l(s), then commits a + 1 tokens.
+    number of drafts whose mean matches l(s) (the shared
+    :class:`~repro.serving.acceptance.GeometricAcceptance` process), then
+    commits a + 1 tokens.
     """
 
     def __init__(self, model: LatencyModel, seed: int = 0):
         self.model = model
-        self.rng = np.random.default_rng(seed)
-        self._p_cache = {}
+        self.acceptance = GeometricAcceptance(model, seed)
 
     def _batch_key(self, b: int) -> int:
         """Nearest profiled batch size >= b (clamped to the largest)."""
@@ -129,18 +126,8 @@ class SimBackend:
         step_t = self.model.t_verify(bk, s) + s * self.model.t_s[bk]
         remaining = np.array([r.max_new for r in reqs], dtype=np.int64)
         n_steps, toks = 0, 0
-        if s > 0:
-            key = s
-            if key not in self._p_cache:
-                self._p_cache[key] = _match_prob(self.model.l_of_s(s), s)
-            p = self._p_cache[key]
         while remaining.max() > 0:
-            if s > 0:
-                # run length = leading accepted drafts, truncated geometric
-                u = self.rng.random((b, s))
-                accepted = (np.cumprod(u < p, axis=1)).sum(axis=1)
-            else:
-                accepted = np.zeros(b, dtype=np.int64)
+            accepted = self.acceptance.draw(b, s)
             commit = np.minimum(accepted + 1, np.maximum(remaining, 0))
             commit = np.where(remaining > 0, commit, 0)
             toks += int(commit.sum())
@@ -160,6 +147,8 @@ class SimBackend:
 class ServeResult:
     requests: List[Request]
     batches: List[BatchRecord]
+    # iteration-level schedulers attach their per-step StepTrace list here
+    trace: Optional[list] = None
 
     @property
     def latencies(self) -> np.ndarray:
@@ -172,65 +161,27 @@ class ServeResult:
 
 def serve_continuous(requests: Sequence[Request], model: LatencyModel,
                      controller: AdaptiveController, max_batch: int = 16,
-                     seed: int = 0) -> ServeResult:
-    """Iteration-level (Orca-style) continuous batching x speculation.
+                     seed: int = 0, policy=None) -> ServeResult:
+    """Iteration-level (Orca-style) continuous batching x speculation,
+    simulated from a fitted latency model.
 
     Beyond-paper: the paper's server runs each batch to completion (§5.3);
     here requests JOIN and LEAVE the running batch at speculative-step
     granularity, and the controller re-chooses s every iteration from the
     *current* batch size — the finest-grained use of the adaptive LUT.
-    Simulation counterpart of :class:`SimBackend` (same latency model, same
-    stochastic acceptance), so the two scheduling policies are comparable
-    on identical traces.
+
+    This is the same :class:`~repro.serving.scheduler.ContinuousScheduler`
+    that drives the live engine (serve_continuous_live), run over
+    :class:`~repro.serving.scheduler.SimStepBackend` — identical admission
+    logic, so sim and live scheduling are comparable step for step on one
+    trace.
     """
-    rng = np.random.default_rng(seed)
-    pending = sorted(requests, key=lambda r: r.arrival)
-    active: List[Request] = []
-    remaining: Dict[int, int] = {}
-    clock, i, n = 0.0, 0, len(pending)
-    batches: List[BatchRecord] = []
-    done: List[Request] = []
-    p_cache: Dict[int, float] = {}
-    while len(done) < n:
-        # admit arrivals into free slots
-        while i < n and pending[i].arrival <= clock and len(active) < max_batch:
-            r = pending[i]
-            r.start = clock
-            active.append(r)
-            remaining[r.rid] = r.max_new
-            i += 1
-        if not active:
-            clock = pending[i].arrival
-            continue
-        b = len(active)
-        s = controller.choose(b)
-        bk = min((x for x in model.batch_sizes if x >= b),
-                 default=model.batch_sizes[-1])
-        step_t = model.t_verify(bk, s) + s * model.t_s[bk]
-        if s > 0:
-            if s not in p_cache:
-                p_cache[s] = _match_prob(model.l_of_s(s), s)
-            u = rng.random((b, s))
-            accepted = (np.cumprod(u < p_cache[s], axis=1)).sum(axis=1)
-        else:
-            accepted = np.zeros(b, dtype=np.int64)
-        clock += step_t
-        toks = 0
-        still: List[Request] = []
-        for r, a in zip(active, accepted):
-            c = int(min(a + 1, remaining[r.rid]))
-            remaining[r.rid] -= c
-            toks += c
-            if remaining[r.rid] <= 0:
-                r.finish = clock
-                done.append(r)
-            else:
-                still.append(r)
-        active = still
-        batches.append(BatchRecord(start=clock - step_t, duration=step_t,
-                                   batch_size=b, s_used=s,
-                                   tokens_generated=toks, n_steps=1))
-    return ServeResult(requests=list(pending), batches=batches)
+    from repro.serving.scheduler import ContinuousScheduler, SimStepBackend
+    backend = SimStepBackend(model, capacity=max_batch, seed=seed)
+    sched = ContinuousScheduler(backend, controller, policy)
+    result = sched.run(requests)
+    result.trace = sched.trace
+    return result
 
 
 def serve(requests: Sequence[Request], backend, controller: AdaptiveController,

@@ -1,0 +1,78 @@
+"""Host-side bookkeeping for the engine's KV slot pool.
+
+The device half of a slot pool is a fixed-capacity
+:class:`~repro.core.spec_decode.DecodeState` (rows = slots, empty rows are
+``done``); this module tracks the host half: which request occupies which
+slot, how many tokens it still owes, and the claim/retire lifecycle the
+iteration-level scheduler (serving/scheduler.py) drives every speculative
+step.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+from repro.serving.request import Request
+
+
+class SlotPool:
+    """Fixed-capacity slot bookkeeping: claim on admit, retire on finish."""
+
+    def __init__(self, capacity: int):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self._reqs: List[Optional[Request]] = [None] * capacity
+        self._remaining = np.zeros(capacity, dtype=np.int64)
+        # lowest-numbered free slot claimed first (deterministic placement)
+        self._free = list(range(capacity - 1, -1, -1))
+
+    # ------------------------------------------------------------------
+    # lifecycle
+
+    def claim(self, req: Request) -> int:
+        """Assign ``req`` to a free slot; returns the slot index."""
+        if not self._free:
+            raise RuntimeError("slot pool full")
+        slot = self._free.pop()
+        self._reqs[slot] = req
+        self._remaining[slot] = req.max_new
+        return slot
+
+    def retire(self, slot: int) -> Request:
+        """Release ``slot``; returns the request that occupied it."""
+        req = self._reqs[slot]
+        if req is None:
+            raise RuntimeError(f"slot {slot} is not occupied")
+        self._reqs[slot] = None
+        self._remaining[slot] = 0
+        self._free.append(slot)
+        self._free.sort(reverse=True)
+        return req
+
+    # ------------------------------------------------------------------
+    # accounting
+
+    def consume(self, slot: int, tokens: int) -> None:
+        self._remaining[slot] -= tokens
+
+    def remaining(self, slot: int) -> int:
+        return int(self._remaining[slot])
+
+    def request_at(self, slot: int) -> Request:
+        req = self._reqs[slot]
+        if req is None:
+            raise RuntimeError(f"slot {slot} is not occupied")
+        return req
+
+    def active_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self._reqs) if r is not None]
+
+    @property
+    def occupancy(self) -> int:
+        return sum(r is not None for r in self._reqs)
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)

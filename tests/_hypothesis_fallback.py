@@ -1,0 +1,142 @@
+"""Minimal stand-in for the ``hypothesis`` API used by this test suite.
+
+When ``hypothesis`` is installed (see requirements-dev.txt) the real library
+is used; otherwise test modules fall back to this shim so the suite still
+collects and runs everywhere:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, st
+
+The shim samples each strategy deterministically (seeded per test name):
+the first examples pin the strategy bounds, the rest are random draws.  It
+covers only the strategies this repo uses — floats, integers, sampled_from,
+lists, dictionaries — with no shrinking; it is a property *smoke* runner,
+not a replacement for hypothesis.
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Any, Callable, List, Sequence
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    def example(self, rng: np.random.Generator, idx: int) -> Any:
+        raise NotImplementedError
+
+
+class _Floats(_Strategy):
+    def __init__(self, lo: float, hi: float):
+        self.lo, self.hi = float(lo), float(hi)
+
+    def example(self, rng, idx):
+        if idx == 0:
+            return self.lo
+        if idx == 1:
+            return self.hi
+        return float(rng.uniform(self.lo, self.hi))
+
+
+class _Integers(_Strategy):
+    def __init__(self, lo: int, hi: int):
+        self.lo, self.hi = int(lo), int(hi)
+
+    def example(self, rng, idx):
+        if idx == 0:
+            return self.lo
+        if idx == 1:
+            return self.hi
+        return int(rng.integers(self.lo, self.hi + 1))
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, options: Sequence[Any]):
+        self.options = list(options)
+
+    def example(self, rng, idx):
+        return self.options[int(rng.integers(len(self.options)))]
+
+
+class _Lists(_Strategy):
+    def __init__(self, elem: _Strategy, min_size: int = 0, max_size: int = 10):
+        self.elem, self.min_size, self.max_size = elem, min_size, max_size
+
+    def example(self, rng, idx):
+        size = self.min_size if idx == 0 else int(
+            rng.integers(self.min_size, self.max_size + 1))
+        return [self.elem.example(rng, 2) for _ in range(size)]
+
+
+class _Dicts(_Strategy):
+    def __init__(self, keys: _Strategy, values: _Strategy,
+                 min_size: int = 0, max_size: int = 8):
+        self.keys, self.values = keys, values
+        self.min_size, self.max_size = min_size, max_size
+
+    def example(self, rng, idx):
+        out = {}
+        target = int(rng.integers(self.min_size, self.max_size + 1))
+        for _ in range(50):                      # distinct-key attempts
+            if len(out) >= max(target, self.min_size):
+                break
+            out[self.keys.example(rng, 2)] = self.values.example(rng, 2)
+        return out
+
+
+class _St:
+    """The ``strategies`` namespace."""
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Floats(min_value, max_value)
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def sampled_from(options):
+        return _SampledFrom(options)
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        return _Lists(elements, min_size, max_size)
+
+    @staticmethod
+    def dictionaries(keys, values, min_size=0, max_size=8):
+        return _Dicts(keys, values, min_size, max_size)
+
+
+st = _St()
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, **_ignored) -> Callable:
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies: _Strategy) -> Callable:
+    def deco(fn):
+        n = getattr(fn, "_fallback_max_examples", DEFAULT_MAX_EXAMPLES)
+
+        def wrapper(*args, **kwargs):
+            rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+            for idx in range(n):
+                vals = [s.example(rng, idx) for s in strategies]
+                try:
+                    fn(*args, *vals, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"{fn.__name__} failed on example {idx}: {vals!r}"
+                    ) from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

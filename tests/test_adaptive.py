@@ -2,7 +2,11 @@
 including hypothesis property tests on the system's invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # fallback shim, see tests/_hypothesis_fallback.py
+    from _hypothesis_fallback import given, settings, st
+
 
 from repro.core.adaptive import (AdaptiveController, SpeculationLUT,
                                  fixed_controller, lut_from_grid,

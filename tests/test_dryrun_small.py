@@ -18,7 +18,7 @@ import json, sys
 import jax
 from repro.launch.mesh import make_test_mesh
 from repro.launch.specs import build_plan
-from repro.launch.dryrun import collective_bytes
+from repro.launch.dryrun import collective_bytes, cost_analysis_dict
 from repro.runtime.meshctx import use_mesh
 
 mesh = make_test_mesh(2, 4)
@@ -29,7 +29,7 @@ for arch, shape in [("internlm2-1.8b", "decode_32k"),
     plan = build_plan(arch, shape, mesh)
     with use_mesh(mesh):
         compiled = plan.lower().compile()
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     out[f"{arch}|{shape}"] = {
         "flops": ca.get("flops", 0.0),
         "colls": collective_bytes(compiled.as_text()),

@@ -16,6 +16,10 @@ import pytest
 
 from repro.configs import registry as R
 
+# full-matrix consistency sweeps take >5 minutes; the fast CI tier
+# (``pytest -m "not slow"`` / tools/citier.py fast) skips them
+pytestmark = pytest.mark.slow
+
 ARCHS = R.ASSIGNED + ["opt-6.7b"]
 
 

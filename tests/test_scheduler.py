@@ -1,0 +1,202 @@
+"""Iteration-level scheduler: slot-pool lifecycle, admission policies, and
+scheduling invariants on the simulated step backend (fast tier; the live
+engine counterparts are in test_continuous_live.py)."""
+import numpy as np
+import pytest
+
+from repro.core.adaptive import AdaptiveController, fixed_controller, lut_from_model
+from repro.core.analytical import LatencyModel
+from repro.serving.acceptance import GeometricAcceptance, match_prob
+from repro.serving.request import Request
+from repro.serving.scheduler import (ContinuousScheduler, FCFSBacklog,
+                                     ImmediateAdmit, PrefillBudgetAdmit,
+                                     SimStepBackend)
+from repro.serving.metrics import (itl_summary, mean_occupancy,
+                                   occupancy_timeline, ttft_summary)
+from repro.serving.slots import SlotPool
+from repro.serving.server import serve_continuous
+from repro.serving.traffic import uniform_traffic
+
+
+def _model(batches=(1, 2, 4, 8, 16, 32)):
+    return LatencyModel(alpha={b: 1e-4 * b ** 0.8 for b in batches},
+                        beta={b: 5e-3 for b in batches},
+                        t_s={b: 2e-4 for b in batches}, c=0.9, gamma=0.548)
+
+
+def _req(rid, arrival=0.0, plen=8, max_new=16):
+    return Request(rid=rid, arrival=arrival,
+                   tokens=np.arange(plen, dtype=np.int32), prompt_len=plen,
+                   max_new=max_new)
+
+
+# ---------------------------------------------------------------------------
+# slot pool lifecycle
+
+
+def test_slot_pool_claim_retire_cycle():
+    pool = SlotPool(3)
+    assert pool.free_count == 3 and pool.occupancy == 0
+    r0, r1 = _req(0), _req(1)
+    s0, s1 = pool.claim(r0), pool.claim(r1)
+    assert (s0, s1) == (0, 1)                      # lowest slot first
+    assert pool.occupancy == 2 and pool.free_count == 1
+    assert pool.request_at(s1) is r1
+    assert pool.remaining(s0) == 16
+    pool.consume(s0, 10)
+    assert pool.remaining(s0) == 6
+    assert pool.retire(s0) is r0
+    assert pool.occupancy == 1 and pool.free_count == 2
+    # freed slot is reused first
+    assert pool.claim(_req(2)) == 0
+    assert pool.active_slots() == [0, 1]
+
+
+def test_slot_pool_errors():
+    pool = SlotPool(1)
+    pool.claim(_req(0))
+    with pytest.raises(RuntimeError):
+        pool.claim(_req(1))                        # full
+    pool.retire(0)
+    with pytest.raises(RuntimeError):
+        pool.retire(0)                             # double retire
+    with pytest.raises(RuntimeError):
+        pool.request_at(0)                         # empty slot
+    with pytest.raises(ValueError):
+        SlotPool(0)
+
+
+# ---------------------------------------------------------------------------
+# shared acceptance process
+
+
+def test_geometric_acceptance_matches_expected_run():
+    m = _model()
+    acc = GeometricAcceptance(m, seed=0)
+    for s in (2, 4, 8):
+        draws = acc.draw(20000, s)
+        assert (draws >= 0).all() and (draws <= s).all()
+        assert abs(draws.mean() - m.l_of_s(s)) < 0.05 * max(m.l_of_s(s), 1.0)
+    assert acc.draw(5, 0).sum() == 0
+    # p-cache inverts the acceptance curve exactly
+    for s in (2, 4, 8):
+        p = match_prob(m.l_of_s(s), s)
+        assert abs(sum(p ** i for i in range(1, s + 1)) - m.l_of_s(s)) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# admission policies
+
+
+def test_immediate_admit_fills_free_slots():
+    backlog = [_req(i) for i in range(5)]
+    assert [r.rid for r in ImmediateAdmit().select(backlog, 3, 0.0)] == [0, 1, 2]
+    assert ImmediateAdmit().select(backlog, 0, 0.0) == []
+
+
+def test_prefill_budget_admission():
+    pol = PrefillBudgetAdmit(token_budget=20)
+    backlog = [_req(0, plen=12), _req(1, plen=12), _req(2, plen=4)]
+    # 12 + 12 > 20: second request waits for the next iteration
+    assert [r.rid for r in pol.select(backlog, 3, 0.0)] == [0]
+    # a single over-budget prompt is still admitted (no deadlock)
+    assert [r.rid for r in pol.select([_req(9, plen=99)], 2, 0.0)] == [9]
+    # budget is FCFS: it never skips ahead to the small prompt
+    assert [r.rid for r in pol.select(backlog, 1, 0.0)] == [0]
+
+
+def test_fcfs_backlog_rate_limit():
+    pol = FCFSBacklog(max_per_step=2)
+    backlog = [_req(i) for i in range(5)]
+    assert [r.rid for r in pol.select(backlog, 4, 0.0)] == [0, 1]
+    assert [r.rid for r in pol.select(backlog, 1, 0.0)] == [0]
+
+
+def test_budget_policy_slows_admission_in_scheduler():
+    m = _model()
+    ctrl = fixed_controller(2)
+    reqs = [_req(i, arrival=0.0, plen=16, max_new=8) for i in range(8)]
+    sched = ContinuousScheduler(SimStepBackend(m, capacity=8, seed=0), ctrl,
+                                policy=PrefillBudgetAdmit(token_budget=16))
+    sched.run(reqs)
+    # one 16-token prompt per iteration: first step runs at occupancy 1
+    assert sched.trace[0].occupancy == 1
+    assert all(len(t.admitted) <= 1 for t in sched.trace)
+    reqs2 = [_req(i, arrival=0.0, plen=16, max_new=8) for i in range(8)]
+    sched2 = ContinuousScheduler(SimStepBackend(m, capacity=8, seed=0), ctrl,
+                                 policy=ImmediateAdmit())
+    sched2.run(reqs2)
+    assert sched2.trace[0].occupancy == 8           # all admitted at once
+
+
+# ---------------------------------------------------------------------------
+# scheduler invariants (sim backend)
+
+
+def test_scheduler_serves_every_token_and_is_deterministic():
+    m = _model()
+    lut = lut_from_model(m, s_max=8)
+    res = serve_continuous(uniform_traffic(60, 0.01, 2.0, 100, seed=4, max_new=24),
+                           m, AdaptiveController(lut=lut), max_batch=8, seed=2)
+    assert sum(b.tokens_generated for b in res.batches) == 60 * 24
+    assert all(r.finish is not None and r.finish > r.arrival for r in res.requests)
+    assert all(r.n_generated == 24 for r in res.requests)
+    assert max(b.batch_size for b in res.batches) <= 8
+    res2 = serve_continuous(uniform_traffic(60, 0.01, 2.0, 100, seed=4, max_new=24),
+                            m, AdaptiveController(lut=lut), max_batch=8, seed=2)
+    np.testing.assert_allclose(res.latencies, res2.latencies)
+    assert [t.occupancy for t in res.trace] == [t.occupancy for t in res2.trace]
+
+
+def test_scheduler_chooses_s_from_live_occupancy():
+    m = _model()
+    lut = lut_from_model(m, s_max=8)
+    ctrl = AdaptiveController(lut=lut)
+    res = serve_continuous(uniform_traffic(80, 0.005, 2.0, 100, seed=1, max_new=16),
+                           m, ctrl, max_batch=16, seed=0)
+    for t in res.trace:
+        assert t.s == ctrl.choose(t.occupancy)
+    # occupancy must actually vary for this to be iteration-level
+    occs = {t.occupancy for t in res.trace}
+    assert len(occs) > 1
+
+
+def test_continuous_metrics_ttft_itl_occupancy():
+    m = _model()
+    res = serve_continuous(uniform_traffic(40, 0.01, 1.0, 100, seed=3, max_new=16),
+                           m, fixed_controller(4), max_batch=8, seed=0)
+    t = ttft_summary(res)
+    assert t.n == 40 and t.mean > 0
+    i = itl_summary(res)
+    assert i.n == 40 and i.mean > 0
+    # TTFT <= total latency for every request
+    for r in res.requests:
+        assert r.ttft <= r.latency + 1e-12
+    occ = mean_occupancy(res)
+    assert 1.0 <= occ <= 8.0
+    tl = occupancy_timeline(res)
+    assert len(tl) == len(res.batches)
+
+
+def test_sim_replay_source_reproduces_schedule():
+    """Replaying one sim run's acceptance into a second sim run reproduces
+    the admission order and batch-size sequence exactly (the mechanism the
+    sim-vs-live parity test uses)."""
+    m = _model()
+    ctrl = fixed_controller(3)
+    reqs = uniform_traffic(30, 0.001, 1.0, 100, seed=9, max_new=12)
+    sched = ContinuousScheduler(SimStepBackend(m, capacity=4, seed=5), ctrl)
+    sched.run(reqs)
+    ref = sched.trace
+
+    def source(step_idx, rids, s):
+        rec = ref[step_idx].committed
+        return np.array([max(rec[int(r)] - 1, 0) for r in rids])
+
+    reqs2 = uniform_traffic(30, 0.001, 1.0, 100, seed=9, max_new=12)
+    sched2 = ContinuousScheduler(
+        SimStepBackend(m, capacity=4, accept_source=source), ctrl)
+    sched2.run(reqs2)
+    assert [t.admitted for t in sched2.trace] == [t.admitted for t in ref]
+    assert [t.occupancy for t in sched2.trace] == [t.occupancy for t in ref]
+    assert [t.committed for t in sched2.trace] == [t.committed for t in ref]

@@ -7,7 +7,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # fallback shim, see tests/_hypothesis_fallback.py
+    from _hypothesis_fallback import given, settings, st
+
 
 from repro.configs import registry as R
 from repro.training import (AdamWConfig, DataConfig, batch_at, cross_entropy,

@@ -1,0 +1,41 @@
+"""Tiered test runner: a fast gate for every PR, the full matrix for merges.
+
+Tiers:
+  fast  — ``pytest -m "not slow"``: everything except the >5-minute
+          model-consistency matrix and the subprocess pjit dry-run.  This is
+          the tier the continuous-batching scheduler tests gate on (~5 min).
+  full  — the whole suite including ``slow`` (tier-1 verify,
+          ROADMAP "Tier-1 verify" command).
+
+Usage:
+  PYTHONPATH=src python tools/citier.py fast [extra pytest args...]
+  PYTHONPATH=src python tools/citier.py full
+"""
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+TIERS = {
+    "fast": ["-m", "not slow"],
+    "full": [],
+}
+
+
+def main(argv):
+    tier = argv[0] if argv else "fast"
+    if tier not in TIERS:
+        print(f"unknown tier {tier!r}; pick one of {sorted(TIERS)}")
+        return 2
+    env = dict(os.environ)
+    src = os.path.join(ROOT, "src")
+    env["PYTHONPATH"] = src + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    cmd = [sys.executable, "-m", "pytest", "-q", *TIERS[tier], *argv[1:]]
+    print("$", " ".join(cmd), flush=True)
+    return subprocess.call(cmd, cwd=ROOT, env=env)
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
