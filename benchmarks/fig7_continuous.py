@@ -13,6 +13,15 @@ request Poisson trace with requests joining/leaving at speculative-step
 granularity, wall-clock timed, plus a sim-vs-live scheduling parity check
 (replayed acceptance) and the run-to-completion comparison on a bursty
 trace at equal max_batch.
+
+``--live`` additionally runs the paged-KV study: a mixed short/long-prompt
+trace served (a) on the contiguous slot pool, where every slot pays the
+longest request's worst-case ``cache_len``, and (b) on the paged block
+pool at EQUAL total KV memory, where short requests only hold the blocks
+they touch — so peak live occupancy rises and mean latency drops.  A third
+run shrinks the block pool below the trace's aggregate demand to exercise
+preemption + re-prefill, with the block-mirror sim replay checking exact
+StepTrace parity (admissions, occupancies, commits, preemptions).
 """
 from __future__ import annotations
 
@@ -112,7 +121,7 @@ def run_live(n_requests: int = 120, capacity: int = 8, cache_len: int = 256,
     # counts, durations); the scheduler over it must reproduce the live
     # admission order and batch-size sequence exactly
     live_trace = res_live.trace
-    accept, duration, prefill = replay_sources(live_trace)
+    accept, duration, prefill, done = replay_sources(live_trace)
     # every model quantity is overridden by the replay sources, so a stub
     # LatencyModel suffices (no need to re-profile the engine here)
     bs = (1, 2, 4, capacity)
@@ -125,7 +134,8 @@ def run_live(n_requests: int = 120, capacity: int = 8, cache_len: int = 256,
         r.max_new = int(rng2.integers(8, 25))
     sim = ContinuousScheduler(
         SimStepBackend(model, capacity=capacity, accept_source=accept,
-                       duration_source=duration, prefill_source=prefill),
+                       duration_source=duration, prefill_source=prefill,
+                       done_source=done),
         AdaptiveController(lut=lut))
     sim.run(poisson2)
     parity = ([t.admitted for t in sim.trace] == [t.admitted for t in live_trace]
@@ -146,8 +156,87 @@ def run_live(n_requests: int = 120, capacity: int = 8, cache_len: int = 256,
     rtc = EngineBackend(engine, tparams, dparams, cache_len=cache_len)
     res_rtc = serve(bursty(), rtc, ctrl, max_batch=capacity)
 
+    # -- paged KV pool: mixed short/long trace at equal total KV memory ----
+    # 75% short prompts (<= 32 tokens) / 25% long (>= 192): the contiguous
+    # pool must size EVERY slot for the long requests, so at a fixed KV
+    # budget it only fits a few slots; the paged pool spends the same rows
+    # as 16-token blocks and lets short requests ride along.
+    long_len, block = 192, 16
+    cache_long = 240                       # covers long + max_new + S_MAX
+    cap_contig = 4
+    total_kv = cap_contig * cache_long     # equal-memory budget (KV rows)
+    cap_paged = 10
+    n_blocks = total_kv // block
+
+    def mixed_trace(n=32, seed=13, budget=(8, 25)):
+        reqs = make_requests(n, [TrafficPhase(0.002, 1.0, float("inf"))],
+                             VOCAB, seed=seed, max_new=24)
+        r = np.random.default_rng(seed)
+        for q in reqs:
+            if r.random() < 0.25:
+                L = int(r.integers(long_len, long_len + 9))
+            else:
+                L = int(r.integers(8, 33))
+            q.tokens = r.integers(0, VOCAB, (L,)).astype(np.int32)
+            q.prompt_len = L
+            q.max_new = int(r.integers(*budget))
+        return reqs
+
+    n_mixed = 20 if quick else 32
+    res_ct = serve_continuous_live(mixed_trace(n_mixed), engine, tparams,
+                                   dparams, ctrl, capacity=cap_contig,
+                                   cache_len=cache_long)
+    res_pg = serve_continuous_live(mixed_trace(n_mixed), engine, tparams,
+                                   dparams, ctrl, capacity=cap_paged,
+                                   cache_len=cache_long, block_size=block,
+                                   num_blocks=n_blocks)
+    peak_ct = max(t.occupancy for t in res_ct.trace)
+    peak_pg = max(t.occupancy for t in res_pg.trace)
+
+    # -- preemption: aggregate KV demand beyond the pool ------------------
+    # Half the equal-memory budget and near-engine-max token budgets (so
+    # requests outgrow the admission-time S_MAX reservation mid-flight):
+    # the live set no longer fits, the scheduler evicts (longest-remaining,
+    # LIFO-admitted) victims and re-prefills them, and the block-mirror sim
+    # must re-derive the identical schedule from the replayed outcomes.
+    small_blocks = n_blocks // 2
+    pre_trace = lambda: mixed_trace(n_mixed, budget=(24, 33))
+    res_pre = serve_continuous_live(pre_trace(), engine, tparams,
+                                    dparams, ctrl, capacity=cap_paged,
+                                    cache_len=cache_long, block_size=block,
+                                    num_blocks=small_blocks)
+    n_preempt = sum(len(t.preempted) for t in res_pre.trace)
+    acc2, dur2, pre2, done2 = replay_sources(res_pre.trace)
+    sim_pre = ContinuousScheduler(
+        SimStepBackend(model, capacity=cap_paged, accept_source=acc2,
+                       duration_source=dur2, prefill_source=pre2,
+                       done_source=done2, block_size=block,
+                       num_blocks=small_blocks, max_context=cache_long),
+        AdaptiveController(lut=lut))
+    sim_pre.run(pre_trace())
+    preempt_parity = (
+        [t.admitted for t in sim_pre.trace] == [t.admitted for t in res_pre.trace]
+        and [t.preempted for t in sim_pre.trace] == [t.preempted for t in res_pre.trace]
+        and [t.occupancy for t in sim_pre.trace] == [t.occupancy for t in res_pre.trace]
+        and [t.committed for t in sim_pre.trace] == [t.committed for t in res_pre.trace])
+
     payload = {
         "n_requests": n_requests, "capacity": capacity,
+        "paged_kv": {
+            "block_size": block, "total_kv_tokens": total_kv,
+            "contiguous": {"capacity": cap_contig, "cache_len": cache_long,
+                           "peak_occupancy": peak_ct,
+                           "mean_latency_s": summarize(res_ct).mean},
+            "paged": {"capacity": cap_paged, "num_blocks": n_blocks,
+                      "peak_occupancy": peak_pg,
+                      "mean_latency_s": summarize(res_pg).mean},
+            "peak_occupancy_gain": peak_pg / max(peak_ct, 1),
+            "preemption": {"num_blocks": small_blocks,
+                           "n_preemptions": n_preempt,
+                           "completed": all(r.finish is not None
+                                            for r in res_pre.requests),
+                           "sim_live_parity": bool(preempt_parity)},
+        },
         "poisson_mean_latency_s": summarize(res_live).mean,
         "poisson_ttft_s": ttft_summary(res_live).mean,
         "poisson_mean_occupancy": mean_occupancy(res_live),
@@ -171,6 +260,21 @@ def run_live(n_requests: int = 120, capacity: int = 8, cache_len: int = 256,
     print(f"bursty trace: continuous {payload['bursty_continuous_mean_s']:.3f}s "
           f"vs run-to-completion {payload['bursty_rtc_mean_s']:.3f}s "
           f"-> {payload['continuous_gain_live']:.2f}x")
+    pk = payload["paged_kv"]
+    print(f"paged KV (equal {pk['total_kv_tokens']}-token KV budget, mixed "
+          f"75/25 short/long trace): peak occupancy "
+          f"{pk['contiguous']['peak_occupancy']} (contiguous, "
+          f"{cap_contig} x {cache_long}) -> {pk['paged']['peak_occupancy']} "
+          f"(paged, {pk['paged']['num_blocks']} x {block}-token blocks), "
+          f"mean latency {pk['contiguous']['mean_latency_s']:.3f}s -> "
+          f"{pk['paged']['mean_latency_s']:.3f}s")
+    pr = pk["preemption"]
+    print(f"preemption at {pr['num_blocks']} blocks (half budget, "
+          f"24-32-token requests): {pr['n_preemptions']} evictions, "
+          f"completed={pr['completed']}, "
+          f"sim-vs-live StepTrace parity={pr['sim_live_parity']}")
+    if pk["paged"]["peak_occupancy"] <= pk["contiguous"]["peak_occupancy"]:
+        print("WARNING: paged pool did not beat contiguous peak occupancy")
     return payload
 
 

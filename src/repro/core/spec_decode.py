@@ -31,13 +31,36 @@ out), so the same compiled step serves every occupancy level.
 batch — a jit-cached B=1 prefill followed by a jit-cached per-capacity
 scatter into the slot — and :meth:`SpecDecodeEngine.retire_slot` frees a
 row, all without recompiling the (capacity, s) step function.
+
+Paged KV design note (vLLM-style, enabling the paper's synergy at high
+occupancy): passing ``block_size`` (and optionally ``num_blocks``) to
+:meth:`SpecDecodeEngine.init_slots` replaces the per-slot contiguous ring
+caches with one shared pool of fixed-size KV blocks.  The device half is
+``k/v [nL, num_blocks, block_size, KVH, hd]`` plus a pool-wide ``pos`` map
+and a per-slot block table ``bt [capacity, max_blocks]`` threaded through
+``DecodeState.tcache``; the host half is a
+:class:`~repro.serving.slots.PagedKVTables` free list carried on
+``DecodeState.paged``.  Allocation is block-granular and follows the
+commit frontier: ``prefill_into`` claims ``ceil(prompt/block)`` blocks and
+scatters the B=1 prefill rows block-wise into the pool; every ``step``
+first grows each live slot's table to cover its worst-case writes
+(``seq_len + s`` rows — the s+1-token commit plus the verify feed) and
+afterwards advances the host token mirror by the raw commit counts;
+``retire_slot`` frees the blocks and clears their ``pos`` rows with one
+jit-cached scatter so a recycled block can never leak stale attendable
+keys.  Attention gathers each slot's logical view through the block table
+(kernels/paged.py) and reuses the verify kernel unchanged, so short and
+long requests stop sharing one worst-case ``cache_len`` and total KV
+memory is ``num_blocks * block_size`` instead of ``capacity * cache_len``.
+The draft model's (tiny) cache stays a contiguous ring at the logical
+per-slot length.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, TYPE_CHECKING, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,11 +69,16 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.configs.registry import build_model
 
+if TYPE_CHECKING:  # real import is lazy: serving/__init__ imports back here
+    from repro.serving.slots import PagedKVTables
+
 Params = Any
 
 # headroom rows in the per-request output buffer: one speculative step can
 # commit up to s + 1 tokens past max_new, and prefill_into scatters B=1
-# buffers into pool buffers, so both must size `out` identically
+# buffers into pool buffers, so both must size `out` identically.  It is
+# also the hard ceiling on s: the step's `out` scatter silently drops
+# writes past the buffer, so SpecDecodeEngine.step validates s <= S_MAX.
 S_MAX = 8
 
 
@@ -64,6 +92,9 @@ class DecodeState:
     out: jax.Array           # [B, max_new + s_max] generated tokens
     n_generated: jax.Array   # [B]
     done: jax.Array          # [B] bool
+    # host half of the paged KV pool (block free list + per-slot tables);
+    # None for contiguous per-slot ring caches
+    paged: Optional["PagedKVTables"] = None
 
 
 @dataclasses.dataclass
@@ -93,6 +124,9 @@ class SpecDecodeEngine:
         self._step_fns: Dict[Tuple[int, int], Any] = {}
         self._prefill_fns: Dict[Tuple[int, int, int], Any] = {}
         self._inject_fn: Any = None
+        self._inject_paged_fn: Any = None
+        self._retire_fn: Any = None
+        self._retire_paged_fn: Any = None
 
     # ------------------------------------------------------------------
     # prefill
@@ -151,10 +185,40 @@ class SpecDecodeEngine:
         return tcache, dcache
 
     def init_slots(self, capacity: int, cache_len: int,
-                   src_len: Optional[int] = None) -> DecodeState:
+                   src_len: Optional[int] = None, *,
+                   block_size: Optional[int] = None,
+                   num_blocks: Optional[int] = None) -> DecodeState:
         """Blank fixed-capacity slot pool: every row is an empty slot
-        (``done = True``), ready to be claimed via :meth:`prefill_into`."""
-        tcache, dcache = self._init_caches(capacity, cache_len, src_len)
+        (``done = True``), ready to be claimed via :meth:`prefill_into`.
+
+        With ``block_size`` set, the target KV lives in a paged block pool
+        instead of per-slot rings: ``cache_len`` becomes the per-slot
+        *logical* cap (rounded up to whole blocks) and ``num_blocks``
+        (default: worst case, ``capacity * blocks_per_slot``) sizes the
+        shared pool — undersize it to trade memory for scheduler
+        preemptions.  See the module docstring's paged KV design note.
+        """
+        if block_size is None:
+            tcache, dcache = self._init_caches(capacity, cache_len, src_len)
+            paged = None
+        else:
+            from repro.serving.slots import PagedKVTables
+            if not hasattr(self.target, "init_paged_cache"):
+                raise NotImplementedError(
+                    f"paged KV is not supported for family "
+                    f"'{self.tcfg.family}'")
+            max_blocks = -(-cache_len // block_size)
+            if num_blocks is None:
+                num_blocks = capacity * max_blocks
+            paged = PagedKVTables(num_blocks, block_size, capacity, max_blocks)
+            tcache = self.target.init_paged_cache(num_blocks, block_size,
+                                                  dtype=self.dtype)
+            tcache["bt"] = jnp.full((capacity, max_blocks), -1, jnp.int32)
+            # the (tiny) draft keeps a contiguous ring at the logical cap
+            dcache = (self.draft.init_cache(capacity,
+                                            cache_len=paged.logical_len,
+                                            dtype=self.dtype)
+                      if self.draft is not None else None)
         return DecodeState(
             tcache=tcache, dcache=dcache,
             # seq_lens = 2 keeps the masked step's positions non-negative
@@ -162,7 +226,8 @@ class SpecDecodeEngine:
             last2=jnp.zeros((capacity, 2), jnp.int32),
             out=jnp.zeros((capacity, self.max_new + S_MAX + 1), jnp.int32),
             n_generated=jnp.zeros((capacity,), jnp.int32),
-            done=jnp.ones((capacity,), bool))
+            done=jnp.ones((capacity,), bool),
+            paged=paged)
 
     @staticmethod
     def _slot_axis(full_shape, single_shape) -> int:
@@ -181,9 +246,35 @@ class SpecDecodeEngine:
             return jax.tree.map(upd, full, single)
         return jax.jit(fn)
 
+    def _build_inject_paged(self):
+        """Scatter a B=1 contiguous prefill into the paged pool block-wise.
+
+        ``scat_tbl`` is the slot's block table padded with ``num_blocks``
+        (an out-of-range row that ``mode="drop"`` discards) so unallocated
+        logical blocks never touch the pool; ``bt_row`` is the same table
+        padded with -1 for the device block table.
+        """
+        def fn(tcache, single_tc, slot, scat_tbl, bt_row):
+            NB, bs = tcache["pos"].shape
+            MAXB = scat_tbl.shape[0]
+            sk = single_tc["k"][:, 0]                    # [nL, L, KVH, hd]
+            nL = sk.shape[0]
+            sk = sk.reshape(nL, MAXB, bs, *sk.shape[2:])
+            sv = single_tc["v"][:, 0].reshape(nL, MAXB, bs, *sk.shape[3:])
+            spos = single_tc["pos"][0].reshape(MAXB, bs)
+            k = tcache["k"].at[:, scat_tbl].set(
+                sk.astype(tcache["k"].dtype), mode="drop")
+            v = tcache["v"].at[:, scat_tbl].set(
+                sv.astype(tcache["v"].dtype), mode="drop")
+            pos = tcache["pos"].at[scat_tbl].set(spos, mode="drop")
+            bt = tcache["bt"].at[slot].set(bt_row)
+            return {"k": k, "v": v, "pos": pos, "bt": bt}
+        return jax.jit(fn)
+
     def prefill_into(self, tparams, dparams, state: DecodeState, slot: int,
                      tokens, prompt_len: int, cache_len: int,
-                     target_extras: Optional[Dict] = None) -> DecodeState:
+                     target_extras: Optional[Dict] = None,
+                     warm: bool = False) -> DecodeState:
         """Inject one new request into row ``slot`` of a live slot pool.
 
         Runs the (jit-cached, B=1) prefill for the prompt, then scatters every
@@ -191,28 +282,83 @@ class SpecDecodeEngine:
         done — into the pool with one jit-cached dynamic-update-slice tree.
         The (capacity, s) step function is untouched, so admitting a request
         never recompiles the serving step.
+
+        Paged pool: allocates ``ceil(prompt_len / block_size)`` blocks from
+        the free list and scatters the prefill rows block-wise through the
+        table.  ``warm=True`` compiles the path without allocating blocks or
+        mutating host bookkeeping (the result must be discarded).
         """
         tokens = np.asarray(tokens, np.int32).reshape(1, -1)
+        if state.paged is not None:
+            cache_len = state.paged.logical_len
         single = self.prefill(tparams, dparams, tokens,
                               np.array([prompt_len], np.int32), cache_len,
                               target_extras)
         capacity = int(state.seq_lens.shape[0])
-        if capacity == 1:
-            return single
         if self._inject_fn is None:
             self._inject_fn = self._build_inject()
-        full = (state.tcache, state.dcache, state.seq_lens, state.last2,
-                state.out, state.n_generated, state.done)
-        one = (single.tcache, single.dcache, single.seq_lens, single.last2,
-               single.out, single.n_generated, single.done)
-        return DecodeState(*self._inject_fn(full, one, jnp.int32(slot)))
+        if state.paged is None:
+            if capacity == 1:
+                return single
+            full = (state.tcache, state.dcache, state.seq_lens, state.last2,
+                    state.out, state.n_generated, state.done)
+            one = (single.tcache, single.dcache, single.seq_lens, single.last2,
+                   single.out, single.n_generated, single.done)
+            return DecodeState(*self._inject_fn(full, one, jnp.int32(slot)))
+        pk = state.paged
+        scat_tbl = np.full((pk.max_blocks,), pk.num_blocks, np.int32)
+        bt_row = np.full((pk.max_blocks,), -1, np.int32)
+        if not warm:
+            pk.prefill(slot, prompt_len)
+            ids = pk.table(slot)
+            scat_tbl[:len(ids)] = ids
+            bt_row[:len(ids)] = ids
+        if self._inject_paged_fn is None:
+            self._inject_paged_fn = self._build_inject_paged()
+        tcache = self._inject_paged_fn(state.tcache, single.tcache,
+                                       jnp.int32(slot), jnp.asarray(scat_tbl),
+                                       jnp.asarray(bt_row))
+        full = (state.dcache, state.seq_lens, state.last2, state.out,
+                state.n_generated, state.done)
+        one = (single.dcache, single.seq_lens, single.last2, single.out,
+               single.n_generated, single.done)
+        dcache, seq_lens, last2, out, n_gen, done = \
+            self._inject_fn(full, one, jnp.int32(slot))
+        return DecodeState(tcache=tcache, dcache=dcache, seq_lens=seq_lens,
+                           last2=last2, out=out, n_generated=n_gen, done=done,
+                           paged=pk)
 
     def retire_slot(self, state: DecodeState, slot: int) -> DecodeState:
         """Free a slot (mark done): the masked step stops committing for it,
-        and the row can be re-claimed by the next :meth:`prefill_into`."""
-        done = np.asarray(state.done).copy()
-        done[slot] = True
-        return dataclasses.replace(state, done=jnp.asarray(done))
+        and the row can be re-claimed by the next :meth:`prefill_into`.
+
+        Both paths are jit-cached device scatters — no host round-trip, so
+        retirement stays off the step loop's critical path.  The paged path
+        additionally frees the slot's blocks and clears their ``pos`` rows,
+        so a recycled block can never leak stale attendable keys into its
+        next owner.
+        """
+        if state.paged is not None:
+            pk = state.paged
+            freed = pk.release(slot)
+            pad = np.full((pk.max_blocks,), pk.num_blocks, np.int32)
+            pad[:len(freed)] = freed
+            if self._retire_paged_fn is None:
+                def fn(done, pos, bt, slot, freed):
+                    return (done.at[slot].set(True),
+                            pos.at[freed].set(-1, mode="drop"),
+                            bt.at[slot].set(-1))
+                self._retire_paged_fn = jax.jit(fn)
+            done, pos, bt = self._retire_paged_fn(
+                state.done, state.tcache["pos"], state.tcache["bt"],
+                jnp.int32(slot), jnp.asarray(pad))
+            return dataclasses.replace(
+                state, done=done, tcache=dict(state.tcache, pos=pos, bt=bt))
+        if self._retire_fn is None:
+            self._retire_fn = jax.jit(
+                lambda done, slot: done.at[slot].set(True))
+        return dataclasses.replace(
+            state, done=self._retire_fn(state.done, jnp.int32(slot)))
 
     # ------------------------------------------------------------------
     # one speculative step
@@ -226,7 +372,36 @@ class SpecDecodeEngine:
 
 
     def step(self, tparams, dparams, state: DecodeState, s: int,
-             rng: Optional[jax.Array] = None) -> Tuple[DecodeState, StepStats]:
+             rng: Optional[jax.Array] = None, *,
+             warm: bool = False) -> Tuple[DecodeState, StepStats]:
+        """One speculative step at length ``s`` for the whole batch.
+
+        ``s`` must stay within ``S_MAX``: the ``out`` ring scatter sizes its
+        headroom from S_MAX and silently drops writes past it, so a larger s
+        would lose committed tokens instead of failing loudly.
+
+        Paged pool: before the device step, each live slot's block table is
+        grown to cover its worst-case writes this step (``seq_len + s``
+        rows); afterwards the host token mirror advances by the raw commit
+        counts.  ``warm=True`` compiles the step without touching the host
+        block bookkeeping (the result must be discarded).
+        """
+        if not 0 <= s <= S_MAX:
+            raise ValueError(
+                f"s={s} outside [0, {S_MAX}]: the step's output buffer is "
+                f"sized for at most S_MAX={S_MAX} speculative tokens and "
+                f"would silently drop commits beyond it")
+        if state.paged is not None and not warm:
+            pk = state.paged
+            grew = False
+            for slot in pk.active_slots():
+                grew |= bool(pk.ensure(slot, pk.tokens(slot) + s))
+            if grew:
+                # prefill_into/retire_slot keep the device table in sync, so
+                # the host->device upload only happens on actual growth
+                state = dataclasses.replace(
+                    state, tcache=dict(state.tcache,
+                                       bt=jnp.asarray(pk.device_tables())))
         B = state.seq_lens.shape[0]
         key = (B, s)
         if key not in self._step_fns:
@@ -239,8 +414,13 @@ class SpecDecodeEngine:
             args = (*args, rng)
         (tc, dc, seq_lens, last2, out, n_gen, done, a, n_commit) = \
             self._step_fns[key](*args)
-        new_state = DecodeState(tc, dc, seq_lens, last2, out, n_gen, done)
-        return new_state, StepStats(accepted=np.asarray(a), committed=np.asarray(n_commit))
+        new_state = DecodeState(tc, dc, seq_lens, last2, out, n_gen, done,
+                                paged=state.paged)
+        stats = StepStats(accepted=np.asarray(a), committed=np.asarray(n_commit))
+        if state.paged is not None and not warm:
+            for slot in state.paged.active_slots():
+                state.paged.commit(slot, int(stats.committed[slot]))
+        return new_state, stats
 
     # ------------------------------------------------------------------
     # full generation driver

@@ -1,0 +1,79 @@
+"""Block-table-aware attention gather for the paged KV pool.
+
+The paged pool stores KV rows in fixed-size blocks shared by every slot:
+
+    k_pool / v_pool : [num_blocks, block_size, KVH, hd]
+    pos             : [num_blocks, block_size]   absolute position, -1 unwritten
+    block_tables    : [B, max_blocks]            physical block ids, -1 unused
+
+``gather_kv_blocks`` rebuilds each slot's *logical* contiguous view
+[B, max_blocks * block_size, ...] from its block table — ownership is by
+construction (a slot only gathers its own blocks), and entries behind a -1
+table entry surface with key position -1, which the shared position mask
+already treats as unattendable.  The gathered view then feeds the existing
+:func:`~repro.kernels.ops.spec_verify_attn` wrapper, so the TPU Pallas
+verify kernel (and its int8 path) keeps serving the hot loop unchanged; on
+TPU the gather lowers to one dynamic-slice stream per block, which is the
+same HBM traffic the contiguous ring paid for the identical logical length.
+
+The win is in the *persistent* footprint: the pool holds ``num_blocks *
+block_size`` KV rows total instead of ``capacity * cache_len`` worst-case
+rows, so short requests stop paying for the longest one (BASS-style ragged
+per-request KV, PAPERS.md).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ops import spec_verify_attn
+
+
+def gather_kv_blocks(k: jax.Array, v: jax.Array, block_tables: jax.Array,
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Gather per-slot logical KV views from the shared block pool.
+
+    k/v: [NB, bs, KVH, hd]; block_tables: [B, MAXB] (-1 = unallocated).
+    Returns (k_slot, v_slot) of shape [B, MAXB * bs, KVH, hd].  Rows behind
+    -1 table entries contain arbitrary pool data — callers must mask them
+    via :func:`gather_key_positions` (which reports their position as -1).
+    """
+    B, MAXB = block_tables.shape
+    bs = k.shape[1]
+    safe = jnp.where(block_tables < 0, 0, block_tables)
+    kg = k[safe].reshape(B, MAXB * bs, *k.shape[2:])
+    vg = v[safe].reshape(B, MAXB * bs, *v.shape[2:])
+    return kg, vg
+
+
+def gather_key_positions(pos: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """Per-slot logical key positions [B, MAXB * bs]; -1 where the table has
+    no block (or the pool row is unwritten), i.e. never attendable."""
+    B, MAXB = block_tables.shape
+    bs = pos.shape[1]
+    safe = jnp.where(block_tables < 0, 0, block_tables)
+    kp = jnp.where((block_tables < 0)[:, :, None], -1, pos[safe])
+    return kp.reshape(B, MAXB * bs)
+
+
+def paged_verify_attn(q: jax.Array, k: jax.Array, v: jax.Array,
+                      q_pos: jax.Array, pos: jax.Array,
+                      block_tables: jax.Array,
+                      window: Optional[int] = None, prefix_len: int = 0,
+                      scale: Optional[float] = None,
+                      use_pallas: Optional[bool] = None) -> jax.Array:
+    """Verify-step attention against the paged pool.
+
+    q: [B, T, H, hd]; k/v: [NB, bs, KVH, hd]; q_pos: [B, T];
+    pos: [NB, bs]; block_tables: [B, MAXB].  Returns [B, T, H, hd].
+
+    Gather + the existing verify kernel: identical masking semantics to the
+    contiguous ring at logical length MAXB * bs.
+    """
+    kg, vg = gather_kv_blocks(k, v, block_tables)
+    kpos = gather_key_positions(pos, block_tables)
+    return spec_verify_attn(q, kg, vg, q_pos, kpos, window=window,
+                            prefix_len=prefix_len, scale=scale,
+                            use_pallas=use_pallas)

@@ -24,6 +24,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, pad_vocab
 from repro.kernels.ops import spec_verify_attn
+from repro.kernels.paged import paged_verify_attn
 from repro.models import common as cm
 from repro.models.common import ParamDef
 from repro.models.moe import moe_defs, moe_forward
@@ -135,6 +136,32 @@ class DecoderLM:
             "k": jnp.zeros((nL, batch, cache_len, a.n_kv_heads, a.head_dim), dtype),
             "v": jnp.zeros((nL, batch, cache_len, a.n_kv_heads, a.head_dim), dtype),
             "pos": jnp.full((batch, cache_len), -1, jnp.int32),
+        }
+
+    def init_paged_cache(self, num_blocks: int, block_size: int,
+                         dtype=jnp.float32) -> Dict:
+        """Paged KV pool shared by every slot (vLLM-style; DESIGN in
+        core/spec_decode.py).  Rows live in fixed-size blocks addressed
+        through per-slot block tables (the ``bt`` entry is added by
+        :meth:`~repro.core.spec_decode.SpecDecodeEngine.init_slots`):
+
+            k/v : [nL, num_blocks, block_size, KVH, hd]
+            pos : [num_blocks, block_size]  absolute position, -1 unwritten
+        """
+        c, a = self.cfg, self.cfg.attn
+        if a.kind == "mla":
+            raise NotImplementedError(
+                "paged KV does not support MLA's compressed cache yet")
+        if c.kv_quant:
+            raise NotImplementedError(
+                "paged KV does not support int8 KV caches yet")
+        nL = c.n_layers
+        return {
+            "k": jnp.zeros((nL, num_blocks, block_size, a.n_kv_heads,
+                            a.head_dim), dtype),
+            "v": jnp.zeros((nL, num_blocks, block_size, a.n_kv_heads,
+                            a.head_dim), dtype),
+            "pos": jnp.full((num_blocks, block_size), -1, jnp.int32),
         }
 
     def cache_shapes(self, batch: int, cache_len: int, dtype=jnp.bfloat16) -> Dict:
@@ -460,7 +487,14 @@ class DecoderLM:
                     seq_lens: jax.Array) -> Tuple[jax.Array, Dict]:
         """tokens: [B, T] the last committed token followed by T-1 drafts;
         they occupy absolute positions (seq_lens-1) ... (seq_lens+T-2).
-        Returns (logits [B, T, V], updated cache)."""
+        Returns (logits [B, T, V], updated cache).
+
+        A cache with a ``bt`` (block table) entry is a paged pool (see
+        :meth:`init_paged_cache`) and takes the paged write/gather path;
+        otherwise the per-row ring-buffer path below runs unchanged.
+        """
+        if "bt" in cache:
+            return self._decode_step_paged(params, tokens, cache, seq_lens)
         c = self.cfg
         B, T = tokens.shape
         L = cache["pos"].shape[1]
@@ -488,6 +522,56 @@ class DecoderLM:
         table = params["embed"] if c.tie_embeddings else params["unembed"]
         logits = cm.unembed(x, table, c.vocab_size)
         return logits, dict(new_caches, pos=pos_arr)
+
+    def _decode_step_paged(self, params: Params, tokens: jax.Array,
+                           cache: Dict, seq_lens: jax.Array,
+                           ) -> Tuple[jax.Array, Dict]:
+        """Incremental decode against the paged KV pool.
+
+        Token at absolute position p of slot b lives at physical row
+        (bt[b, p // block_size], p % block_size).  Slots whose table has no
+        block for a write position (empty or retired slots, bt = -1) have
+        their writes dropped; their reads surface key position -1 and are
+        masked out, so the same compiled step serves every occupancy level —
+        exactly the contiguous slot-pool contract.
+        """
+        c, a = self.cfg, self.cfg.attn
+        B, T = tokens.shape
+        NB, bs = cache["pos"].shape
+        bt = cache["bt"]                                        # [B, MAXB]
+        x = cm.embed(tokens, params["embed"])
+        x = shard(x, "data", None, None)
+        positions = (seq_lens - 1)[:, None] + jnp.arange(T, dtype=jnp.int32)[None]
+        blk = jnp.clip(positions // bs, 0, bt.shape[1] - 1)
+        off = positions % bs
+        pb = jnp.take_along_axis(bt, blk, axis=1)               # [B, T]
+        pb = jnp.where(pb < 0, NB, pb)                          # NB => dropped
+        pos_arr = cache["pos"].at[pb, off].set(positions, mode="drop")
+        prefix_len = c.prefix_len if c.bidirectional_prefix else 0
+
+        def layer(carry, xs):
+            h = carry
+            lp, lcache = xs
+            hn = cm.rms_norm(h, lp["attn_norm"], c.norm_eps)
+            q, k_new, v_new = self._qkv_gqa(lp, hn, positions)
+            k = lcache["k"].at[pb, off].set(
+                k_new.astype(lcache["k"].dtype), mode="drop")
+            v = lcache["v"].at[pb, off].set(
+                v_new.astype(lcache["v"].dtype), mode="drop")
+            a_out = paged_verify_attn(q, k, v, positions, pos_arr, bt,
+                                      window=a.window, prefix_len=prefix_len)
+            a_out = jnp.einsum("bthk,hkd->btd", a_out, lp["wo"])
+            h = h + shard(a_out, "data", None, None)
+            m_out, _ = self._mlp(lp, cm.rms_norm(h, lp["mlp_norm"], c.norm_eps))
+            h = h + shard(m_out, "data", None, None)
+            return h, {"k": k, "v": v}
+
+        layer_caches = {k: v for k, v in cache.items() if k in ("k", "v")}
+        x, new_caches = jax.lax.scan(layer, x, (params["layers"], layer_caches))
+        x = cm.rms_norm(x, params["final_norm"], c.norm_eps)
+        table = params["embed"] if c.tie_embeddings else params["unembed"]
+        logits = cm.unembed(x, table, c.vocab_size)
+        return logits, dict(new_caches, pos=pos_arr, bt=bt)
 
     @staticmethod
     def commit(cache_out: Dict, accept_idx: jax.Array) -> Dict:

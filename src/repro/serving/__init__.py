@@ -7,6 +7,7 @@ from repro.serving.scheduler import (AdmissionPolicy, ContinuousEngineBackend,
                                      serve_continuous_live)
 from repro.serving.server import (EngineBackend, ServeResult, SimBackend,
                                   serve, serve_continuous)
-from repro.serving.slots import SlotPool
+from repro.serving.slots import (BlockPool, BlockPoolExhausted, PagedKVTables,
+                                 SlotPool)
 from repro.serving.traffic import (TrafficPhase, alternating_traffic,
                                    make_requests, uniform_traffic)

@@ -23,6 +23,20 @@ runs against hardware truth and against the fitted simulation:
 scheduler over :class:`SimStepBackend`), so Fig. 5-7 traffic studies can be
 replayed on a real engine and validated against the simulation
 (sim-vs-live parity on identical traces).
+
+Paged KV + preemption: when the engine slot pool is paged (fixed-size
+blocks + a free list, core/spec_decode.py design note), the scheduler also
+(a) admits by block feasibility — a prompt only enters when the free list
+covers it, (b) hard-rejects requests whose worst-case footprint
+(prompt + max_new + S_MAX) exceeds the per-request capacity (previously
+they silently wrapped their KV ring), and (c) preempts under memory
+pressure: if covering this step's worst-case commit (s+1 tokens per live
+slot) could exhaust the free list, the victim with the longest remaining
+budget (ties: most recently admitted, i.e. LIFO) is evicted back to the
+backlog and later re-prefilled from prompt + its generated-token stash.
+Preemptions are recorded in :class:`StepTrace`; because they are pure
+functions of the block accounting, a :class:`SimStepBackend` built with
+the same pool geometry re-derives them exactly during replay.
 """
 from __future__ import annotations
 
@@ -34,9 +48,10 @@ import numpy as np
 
 from repro.core.adaptive import AdaptiveController
 from repro.core.analytical import LatencyModel
+from repro.core.spec_decode import S_MAX
 from repro.serving.acceptance import GeometricAcceptance
 from repro.serving.request import BatchRecord, Request
-from repro.serving.slots import SlotPool
+from repro.serving.slots import PagedKVTables, SlotPool
 
 
 # ---------------------------------------------------------------------------
@@ -96,16 +111,39 @@ class FCFSBacklog(AdmissionPolicy):
 # step backends
 
 
+def _reject_oversize(req: Request, max_context: int) -> None:
+    """Hard admission bound: a request whose worst-case KV footprint exceeds
+    the per-request capacity can never be served — deferring it would spin
+    forever, and admitting it would silently wrap the ring / overrun the
+    block table and corrupt the KV (the PR-1 bug this check closes)."""
+    if req.prompt_len + req.max_new + S_MAX > max_context:
+        raise ValueError(
+            f"request {req.rid}: prompt_len={req.prompt_len} + "
+            f"max_new={req.max_new} + S_MAX={S_MAX} exceeds the per-request "
+            f"KV capacity {max_context}; the KV ring would wrap and corrupt "
+            f"itself")
+
+
 class ContinuousEngineBackend:
     """Live-engine step backend: a SpecDecodeEngine slot pool on hardware.
 
     Prefill compiles (per prompt bucket) and step compiles (per s) are warmed
     outside the timed regions — serving latency is steady-state, matching
     EngineBackend's treatment of compile time.
+
+    With ``block_size`` set, the engine slot pool is the paged KV block pool
+    (``self.kv`` holds its host free list / block tables) and the scheduler
+    gains admission feasibility checks and preemption under memory pressure.
+    A preempted request's generated tokens are stashed host-side; on
+    re-admission it re-prefills from prompt + stash (recompute-style
+    restore) and greedy decoding continues exactly where it left off.
     """
 
     def __init__(self, engine, tparams, dparams, capacity: int,
-                 cache_len: int = 256, warm_s: Sequence[int] = ()):
+                 cache_len: int = 256, warm_s: Sequence[int] = (),
+                 block_size: Optional[int] = None,
+                 num_blocks: Optional[int] = None,
+                 collect_outputs: bool = False):
         if engine.tcfg.family in ("encdec", "audio", "vlm"):
             # these families need per-request modality extras (src_embeds /
             # prefix_embeds) that the admission path does not plumb yet; see
@@ -117,39 +155,63 @@ class ContinuousEngineBackend:
         self.tparams = tparams
         self.dparams = dparams
         self.capacity = capacity
-        self.cache_len = cache_len
-        self.state = engine.init_slots(capacity, cache_len)
+        self.state = engine.init_slots(capacity, cache_len,
+                                       block_size=block_size,
+                                       num_blocks=num_blocks)
+        self.kv = self.state.paged               # None => contiguous rings
+        self.cache_len = (self.kv.logical_len if self.kv is not None
+                          else cache_len)
+        self.collect_outputs = collect_outputs
+        self.outputs: Dict[int, np.ndarray] = {}   # rid -> generated tokens
+        self._stash: Dict[int, np.ndarray] = {}    # rid -> pre-preempt tokens
         self._warm_prefill: set = set()
         self._warm_step: set = set()
         for s in warm_s:
             self.warm_step(s)
 
+    @property
+    def max_context(self) -> int:
+        """Per-request KV capacity in tokens (admission hard limit)."""
+        return self.cache_len
+
     def warm_step(self, s: int) -> None:
         if s not in self._warm_step:
-            self.engine.step(self.tparams, self.dparams, self.state, s)
+            self.engine.step(self.tparams, self.dparams, self.state, s,
+                             warm=True)
             self._warm_step.add(s)
 
-    @staticmethod
-    def _bucket(n: int) -> int:
+    def _bucket(self, n: int) -> int:
         p = 4
         while p < n:
             p *= 2
-        return p
+        return min(p, self.cache_len)   # never wider than the KV capacity
+
+    def _full_prompt(self, req: Request) -> np.ndarray:
+        """Prompt plus any tokens generated before a preemption."""
+        stash = self._stash.get(req.rid)
+        if stash is None:
+            return np.asarray(req.tokens[:req.prompt_len], np.int32)
+        return np.concatenate(
+            [np.asarray(req.tokens[:req.prompt_len], np.int32), stash])
 
     def prefill(self, req: Request, slot: int) -> float:
         """Inject ``req`` into ``slot``; returns seconds of prefill work."""
-        P = self._bucket(req.prompt_len)
+        _reject_oversize(req, self.max_context)   # defense in depth
+        prompt = self._full_prompt(req)
+        plen = len(prompt)
+        P = self._bucket(plen)
         toks = np.ones((P,), np.int32)
-        toks[:req.prompt_len] = req.tokens[:req.prompt_len]
+        toks[:plen] = prompt
         if P not in self._warm_prefill:
             # compile the B=1 prefill + inject for this bucket off the clock
             self.engine.prefill_into(self.tparams, self.dparams, self.state,
-                                     slot, toks, req.prompt_len, self.cache_len)
+                                     slot, toks, plen, self.cache_len,
+                                     warm=True)
             self._warm_prefill.add(P)
         t0 = time.perf_counter()
         self.state = self.engine.prefill_into(
             self.tparams, self.dparams, self.state, slot, toks,
-            req.prompt_len, self.cache_len)
+            plen, self.cache_len)
         np.asarray(self.state.seq_lens)          # block until ready
         return time.perf_counter() - t0
 
@@ -164,11 +226,43 @@ class ContinuousEngineBackend:
         dt = time.perf_counter() - t0
         return dt, committed, np.asarray(self.state.done)
 
-    def retire(self, slot: int) -> None:
+    def preempt(self, slot: int, req: Request) -> None:
+        """Evict ``req`` under memory pressure: stash its generated tokens,
+        free the slot's KV blocks, and mark the row done."""
+        dev_n = int(np.asarray(self.state.n_generated)[slot])
+        fresh = np.asarray(self.state.out)[slot, :dev_n].astype(np.int32)
+        old = self._stash.get(req.rid)
+        self._stash[req.rid] = (fresh if old is None
+                                else np.concatenate([old, fresh]))
         self.state = self.engine.retire_slot(self.state, slot)
 
-    def output_for(self, slot: int) -> np.ndarray:
-        return np.asarray(self.state.out)[slot, :self.engine.max_new]
+    def retire(self, slot: int, req: Optional[Request] = None) -> None:
+        if req is not None:
+            if self.collect_outputs:
+                # stitch ever-preempted requests now, before the slot (and
+                # its out row) is recycled
+                self.outputs[req.rid] = self.output_for(slot, req)
+            # always drop the stash: keeping it for callers who opted out of
+            # output collection would leak memory on long-lived backends
+            self._stash.pop(req.rid, None)
+        self.state = self.engine.retire_slot(self.state, slot)
+
+    def output_for(self, slot: int, req: Optional[Request] = None) -> np.ndarray:
+        """Generated tokens of the request in ``slot``.
+
+        With ``req`` given, the result is truncated to ``req.n_generated``
+        (a request with a smaller ``max_new`` than the engine's must not
+        surface tokens past its budget) and stitched with any pre-preemption
+        stash; without it, the legacy engine-sized row is returned.
+        """
+        out = np.asarray(self.state.out)[slot]
+        if req is None:
+            return out[:self.engine.max_new]
+        stash = self._stash.get(req.rid)
+        if stash is None:
+            return out[:req.n_generated].astype(np.int32)
+        cont = out[:req.n_generated - len(stash)].astype(np.int32)
+        return np.concatenate([stash, cont])
 
 
 class SimStepBackend:
@@ -183,16 +277,38 @@ class SimStepBackend:
     def __init__(self, model: LatencyModel, capacity: int, seed: int = 0,
                  accept_source: Optional[Callable] = None,
                  duration_source: Optional[Callable] = None,
-                 prefill_source: Optional[Callable] = None):
+                 prefill_source: Optional[Callable] = None,
+                 block_size: Optional[int] = None,
+                 num_blocks: Optional[int] = None,
+                 max_context: int = 256,
+                 done_source: Optional[Callable] = None):
         self.model = model
         self.capacity = capacity
         self.acceptance = GeometricAcceptance(model, seed)
         self.accept_source = accept_source
         self.duration_source = duration_source
         self.prefill_source = prefill_source
+        # replayed per-step done sets: the live engine marks a slot done on
+        # its EOS step (commit > 0) one iteration before it commits 0, and
+        # victim selection must see the same flag to replay identically
+        self.done_source = done_source
         self.done = np.ones(capacity, dtype=bool)
         self.rids = np.full(capacity, -1, dtype=np.int64)
         self._step_idx = 0
+        # paged-KV mirror: same geometry as the live pool => the scheduler's
+        # preemption decisions (functions of free/allocated/token counts
+        # only) replay count-for-count against the live run
+        if block_size is not None:
+            max_blocks = -(-max_context // block_size)
+            if num_blocks is None:
+                num_blocks = capacity * max_blocks
+            self.kv: Optional[PagedKVTables] = PagedKVTables(
+                num_blocks, block_size, capacity, max_blocks)
+        else:
+            self.kv = None
+        # the plain sim has no KV to overflow, so no admission hard limit
+        self.max_context = (self.kv.logical_len if self.kv is not None
+                            else None)
 
     def _batch_key(self, b: int) -> int:
         for x in self.model.batch_sizes:
@@ -203,6 +319,9 @@ class SimStepBackend:
     def prefill(self, req: Request, slot: int) -> float:
         self.done[slot] = False
         self.rids[slot] = req.rid
+        if self.kv is not None:
+            # a re-admitted (preempted) request re-prefills prompt + stash
+            self.kv.prefill(slot, req.prompt_len + req.n_generated)
         if self.prefill_source is not None:
             return float(self.prefill_source(req.rid))
         return 0.0                     # prefill is outside the fitted model
@@ -211,6 +330,11 @@ class SimStepBackend:
         active = np.where(~self.done)[0]
         b = len(active)
         bk = self._batch_key(b)
+        if self.kv is not None:
+            # same slot set as the live engine's pre-step growth: every slot
+            # still holding blocks (incl. EOS'd rows awaiting retirement)
+            for slot in self.kv.active_slots():
+                self.kv.ensure(slot, self.kv.tokens(slot) + s)
         if self.duration_source is not None:
             dt = float(self.duration_source(self._step_idx, b, s))
         else:
@@ -227,12 +351,28 @@ class SimStepBackend:
         # retires it the same iteration
         committed[active] = np.maximum(accepted + 1, 0)
         self.done[active[committed[active] == 0]] = True
+        if self.done_source is not None:
+            rec = {int(r) for r in self.done_source(self._step_idx)}
+            for slot in active:
+                if int(self.rids[slot]) in rec:
+                    self.done[slot] = True
+        if self.kv is not None:
+            for slot in self.kv.active_slots():
+                self.kv.commit(slot, int(committed[slot]))
         self._step_idx += 1
         return dt, committed, self.done.copy()
 
-    def retire(self, slot: int) -> None:
+    def preempt(self, slot: int, req: Request) -> None:
         self.done[slot] = True
         self.rids[slot] = -1
+        if self.kv is not None:
+            self.kv.release(slot)
+
+    def retire(self, slot: int, req: Optional[Request] = None) -> None:
+        self.done[slot] = True
+        self.rids[slot] = -1
+        if self.kv is not None:
+            self.kv.release(slot)
 
 
 # ---------------------------------------------------------------------------
@@ -250,20 +390,29 @@ class StepTrace:
     admitted: Tuple[int, ...] = ()
     duration: float = 0.0              # step duration charged to the clock
     prefill_s: Tuple[float, ...] = ()  # per-admission prefill seconds
+    preempted: Tuple[int, ...] = ()    # rids evicted before this step
+    done_rids: Tuple[int, ...] = ()    # rids the backend flagged done after
 
 
 def replay_sources(trace: Sequence[StepTrace]):
-    """(accept, duration, prefill) replay callbacks from a recorded trace.
+    """(accept, duration, prefill, done) replay callbacks from a trace.
 
     Feeding these into :class:`SimStepBackend` pins every *outcome* (commit
-    counts, step durations, prefill costs) to the recorded run, so a second
-    scheduler run over the sim backend must reproduce the recorded admission
-    order and batch-size sequence exactly — the sim-vs-live parity check.
+    counts, step durations, prefill costs, per-step done flags) to the
+    recorded run, so a second scheduler run over the sim backend must
+    reproduce the recorded admission order and batch-size sequence exactly
+    — the sim-vs-live parity check.  Preemption decisions are NOT replayed:
+    they are pure functions of the block-pool accounting plus the done
+    flags, so a sim backend built with the live pool's geometry re-derives
+    them (and the parity test checks they match).
+
+    A preempted request is admitted (and so prefilled) more than once, so
+    per-rid prefill costs replay as a FIFO queue of the recorded durations.
     """
-    prefill: Dict[int, float] = {}
+    prefill: Dict[int, List[float]] = {}
     for t in trace:
         for rid, dt in zip(t.admitted, t.prefill_s):
-            prefill[rid] = dt
+            prefill.setdefault(rid, []).append(dt)
 
     def accept(step_idx, rids, s):
         # committed - 1; a recorded 0 maps to -1 (zero-commit step: the
@@ -275,9 +424,13 @@ def replay_sources(trace: Sequence[StepTrace]):
         return trace[step_idx].duration
 
     def prefill_src(rid):
-        return prefill.get(rid, 0.0)
+        q = prefill.get(rid)
+        return q.pop(0) if q else 0.0
 
-    return accept, duration, prefill_src
+    def done_src(step_idx):
+        return trace[step_idx].done_rids
+
+    return accept, duration, prefill_src, done_src
 
 
 class ContinuousScheduler:
@@ -297,6 +450,14 @@ class ContinuousScheduler:
         self.observe = observe
         self.trace: List[StepTrace] = []
 
+    @staticmethod
+    def _select_victim(slots: Sequence[int], pool: SlotPool,
+                       admit_seq: Dict[int, int]) -> int:
+        """Preemption victim: longest remaining token budget, ties broken
+        LIFO by admission order (the most recently admitted goes first)."""
+        return max(slots, key=lambda sl: (pool.remaining(sl),
+                                          admit_seq[pool.request_at(sl).rid]))
+
     def run(self, requests: Sequence[Request]):
         from repro.serving.server import ServeResult   # avoid import cycle
         pending = sorted(requests, key=lambda r: r.arrival)
@@ -304,6 +465,11 @@ class ContinuousScheduler:
         backlog: List[Request] = []
         batches: List[BatchRecord] = []
         self.trace = []
+        kv = getattr(self.backend, "kv", None)
+        max_ctx = getattr(self.backend, "max_context", None)
+        admit_seq: Dict[int, int] = {}
+        n_admits = 0
+        prev_done: set = set()         # rids the backend flagged done last step
         clock, i, n_done, n = 0.0, 0, 0, len(pending)
         while n_done < n:
             while i < n and pending[i].arrival <= clock:
@@ -312,20 +478,73 @@ class ContinuousScheduler:
             admitted: List[int] = []
             prefill_s: List[float] = []
             for req in self.policy.select(backlog, pool.free_count, clock):
+                if max_ctx is not None:
+                    # oversized requests can NEVER be served (deferring would
+                    # spin forever); fail loudly before claiming a slot
+                    _reject_oversize(req, max_ctx)
+                if kv is not None:
+                    # admit only if the free list covers the prompt (plus
+                    # stash), this request's worst-case first step, AND the
+                    # running batch's own worst-case growth — otherwise a
+                    # fresh admit pays a full B=1 prefill just to be evicted
+                    # by the pressure check below (prefill thrash)
+                    growth = sum(
+                        max(0, kv.blocks_for(kv.tokens(sl) + S_MAX)
+                            - kv.allocated(sl))
+                        for sl in pool.active_slots())
+                    need = kv.blocks_for(req.prompt_len + req.n_generated
+                                         + S_MAX)
+                    if need + growth > kv.free_blocks:
+                        break          # head-of-line: wait for free blocks
                 backlog.remove(req)
                 slot = pool.claim(req)
-                req.start = clock
+                if req.start is None:  # keep the first admission's start
+                    req.start = clock
                 p_dt = self.backend.prefill(req, slot)
                 clock += p_dt
                 admitted.append(req.rid)
                 prefill_s.append(p_dt)
+                n_admits += 1
+                admit_seq[req.rid] = n_admits
             if pool.occupancy == 0:
                 if not backlog and i < n:
                     clock = max(clock, pending[i].arrival)
                 continue
+            # ---- preemption under memory pressure (paged pool only) ----
+            # worst case this step commits s+1 tokens per slot, i.e. KV
+            # writes up to seq_len + s rows; if covering that could exhaust
+            # the free list, evict victims back to the backlog (they
+            # re-prefill from prompt + generated stash later).  A lone slot
+            # always fits: admission bounds every request to the pool.
+            preempted: List[int] = []
+            if kv is not None:
+                while pool.occupancy > 1:
+                    s = self.controller.choose(pool.occupancy)
+                    need = sum(
+                        max(0, kv.blocks_for(kv.tokens(sl) + s)
+                            - kv.allocated(sl))
+                        for sl in pool.active_slots())
+                    if need <= kv.free_blocks:
+                        break
+                    # never evict a slot the backend already flagged done
+                    # (EOS'd, awaiting its zero-commit retirement step):
+                    # re-prefilling it would resurrect a finished request
+                    # and generate past its EOS
+                    eligible = [sl for sl in pool.active_slots()
+                                if pool.request_at(sl).rid not in prev_done]
+                    if not eligible:
+                        break          # done slots free their blocks shortly
+                    victim = self._select_victim(eligible, pool, admit_seq)
+                    req = pool.retire(victim)
+                    self.backend.preempt(victim, req)
+                    backlog.insert(0, req)
+                    preempted.append(req.rid)
             b = pool.occupancy
             s = self.controller.choose(b)
             dt, committed, backend_done = self.backend.step(s)
+            done_rids = tuple(sorted(
+                pool.request_at(sl).rid for sl in pool.active_slots()
+                if backend_done[sl]))
             clock += dt
             toks = 0
             raw: Dict[int, int] = {}
@@ -346,7 +565,7 @@ class ContinuousScheduler:
                 if pool.remaining(slot) <= 0 or (c_raw == 0 and backend_done[slot]):
                     req.finish = clock
                     pool.retire(slot)
-                    self.backend.retire(slot)
+                    self.backend.retire(slot, req)
                     n_done += 1
             if self.observe and s > 0:
                 self.controller.observe(np.asarray(accepted_live), s)
@@ -358,7 +577,9 @@ class ContinuousScheduler:
                 clock=clock - dt, occupancy=b, s=s,
                 rids=tuple(sorted(raw)), committed=raw,
                 admitted=tuple(admitted), duration=dt,
-                prefill_s=tuple(prefill_s)))
+                prefill_s=tuple(prefill_s), preempted=tuple(preempted),
+                done_rids=done_rids))
+            prev_done = set(done_rids)
         return ServeResult(requests=list(pending), batches=batches)
 
 
@@ -367,7 +588,9 @@ def serve_continuous_live(requests: Sequence[Request], engine, tparams,
                           capacity: int = 8, cache_len: int = 256,
                           policy: Optional[AdmissionPolicy] = None,
                           observe: bool = False,
-                          backend: Optional[ContinuousEngineBackend] = None):
+                          backend: Optional[ContinuousEngineBackend] = None,
+                          block_size: Optional[int] = None,
+                          num_blocks: Optional[int] = None):
     """Serve a request trace on a LIVE SpecDecodeEngine with iteration-level
     continuous batching: requests join/leave at speculative-step granularity
     and the controller re-chooses s from live occupancy every step.
@@ -376,6 +599,13 @@ def serve_continuous_live(requests: Sequence[Request], engine, tparams,
     outside the timed regions), so results are directly comparable with the
     run-to-completion :func:`repro.serving.server.serve` loop and with the
     :class:`SimStepBackend` simulation on the same trace.
+
+    ``block_size`` switches the KV slot pool to the paged block allocator
+    (``num_blocks`` sizes it; default worst-case) with preemption under
+    memory pressure.  Admission hard-rejects any request whose worst-case
+    KV footprint (``prompt_len + max_new + S_MAX``) exceeds the per-request
+    capacity — previously such a request silently wrapped its KV ring and
+    corrupted itself.
     """
     for r in requests:
         if r.max_new > engine.max_new:
@@ -386,7 +616,16 @@ def serve_continuous_live(requests: Sequence[Request], engine, tparams,
         warm = sorted(set(controller.lut.table.values()))
         backend = ContinuousEngineBackend(engine, tparams, dparams,
                                           capacity=capacity,
-                                          cache_len=cache_len, warm_s=warm)
+                                          cache_len=cache_len, warm_s=warm,
+                                          block_size=block_size,
+                                          num_blocks=num_blocks)
+    for r in requests:
+        if r.prompt_len + r.max_new + S_MAX > backend.max_context:
+            raise ValueError(
+                f"request {r.rid}: prompt_len={r.prompt_len} + "
+                f"max_new={r.max_new} + S_MAX={S_MAX} exceeds the "
+                f"per-request KV capacity {backend.max_context}; the KV "
+                f"ring would wrap and corrupt itself")
     sched = ContinuousScheduler(backend, controller, policy, observe=observe)
     result = sched.run(requests)
     result.trace = sched.trace

@@ -6,6 +6,15 @@ The device half of a slot pool is a fixed-capacity
 slot, how many tokens it still owes, and the claim/retire lifecycle the
 iteration-level scheduler (serving/scheduler.py) drives every speculative
 step.
+
+Paged KV (vLLM-style): :class:`BlockPool` is a free-list allocator of
+fixed-size KV blocks and :class:`PagedKVTables` maps each slot to the list
+of physical blocks holding its KV rows.  The same class is the host truth
+for the live engine (which also consumes the concrete block ids) and the
+count-exact mirror inside :class:`~repro.serving.scheduler.SimStepBackend`,
+so the scheduler's preemption decisions — pure functions of (free blocks,
+per-slot tokens, per-slot allocated blocks) — replay identically sim vs
+live.
 """
 from __future__ import annotations
 
@@ -14,6 +23,172 @@ from typing import List, Optional
 import numpy as np
 
 from repro.serving.request import Request
+
+
+class BlockPoolExhausted(RuntimeError):
+    """Raised when an allocation cannot be served from the free list.
+
+    The scheduler is expected to preempt *before* this can happen; seeing it
+    from the engine means admission/preemption accounting is out of sync.
+    """
+
+
+class BlockPool:
+    """Free-list allocator of fixed-size KV blocks (the paged pool's core).
+
+    Blocks are handed out lowest-id-first and the free list is kept sorted,
+    so allocation is deterministic — a requirement for sim-vs-live parity of
+    preemption decisions (both sides see the same free count at every step).
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 1:
+            raise ValueError("num_blocks must be >= 1")
+        if block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        # lowest-numbered block allocated first (pop from the tail)
+        self._free = list(range(num_blocks - 1, -1, -1))
+
+    def blocks_for(self, n_tokens: int) -> int:
+        """Blocks needed to hold ``n_tokens`` KV rows."""
+        return -(-int(n_tokens) // self.block_size)
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise BlockPoolExhausted(
+                f"requested {n} blocks, only {len(self._free)} free "
+                f"(pool of {self.num_blocks}); the scheduler should have "
+                f"preempted before this allocation")
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, blocks: List[int]) -> None:
+        self._free.extend(blocks)
+        self._free.sort(reverse=True)
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_count(self) -> int:
+        return self.num_blocks - len(self._free)
+
+
+class PagedKVTables:
+    """Per-slot block tables over a :class:`BlockPool`.
+
+    Tracks, per slot, the physical blocks backing its KV rows and the number
+    of tokens written so far (prompt + raw committed).  ``ensure`` grows a
+    table block-by-block as the sequence grows — allocate-on-commit — and
+    ``release`` returns every block to the free list on retire/preempt.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int, capacity: int,
+                 max_blocks_per_slot: int):
+        if max_blocks_per_slot < 1:
+            raise ValueError("max_blocks_per_slot must be >= 1")
+        if num_blocks < max_blocks_per_slot:
+            # a lone maximal request must always fit, or the scheduler could
+            # spin forever on a request it can never admit (every admitted
+            # request is bounded by the per-slot cap, so this also makes the
+            # preemption loop's "a single slot always fits" invariant hold)
+            raise ValueError(
+                f"num_blocks={num_blocks} < max_blocks_per_slot="
+                f"{max_blocks_per_slot}: the pool could not hold even one "
+                f"maximal request")
+        self.pool = BlockPool(num_blocks, block_size)
+        self.capacity = capacity
+        self.max_blocks = max_blocks_per_slot
+        self._tables: List[List[int]] = [[] for _ in range(capacity)]
+        self._tokens = np.zeros(capacity, dtype=np.int64)
+
+    # ------------------------------------------------------------------
+    # geometry
+
+    @property
+    def block_size(self) -> int:
+        return self.pool.block_size
+
+    @property
+    def num_blocks(self) -> int:
+        return self.pool.num_blocks
+
+    @property
+    def free_blocks(self) -> int:
+        return self.pool.free_count
+
+    @property
+    def logical_len(self) -> int:
+        """Per-slot logical capacity in tokens (block table fully grown)."""
+        return self.max_blocks * self.pool.block_size
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return self.pool.blocks_for(n_tokens)
+
+    # ------------------------------------------------------------------
+    # per-slot accounting
+
+    def tokens(self, slot: int) -> int:
+        return int(self._tokens[slot])
+
+    def allocated(self, slot: int) -> int:
+        return len(self._tables[slot])
+
+    def table(self, slot: int) -> List[int]:
+        return list(self._tables[slot])
+
+    def active_slots(self) -> List[int]:
+        return [i for i, t in enumerate(self._tables) if t]
+
+    # ------------------------------------------------------------------
+    # lifecycle
+
+    def prefill(self, slot: int, n_tokens: int) -> List[int]:
+        """Allocate the blocks covering a fresh prompt in ``slot``."""
+        if self._tables[slot]:
+            raise RuntimeError(f"slot {slot} already holds blocks")
+        need = self.blocks_for(n_tokens)
+        if need > self.max_blocks:
+            raise ValueError(
+                f"{n_tokens} tokens need {need} blocks > per-slot cap "
+                f"{self.max_blocks}")
+        blocks = self.pool.alloc(need)
+        self._tables[slot] = blocks
+        self._tokens[slot] = n_tokens
+        return blocks
+
+    def ensure(self, slot: int, n_tokens: int) -> List[int]:
+        """Grow ``slot``'s table to cover ``n_tokens``; returns new blocks."""
+        need = self.blocks_for(n_tokens) - len(self._tables[slot])
+        if need <= 0:
+            return []
+        if len(self._tables[slot]) + need > self.max_blocks:
+            raise ValueError(
+                f"slot {slot} would exceed the per-slot cap of "
+                f"{self.max_blocks} blocks")
+        new = self.pool.alloc(need)
+        self._tables[slot].extend(new)
+        return new
+
+    def commit(self, slot: int, n_new_tokens: int) -> None:
+        self._tokens[slot] += int(n_new_tokens)
+
+    def release(self, slot: int) -> List[int]:
+        """Free every block of ``slot`` (retire or preempt)."""
+        blocks = self._tables[slot]
+        self._tables[slot] = []
+        self._tokens[slot] = 0
+        self.pool.free(blocks)
+        return blocks
+
+    def device_tables(self) -> np.ndarray:
+        """[capacity, max_blocks] int32 block table, -1 = unallocated."""
+        out = np.full((self.capacity, self.max_blocks), -1, np.int32)
+        for i, t in enumerate(self._tables):
+            out[i, :len(t)] = t
+        return out
 
 
 class SlotPool:
@@ -32,12 +207,16 @@ class SlotPool:
     # lifecycle
 
     def claim(self, req: Request) -> int:
-        """Assign ``req`` to a free slot; returns the slot index."""
+        """Assign ``req`` to a free slot; returns the slot index.
+
+        A preempted request re-enters with ``n_generated > 0``; its budget
+        resumes where it left off rather than restarting at ``max_new``.
+        """
         if not self._free:
             raise RuntimeError("slot pool full")
         slot = self._free.pop()
         self._reqs[slot] = req
-        self._remaining[slot] = req.max_new
+        self._remaining[slot] = req.max_new - req.n_generated
         return slot
 
     def retire(self, slot: int) -> Request:

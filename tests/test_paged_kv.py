@@ -1,0 +1,333 @@
+"""Paged KV block pool: allocator unit tests, paged slot-pool correctness on
+a real engine, preemption + re-prefill with sim-vs-live parity, and
+regression tests for the slot/engine bugfix sweep (output truncation, KV
+overflow rejection, s > S_MAX validation, sync-free retirement)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry as R
+from repro.core.adaptive import AdaptiveController, SpeculationLUT
+from repro.core.analytical import LatencyModel
+from repro.core.spec_decode import S_MAX, SpecDecodeEngine
+from repro.serving.request import Request
+from repro.serving.scheduler import (ContinuousEngineBackend,
+                                     ContinuousScheduler, SimStepBackend,
+                                     replay_sources, serve_continuous_live)
+from repro.serving.slots import (BlockPool, BlockPoolExhausted, PagedKVTables,
+                                 SlotPool)
+from repro.serving.traffic import TrafficPhase, make_requests
+
+CACHE_LEN = 96
+BLOCK = 8
+
+
+# ---------------------------------------------------------------------------
+# block allocator (host-only, no jax)
+
+
+def test_block_pool_alloc_free_cycle():
+    pool = BlockPool(6, 8)
+    assert pool.blocks_for(1) == 1 and pool.blocks_for(8) == 1
+    assert pool.blocks_for(9) == 2 and pool.blocks_for(48) == 6
+    a = pool.alloc(3)
+    assert a == [0, 1, 2]                        # lowest-id-first
+    assert pool.free_count == 3 and pool.used_count == 3
+    pool.free([1])
+    # freed block is reused before higher ids (deterministic placement)
+    assert pool.alloc(2) == [1, 3]
+    with pytest.raises(BlockPoolExhausted):
+        pool.alloc(3)                            # only 2 free
+    with pytest.raises(ValueError):
+        BlockPool(0, 8)
+    with pytest.raises(ValueError):
+        BlockPool(4, 0)
+
+
+def test_block_pool_fragmentation_reuse():
+    """Interleaved alloc/free must never lose or duplicate blocks, and holes
+    are refilled lowest-first."""
+    pool = BlockPool(8, 4)
+    a = pool.alloc(4)                            # [0, 1, 2, 3]
+    b = pool.alloc(2)                            # [4, 5]
+    pool.free([a[0], a[2], b[1]])                # holes at 0, 2, 5
+    c = pool.alloc(4)
+    assert c == [0, 2, 5, 6]                     # holes first, then fresh
+    held = {a[1], a[3], b[0], *c}
+    assert len(held) == 7                        # no duplicates handed out
+    assert pool.free_count == 1
+    pool.free(sorted(held))
+    assert pool.free_count == 8
+    assert pool.alloc(8) == list(range(8))
+
+
+def test_paged_tables_lifecycle():
+    kv = PagedKVTables(num_blocks=10, block_size=4, capacity=3,
+                       max_blocks_per_slot=4)
+    assert kv.logical_len == 16
+    kv.prefill(0, 7)                             # 2 blocks
+    assert kv.allocated(0) == 2 and kv.tokens(0) == 7
+    assert kv.free_blocks == 8
+    assert kv.ensure(0, 8) == []                 # already covered
+    new = kv.ensure(0, 9)                        # grows by one block
+    assert len(new) == 1 and kv.allocated(0) == 3
+    kv.commit(0, 2)
+    assert kv.tokens(0) == 9
+    with pytest.raises(RuntimeError):
+        kv.prefill(0, 4)                         # double prefill
+    with pytest.raises(ValueError):
+        kv.prefill(1, 17)                        # over the per-slot cap
+    tbl = kv.device_tables()
+    assert tbl.shape == (3, 4)
+    assert (tbl[0, :3] >= 0).all() and tbl[0, 3] == -1
+    assert (tbl[1:] == -1).all()
+    freed = kv.release(0)
+    assert len(freed) == 3 and kv.free_blocks == 10
+    assert kv.active_slots() == []
+    # released blocks are reusable by another slot
+    kv.prefill(1, 16)
+    assert kv.allocated(1) == 4
+
+
+# ---------------------------------------------------------------------------
+# engine-level paged slot pool
+
+
+@pytest.fixture(scope="module")
+def engine():
+    tcfg = R.get_smoke_config("yi-9b")
+    d = R.get_draft_config("yi-9b")
+    dcfg = dataclasses.replace(
+        d, n_layers=1, d_model=64, d_ff=128, vocab_size=tcfg.vocab_size,
+        dtype="float32",
+        attn=dataclasses.replace(d.attn, n_heads=2, n_kv_heads=2, head_dim=32))
+    eng = SpecDecodeEngine(tcfg, dcfg, max_new=24)
+    tp = eng.target.init(jax.random.PRNGKey(0))
+    dp = eng.draft.init(jax.random.PRNGKey(1))
+    return eng, tp, dp, tcfg
+
+
+def _ctrl():
+    return AdaptiveController(lut=SpeculationLUT({1: 4, 2: 3, 4: 2}))
+
+
+def _trace(tcfg, n=12, seed=7, budget=(4, 17)):
+    """Rapid-arrival trace; ``budget=(18, 25)`` makes requests outgrow the
+    admission-time S_MAX reservation so block pressure (preemption) can
+    actually arise mid-flight."""
+    reqs = make_requests(n, [TrafficPhase(0.0005, 1.0, float("inf"))],
+                         tcfg.vocab_size, seed=seed, max_new=16)
+    rng = np.random.default_rng(3)
+    for r in reqs:
+        r.max_new = int(rng.integers(*budget))
+    return reqs
+
+
+def test_paged_pool_matches_solo_generate(engine):
+    """Tokens generated through the paged block pool — including a request
+    injected mid-flight and a slot reusing recycled blocks — must equal each
+    prompt's solo (contiguous-cache) output."""
+    eng, tp, dp, tcfg = engine
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, tcfg.vocab_size, (L,)).astype(np.int32)
+               for L in (8, 6, 9)]
+    refs = []
+    for p in prompts:
+        out, _, _ = eng.generate(tp, dp, p[None, :],
+                                 np.array([len(p)], np.int32), s=3,
+                                 cache_len=CACHE_LEN)
+        refs.append(out[0])
+
+    state = eng.init_slots(4, cache_len=CACHE_LEN, block_size=BLOCK)
+    assert state.paged is not None
+    assert state.paged.num_blocks == 4 * (CACHE_LEN // BLOCK)
+    assert bool(np.asarray(state.done).all())
+    state = eng.prefill_into(tp, dp, state, 0, prompts[0], len(prompts[0]),
+                             CACHE_LEN)
+    state = eng.prefill_into(tp, dp, state, 1, prompts[1], len(prompts[1]),
+                             CACHE_LEN)
+    for _ in range(2):
+        state, st = eng.step(tp, dp, state, 3)
+        assert (st.committed[2:] == 0).all()     # empty slots stay silent
+    state = eng.prefill_into(tp, dp, state, 2, prompts[2], len(prompts[2]),
+                             CACHE_LEN)
+    for _ in range(40):
+        state, _ = eng.step(tp, dp, state, 3)
+        if bool(np.asarray(state.done)[:3].all()):
+            break
+    out = np.asarray(state.out)[:, :eng.max_new]
+    for i in range(3):
+        np.testing.assert_array_equal(out[i], refs[i], err_msg=f"slot {i}")
+
+    # retire slot 0: its blocks return to the free list and a fresh prompt
+    # reuses them without contamination from the previous occupant
+    free_before = state.paged.free_blocks
+    state = eng.retire_slot(state, 0)
+    assert state.paged.free_blocks > free_before
+    p = rng.integers(0, tcfg.vocab_size, (7,)).astype(np.int32)
+    state = eng.prefill_into(tp, dp, state, 0, p, 7, CACHE_LEN)
+    for _ in range(40):
+        state, _ = eng.step(tp, dp, state, 3)
+        if bool(np.asarray(state.done)[0]):
+            break
+    ref, _, _ = eng.generate(tp, dp, p[None, :], np.array([7], np.int32),
+                             s=3, cache_len=CACHE_LEN)
+    np.testing.assert_array_equal(np.asarray(state.out)[0, :eng.max_new],
+                                  ref[0])
+
+
+def test_paged_allocation_is_block_granular(engine):
+    """A short prompt holds ceil(prompt/block) blocks after prefill, and the
+    table only grows as the sequence crosses block boundaries."""
+    eng, tp, dp, tcfg = engine
+    state = eng.init_slots(2, cache_len=CACHE_LEN, block_size=BLOCK)
+    p = np.arange(6, dtype=np.int32) % tcfg.vocab_size + 1
+    state = eng.prefill_into(tp, dp, state, 0, p, 6, CACHE_LEN)
+    pk = state.paged
+    assert pk.allocated(0) == 1                  # 6 tokens -> 1 block of 8
+    state, _ = eng.step(tp, dp, state, 3)
+    # step covers seq + s = 9 rows worst case -> exactly 2 blocks
+    assert pk.allocated(0) == 2
+    assert pk.allocated(1) == 0                  # empty slot never allocates
+
+
+# ---------------------------------------------------------------------------
+# scheduler: preemption + re-prefill
+
+
+def test_preemption_completes_and_outputs_match_solo(engine):
+    """An undersized block pool forces preemption; every request still
+    finishes with its full budget and every output — including requests that
+    were evicted and re-prefilled — equals the solo greedy continuation."""
+    eng, tp, dp, tcfg = engine
+    backend = ContinuousEngineBackend(eng, tp, dp, capacity=4,
+                                      cache_len=CACHE_LEN, block_size=BLOCK,
+                                      num_blocks=18, collect_outputs=True,
+                                      warm_s=(2, 3, 4))
+    res = serve_continuous_live(_trace(tcfg, budget=(18, 25)), eng, tp, dp,
+                                _ctrl(), backend=backend)
+    n_preempt = sum(len(t.preempted) for t in res.trace)
+    assert n_preempt > 0, "pool was not under pressure; test lost its bite"
+    assert all(r.finish is not None for r in res.requests)
+    assert all(r.n_generated == r.max_new for r in res.requests)
+    preempted = {rid for t in res.trace for rid in t.preempted}
+    assert preempted, "no request was preempted"
+    for r in res.requests:
+        ref, _, _ = eng.generate(tp, dp, np.asarray(r.tokens)[None, :],
+                                 np.array([r.prompt_len], np.int32), s=3,
+                                 cache_len=CACHE_LEN)
+        np.testing.assert_array_equal(
+            backend.outputs[r.rid], ref[0][:r.n_generated],
+            err_msg=f"rid {r.rid} (preempted={r.rid in preempted})")
+
+
+def test_preemption_sim_vs_live_parity(engine):
+    """The sim backend with the live pool's block geometry must re-derive
+    the identical preemption schedule (victims, admissions, occupancies,
+    commits) when replaying the live run's outcomes."""
+    eng, tp, dp, tcfg = engine
+    res = serve_continuous_live(_trace(tcfg, budget=(18, 25)), eng, tp, dp,
+                                _ctrl(), capacity=4, cache_len=CACHE_LEN,
+                                block_size=BLOCK, num_blocks=18)
+    assert sum(len(t.preempted) for t in res.trace) > 0
+    accept, duration, prefill, done = replay_sources(res.trace)
+    bs = (1, 2, 4)
+    model = LatencyModel(alpha={b: 1e-4 for b in bs},
+                         beta={b: 5e-3 for b in bs},
+                         t_s={b: 2e-4 for b in bs}, c=0.9, gamma=0.548)
+    sim = ContinuousScheduler(
+        SimStepBackend(model, capacity=4, accept_source=accept,
+                       duration_source=duration, prefill_source=prefill,
+                       done_source=done, block_size=BLOCK, num_blocks=18,
+                       max_context=CACHE_LEN),
+        _ctrl())
+    res_sim = sim.run(_trace(tcfg, budget=(18, 25)))
+    assert [t.admitted for t in sim.trace] == [t.admitted for t in res.trace]
+    assert [t.preempted for t in sim.trace] == [t.preempted for t in res.trace]
+    assert [t.occupancy for t in sim.trace] == [t.occupancy for t in res.trace]
+    assert [t.committed for t in sim.trace] == [t.committed for t in res.trace]
+    np.testing.assert_allclose(res_sim.latencies, res.latencies, rtol=1e-9)
+
+
+def test_slot_pool_claim_resumes_preempted_budget():
+    pool = SlotPool(2)
+    req = Request(rid=0, arrival=0.0, tokens=np.arange(8, dtype=np.int32),
+                  prompt_len=8, max_new=16)
+    req.n_generated = 5                          # preempted mid-flight
+    slot = pool.claim(req)
+    assert pool.remaining(slot) == 11            # resumes, not restarts
+
+
+# ---------------------------------------------------------------------------
+# bugfix regressions
+
+
+def test_output_for_truncates_to_request_budget(engine):
+    """A request with max_new smaller than the engine's must not surface
+    tokens past its budget (previously output_for returned engine.max_new
+    tokens for everyone)."""
+    eng, tp, dp, tcfg = engine
+    reqs = _trace(tcfg, n=3)
+    for r in reqs:
+        r.max_new = 5                            # well under engine max_new=24
+    backend = ContinuousEngineBackend(eng, tp, dp, capacity=2,
+                                      cache_len=CACHE_LEN,
+                                      collect_outputs=True, warm_s=(2, 3))
+    res = serve_continuous_live(reqs, eng, tp, dp, _ctrl(), backend=backend)
+    for r in res.requests:
+        assert r.n_generated == 5
+        out = backend.outputs[r.rid]
+        assert out.shape == (5,)
+        ref, _, _ = eng.generate(tp, dp, np.asarray(r.tokens)[None, :],
+                                 np.array([r.prompt_len], np.int32), s=3,
+                                 cache_len=CACHE_LEN)
+        np.testing.assert_array_equal(out, ref[0][:5])
+
+
+def test_admission_rejects_kv_overflow(engine):
+    """prompt_len + max_new + S_MAX beyond the per-request KV capacity must
+    be rejected instead of silently wrapping the ring (contiguous) or
+    overrunning the block table (paged)."""
+    eng, tp, dp, tcfg = engine
+    big = _trace(tcfg, n=2)
+    big[0] = Request(rid=99, arrival=0.0,
+                     tokens=np.ones(CACHE_LEN - 10, np.int32),
+                     prompt_len=CACHE_LEN - 10, max_new=20)
+    with pytest.raises(ValueError, match="KV"):
+        serve_continuous_live(big, eng, tp, dp, _ctrl(), capacity=2,
+                              cache_len=CACHE_LEN)
+    with pytest.raises(ValueError, match="KV"):
+        serve_continuous_live(big, eng, tp, dp, _ctrl(), capacity=2,
+                              cache_len=CACHE_LEN, block_size=BLOCK)
+
+
+def test_step_rejects_s_beyond_smax(engine):
+    """s > S_MAX would silently drop committed tokens into the void (the
+    out scatter uses mode="drop"); the engine must refuse it loudly."""
+    eng, tp, dp, tcfg = engine
+    p = np.arange(8, dtype=np.int32) % tcfg.vocab_size + 1
+    state = eng.prefill(tp, dp, p[None, :], np.array([8], np.int32),
+                        cache_len=CACHE_LEN)
+    with pytest.raises(ValueError, match="S_MAX"):
+        eng.step(tp, dp, state, S_MAX + 1)
+    with pytest.raises(ValueError):
+        eng.step(tp, dp, state, -1)
+
+
+def test_retire_slot_stays_on_device(engine):
+    """Retirement must not round-trip device state through the host: the
+    done scatter is a jitted device op whose result is a jax array, and
+    repeated retirement keeps the remaining slots intact."""
+    eng, tp, dp, tcfg = engine
+    state = eng.init_slots(3, cache_len=CACHE_LEN)
+    p = np.arange(8, dtype=np.int32) % tcfg.vocab_size + 1
+    state = eng.prefill_into(tp, dp, state, 0, p, 8, CACHE_LEN)
+    state = eng.prefill_into(tp, dp, state, 1, p, 8, CACHE_LEN)
+    state = eng.retire_slot(state, 0)
+    assert isinstance(state.done, jax.Array)     # no host np.ndarray detour
+    done = np.asarray(state.done)
+    assert bool(done[0]) and not bool(done[1]) and bool(done[2])
+    state = eng.retire_slot(state, 1)
+    assert bool(np.asarray(state.done).all())

@@ -178,6 +178,103 @@ def test_continuous_metrics_ttft_itl_occupancy():
     assert len(tl) == len(res.batches)
 
 
+def test_sim_backend_preempts_under_block_pressure():
+    """With a paged-KV mirror smaller than the trace's aggregate demand the
+    scheduler must admit by free blocks, preempt under step pressure
+    (longest-remaining, LIFO-admitted victim), and still serve every token;
+    the whole schedule is deterministic."""
+    m = _model()
+    ctrl = fixed_controller(2)
+
+    def reqs():
+        return [_req(i, arrival=0.0, plen=16, max_new=24) for i in range(6)]
+
+    def run():
+        sched = ContinuousScheduler(
+            SimStepBackend(m, capacity=6, seed=0, block_size=8,
+                           num_blocks=10, max_context=64), ctrl)
+        res = sched.run(reqs())
+        return res, sched.trace
+
+    res, trace = run()
+    assert all(r.finish is not None for r in res.requests)
+    assert all(r.n_generated == 24 for r in res.requests)
+    # admission stopped at the free-block budget, not at free slots
+    assert len(trace[0].admitted) < 6
+    n_pre = sum(len(t.preempted) for t in trace)
+    assert n_pre > 0
+    res2, trace2 = run()
+    assert [t.preempted for t in trace2] == [t.preempted for t in trace]
+    assert [t.admitted for t in trace2] == [t.admitted for t in trace]
+    np.testing.assert_allclose(res2.latencies, res.latencies)
+
+
+def test_sim_preemption_replay_parity():
+    """Replaying a preempting sim run's outcomes into a second sim with the
+    same block geometry reproduces the schedule, preemptions included."""
+    from repro.serving.scheduler import replay_sources
+    m = _model()
+    ctrl = fixed_controller(3)
+    reqs = uniform_traffic(20, 0.001, 1.0, 100, seed=9, max_new=18)
+    sched = ContinuousScheduler(
+        SimStepBackend(m, capacity=4, seed=5, block_size=8, num_blocks=14,
+                       max_context=96), ctrl)
+    sched.run(reqs)
+    ref = sched.trace
+    assert sum(len(t.preempted) for t in ref) > 0
+    accept, duration, prefill, done = replay_sources(ref)
+    reqs2 = uniform_traffic(20, 0.001, 1.0, 100, seed=9, max_new=18)
+    sched2 = ContinuousScheduler(
+        SimStepBackend(m, capacity=4, accept_source=accept,
+                       duration_source=duration, prefill_source=prefill,
+                       done_source=done, block_size=8, num_blocks=14,
+                       max_context=96), ctrl)
+    sched2.run(reqs2)
+    assert [t.admitted for t in sched2.trace] == [t.admitted for t in ref]
+    assert [t.preempted for t in sched2.trace] == [t.preempted for t in ref]
+    assert [t.occupancy for t in sched2.trace] == [t.occupancy for t in ref]
+    assert [t.committed for t in sched2.trace] == [t.committed for t in ref]
+
+
+def test_preemption_never_resurrects_done_slot():
+    """A slot the backend flagged done (EOS'd, awaiting its zero-commit
+    retirement step) must not be chosen as preemption victim even when it
+    has the longest remaining budget — evicting it would re-prefill and
+    resume a finished request past its EOS."""
+    m = _model()
+    ctrl = fixed_controller(3)
+    # r0 has the longest remaining budget (the default victim); it goes done
+    # (EOS) at step 1, and step 2's pressure must evict someone else
+    reqs = [_req(0, plen=8, max_new=24), _req(1, plen=8, max_new=16),
+            _req(2, plen=8, max_new=16)]
+
+    def accept(step_idx, rids, s):
+        return np.array([-1 if (r == 0 and step_idx >= 2) else 3
+                         for r in rids])
+
+    def done_src(step_idx):
+        return (0,) if step_idx == 1 else ()
+
+    backend = SimStepBackend(m, capacity=3, accept_source=accept,
+                             duration_source=lambda i, b, s: 1e-3,
+                             prefill_source=lambda rid: 0.0,
+                             done_source=done_src, block_size=4,
+                             num_blocks=14, max_context=40)
+    sched = ContinuousScheduler(backend, ctrl)
+    res = sched.run(reqs)
+    preempted = [rid for t in sched.trace for rid in t.preempted]
+    assert preempted, [t.done_rids for t in sched.trace]
+    assert 0 not in preempted, preempted      # the done slot is never evicted
+    assert 0 in sched.trace[1].done_rids
+    # r0 retired through its zero-commit step with only the pre-EOS tokens;
+    # the evicted request was re-prefilled and served its full budget
+    by_rid = {r.rid: r for r in res.requests}
+    assert by_rid[0].n_generated == 8 and by_rid[0].finish is not None
+    for rid in (1, 2):
+        assert by_rid[rid].n_generated == 16
+        assert by_rid[rid].finish is not None
+
+
 def test_sim_replay_source_reproduces_schedule():
     """Replaying one sim run's acceptance into a second sim run reproduces
     the admission order and batch-size sequence exactly (the mechanism the
