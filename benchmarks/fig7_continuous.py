@@ -22,6 +22,11 @@ they touch — so peak live occupancy rises and mean latency drops.  A third
 run shrinks the block pool below the trace's aggregate demand to exercise
 preemption + re-prefill, with the block-mirror sim replay checking exact
 StepTrace parity (admissions, occupancies, commits, preemptions).
+
+``--live`` finally runs the chunked-admission study: long prompts arriving
+into a live decode batch, admitted whole (one big stall per admission) vs
+chunked under a per-iteration token budget (in-step chunked prefill) — the
+max admission-iteration gap imposed on running requests must drop.
 """
 from __future__ import annotations
 
@@ -35,9 +40,11 @@ from benchmarks.fig5_dynamic import (MAX_BATCH, MAX_NEW,
                                      build_model_from_measurements, schemes)
 from repro.core.adaptive import AdaptiveController, profile_engine
 from repro.core.analytical import LatencyModel
-from repro.serving.metrics import mean_occupancy, summarize, ttft_summary
-from repro.serving.scheduler import (ContinuousScheduler, SimStepBackend,
-                                     replay_sources, serve_continuous_live)
+from repro.serving.metrics import (admission_gaps, mean_occupancy, summarize,
+                                   ttft_summary)
+from repro.serving.scheduler import (ContinuousScheduler, PrefillBudgetAdmit,
+                                     SimStepBackend, replay_sources,
+                                     serve_continuous_live)
 from repro.serving.server import EngineBackend, SimBackend, serve, serve_continuous
 from repro.serving.traffic import TrafficPhase, make_requests, uniform_traffic
 
@@ -121,7 +128,7 @@ def run_live(n_requests: int = 120, capacity: int = 8, cache_len: int = 256,
     # counts, durations); the scheduler over it must reproduce the live
     # admission order and batch-size sequence exactly
     live_trace = res_live.trace
-    accept, duration, prefill, done = replay_sources(live_trace)
+    accept, duration, prefill, done, _chunk = replay_sources(live_trace)
     # every model quantity is overridden by the replay sources, so a stub
     # LatencyModel suffices (no need to re-profile the engine here)
     bs = (1, 2, 4, capacity)
@@ -206,7 +213,7 @@ def run_live(n_requests: int = 120, capacity: int = 8, cache_len: int = 256,
                                     cache_len=cache_long, block_size=block,
                                     num_blocks=small_blocks)
     n_preempt = sum(len(t.preempted) for t in res_pre.trace)
-    acc2, dur2, pre2, done2 = replay_sources(res_pre.trace)
+    acc2, dur2, pre2, done2, _ch2 = replay_sources(res_pre.trace)
     sim_pre = ContinuousScheduler(
         SimStepBackend(model, capacity=cap_paged, accept_source=acc2,
                        duration_source=dur2, prefill_source=pre2,
@@ -220,8 +227,55 @@ def run_live(n_requests: int = 120, capacity: int = 8, cache_len: int = 256,
         and [t.occupancy for t in sim_pre.trace] == [t.occupancy for t in res_pre.trace]
         and [t.committed for t in sim_pre.trace] == [t.committed for t in res_pre.trace])
 
+    # -- chunked prefill: long-prompt admission without decode stalls ------
+    # Short requests keep a decode batch live; long prompts then arrive.
+    # Whole-prompt admission stalls every running decode for a full long
+    # prefill; chunked admission (PrefillBudgetAdmit + in-step chunked
+    # prefill) caps the admission work per iteration, so the max
+    # inter-token gap imposed on the running batch drops.
+    chunk_budget = 32
+
+    def stall_trace(n=16, seed=33):
+        reqs = make_requests(n, [TrafficPhase(0.02, 1.0, float("inf"))],
+                             VOCAB, seed=seed, max_new=24)
+        r = np.random.default_rng(seed)
+        for j, q in enumerate(reqs):
+            L = int(r.integers(150, 180)) if j % 4 == 3 else int(
+                r.integers(8, 25))
+            q.tokens = r.integers(0, VOCAB, (L,)).astype(np.int32)
+            q.prompt_len = L
+            q.max_new = int(r.integers(12, 25))
+        return reqs
+
+    res_burst = serve_continuous_live(stall_trace(), engine, tparams, dparams,
+                                      ctrl, capacity=4, cache_len=cache_long)
+    res_chunk = serve_continuous_live(stall_trace(), engine, tparams, dparams,
+                                      ctrl, capacity=4, cache_len=cache_long,
+                                      policy=PrefillBudgetAdmit(
+                                          token_budget=chunk_budget))
+    def _max_gap(res, name):
+        gaps = admission_gaps(res)
+        if not gaps:
+            print(f"WARNING: no admission overlapped a running batch in the "
+                  f"{name} run (trace too sparse for the chunked study)")
+            return float("nan")
+        return max(gaps)
+
+    gap_burst = _max_gap(res_burst, "whole-prompt-burst")
+    gap_chunk = _max_gap(res_chunk, "chunked")
+    n_chunk_events = sum(len(t.chunked) for t in res_chunk.trace)
+
     payload = {
         "n_requests": n_requests, "capacity": capacity,
+        "chunked_prefill": {
+            "token_budget": chunk_budget,
+            "n_chunk_events": n_chunk_events,
+            "max_admission_gap_burst_s": gap_burst,
+            "max_admission_gap_chunked_s": gap_chunk,
+            "gap_reduction": gap_burst / max(gap_chunk, 1e-12),
+            "mean_latency_burst_s": summarize(res_burst).mean,
+            "mean_latency_chunked_s": summarize(res_chunk).mean,
+        },
         "paged_kv": {
             "block_size": block, "total_kv_tokens": total_kv,
             "contiguous": {"capacity": cap_contig, "cache_len": cache_long,
@@ -275,6 +329,15 @@ def run_live(n_requests: int = 120, capacity: int = 8, cache_len: int = 256,
           f"sim-vs-live StepTrace parity={pr['sim_live_parity']}")
     if pk["paged"]["peak_occupancy"] <= pk["contiguous"]["peak_occupancy"]:
         print("WARNING: paged pool did not beat contiguous peak occupancy")
+    ck = payload["chunked_prefill"]
+    print(f"chunked prefill ({ck['token_budget']}-token budget, "
+          f"{ck['n_chunk_events']} chunk events): max admission-iteration "
+          f"gap {ck['max_admission_gap_burst_s']*1e3:.1f}ms (whole-prompt "
+          f"burst) -> {ck['max_admission_gap_chunked_s']*1e3:.1f}ms "
+          f"(chunked), {ck['gap_reduction']:.2f}x lower")
+    if ck["max_admission_gap_chunked_s"] >= ck["max_admission_gap_burst_s"]:
+        print("WARNING: chunked admission did not lower the max "
+              "admission-iteration gap")
     return payload
 
 

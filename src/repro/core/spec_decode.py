@@ -127,6 +127,9 @@ class SpecDecodeEngine:
         self._inject_paged_fn: Any = None
         self._retire_fn: Any = None
         self._retire_paged_fn: Any = None
+        self._chunk_fns: Dict[Tuple, Any] = {}
+        self._chunk_begin_fns: Dict[bool, Any] = {}
+        self._chunk_commit_fns: Dict[bool, Any] = {}
 
     # ------------------------------------------------------------------
     # prefill
@@ -361,6 +364,246 @@ class SpecDecodeEngine:
             state, done=self._retire_fn(state.done, jnp.int32(slot)))
 
     # ------------------------------------------------------------------
+    # chunked prefill into a slot (in-step chunked prefill; the scheduler
+    # interleaves these chunks with decode steps of the running batch)
+
+    def _build_chunk_begin(self, paged: bool):
+        """First-chunk setup: clear the slot's stale pos rows (contiguous
+        target + draft ring — a whole-prompt inject replaces the full row,
+        chunked writes do not, so the previous occupant's attendable keys
+        must be wiped first) and PARK the slot's seq_lens at the prompt's
+        final length.  Parking matters: the interleaved decode steps still
+        compute (masked, garbage) writes for this done row, and at
+        seq_lens = total_len those land at positions >= total_len - 1 —
+        beyond every chunk query, and rewritten by the slot's own first
+        real step before they can ever be attended (the ring invariant)."""
+        def fn(tpos, dpos, seq_lens, slot, plen):
+            new_tpos = tpos if paged else tpos.at[slot].set(-1)
+            new_dpos = None if dpos is None else dpos.at[slot].set(-1)
+            return new_tpos, new_dpos, seq_lens.at[slot].set(plen)
+        return jax.jit(fn)
+
+    def _build_chunk_commit(self, paged: bool):
+        """Last-chunk commit: the slot becomes a live decode row — exactly
+        the non-cache half of what prefill_into's inject scatters."""
+        def fn(seq_lens, last2, out, n_gen, done, slot, plen, l2,
+               bt=None, bt_row=None):
+            out_row = jnp.zeros_like(out[0])
+            res = (seq_lens.at[slot].set(plen),
+                   last2.at[slot].set(l2),
+                   out.at[slot].set(out_row),
+                   n_gen.at[slot].set(0),
+                   done.at[slot].set(False))
+            if paged:
+                res = res + (bt.at[slot].set(bt_row),)
+            return res
+        return jax.jit(fn)
+
+    def _build_chunk(self, CB: int, paged: bool, t_single, d_single):
+        """One bucketed chunk forward for one slot.
+
+        Contiguous pool: the slot's B=1 caches are sliced out, extended by
+        the chunk (model.prefill_chunk — the verify-attention masking makes
+        the prefix extension exact), and scattered back.  Paged pool: the
+        chunk writes the shared block pool in place through the slot's host
+        block table (bt_row), so there is nothing to slice; the device
+        ``bt`` row stays -1 until the final chunk commits (step growth
+        uploads exclude pending slots), which keeps the interleaved decode
+        steps' garbage writes for this row dropped.  Even without that, the
+        parked-seq_lens invariant (see _build_chunk_begin) guarantees any
+        such write lands past every chunk query and is rewritten before it
+        is ever attendable — the same argument the contiguous path relies
+        on.
+        """
+        tgt, drf = self.target, self.draft
+
+        def take(full, single, slot):
+            def one(f, s1):
+                ax = self._slot_axis(f.shape, s1.shape)
+                starts = tuple(slot if i == ax else 0
+                               for i in range(f.ndim))
+                return jax.lax.dynamic_slice(f, starts, s1.shape)
+            return jax.tree.map(one, full, single)
+
+        def put(full, upd, single, slot):
+            def one(f, u, s1):
+                ax = self._slot_axis(f.shape, s1.shape)
+                starts = tuple(slot if i == ax else 0
+                               for i in range(f.ndim))
+                return jax.lax.dynamic_update_slice(f, u.astype(f.dtype),
+                                                    starts)
+            return jax.tree.map(one, full, upd, single)
+
+        def fn(tparams, dparams, tcache, dcache, slot, toks, start,
+               t_limit, d_limit, bt_row=None):
+            off = jnp.full((1,), start, jnp.int32)
+            tl = jnp.full((1,), t_limit, jnp.int32)
+            dl = jnp.full((1,), d_limit, jnp.int32)
+            toks1 = toks[None, :]
+            if paged:
+                t1 = {"k": tcache["k"], "v": tcache["v"],
+                      "pos": tcache["pos"], "bt": bt_row[None, :]}
+                _, t1n = tgt.prefill_chunk(tparams, toks1, t1, off, tl)
+                new_t = dict(tcache, k=t1n["k"], v=t1n["v"], pos=t1n["pos"])
+            elif t_single is None:       # capacity == 1: the pool IS the slot
+                _, new_t = tgt.prefill_chunk(tparams, toks1, tcache, off, tl)
+            else:
+                _, t1n = tgt.prefill_chunk(
+                    tparams, toks1, take(tcache, t_single, slot), off, tl)
+                new_t = put(tcache, t1n, t_single, slot)
+            if drf is None:
+                return new_t, dcache
+            if d_single is None:
+                _, new_d = drf.prefill_chunk(dparams, toks1, dcache, off, dl)
+            else:
+                _, d1n = drf.prefill_chunk(
+                    dparams, toks1, take(dcache, d_single, slot), off, dl)
+                new_d = put(dcache, d1n, d_single, slot)
+            return new_t, new_d
+
+        return jax.jit(fn)
+
+    def prefill_chunk_into(self, tparams, dparams, state: DecodeState,
+                           slot: int, tokens, start: int, n: int,
+                           total_len: int, last2=None, *,
+                           warm: bool = False) -> DecodeState:
+        """Feed one prefill chunk of a request into row ``slot``.
+
+        The request's feed (prompt, or prompt + pre-preemption stash) has
+        ``total_len`` tokens; this call writes feed positions
+        ``[start, start + n)`` of the target cache (the draft trails by one:
+        its limit is ``total_len - 2``, exactly mirroring the whole-prompt
+        prefill which leaves the last prompt token to the first decode
+        step).  ``tokens`` is the bucket-padded chunk (first ``n`` entries
+        real).  The slot stays ``done`` — masked out of the interleaved
+        decode steps — until the chunk with ``start + n == total_len - 1``
+        commits, at which point ``last2`` (the feed's final two tokens)
+        must be supplied and the slot joins the decode batch with the same
+        row state a whole-prompt ``prefill_into`` would have produced.
+
+        ``warm=True`` compiles the begin/chunk/commit paths for this chunk
+        bucket without touching host block bookkeeping (result discarded).
+        """
+        if not hasattr(self.target, "prefill_chunk") or (
+                self.draft is not None
+                and not hasattr(self.draft, "prefill_chunk")):
+            raise NotImplementedError(
+                f"chunked prefill is not supported for family "
+                f"'{self.tcfg.family}' (model lacks a prefill_chunk path)")
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        CB = int(tokens.shape[0])
+        feed_total = total_len - 1
+        final = (not warm) and (start + n == feed_total)
+        if not warm and not 0 < n <= CB:
+            raise ValueError(f"chunk carries n={n} tokens in a {CB} bucket")
+        if not warm and start + n > feed_total:
+            raise ValueError(
+                f"chunk [{start}, {start + n}) overruns the {feed_total}"
+                f"-token feed (prompt of {total_len})")
+        if final and (last2 is None or len(np.asarray(last2)) != 2):
+            raise ValueError(
+                "the final chunk must pass last2 = the feed's last 2 tokens")
+        pk = state.paged
+        paged = pk is not None
+        capacity = int(state.seq_lens.shape[0])
+
+        # ---- first chunk: wipe stale rows, park seq_lens ----
+        if start == 0 or warm:
+            if paged not in self._chunk_begin_fns:
+                self._chunk_begin_fns[paged] = self._build_chunk_begin(paged)
+            dpos = (state.dcache["pos"]
+                    if (self.draft is not None and isinstance(state.dcache, dict)
+                        and "pos" in state.dcache) else None)
+            tpos, dpos_new, seq_lens = self._chunk_begin_fns[paged](
+                state.tcache["pos"], dpos, state.seq_lens, jnp.int32(slot),
+                jnp.int32(total_len))
+            if not warm:
+                tcache = (state.tcache if paged
+                          else dict(state.tcache, pos=tpos))
+                dcache = (dict(state.dcache, pos=dpos_new)
+                          if dpos is not None else state.dcache)
+                state = dataclasses.replace(state, tcache=tcache,
+                                            dcache=dcache, seq_lens=seq_lens)
+
+        # ---- host block accounting + this chunk's block table ----
+        bt_row = None
+        if paged:
+            bt_row = np.full((pk.max_blocks,), -1, np.int32)
+            if not warm:
+                if start == 0:
+                    pk.prefill(slot, n)
+                    pk.mark_pending(slot)
+                else:
+                    pk.ensure(slot, start + n)
+                    pk.commit(slot, n)
+                ids = pk.table(slot)
+                bt_row[:len(ids)] = ids
+
+        # ---- the chunk forward ----
+        L = (pk.logical_len if paged else int(state.tcache["pos"].shape[1]))
+        key = (CB, paged, capacity, L)
+        if key not in self._chunk_fns:
+            if capacity == 1:
+                t_single = d_single = None
+            else:
+                t_tmpl, d_tmpl = jax.eval_shape(
+                    lambda: self._init_caches(1, L))
+                t_single = None if paged else t_tmpl
+                d_single = d_tmpl
+            self._chunk_fns[key] = self._build_chunk(CB, paged, t_single,
+                                                     d_single)
+        args = (tparams, dparams, state.tcache, state.dcache,
+                jnp.int32(slot), jnp.asarray(tokens), jnp.int32(start),
+                jnp.int32(feed_total), jnp.int32(feed_total - 1))
+        if paged:
+            args = args + (jnp.asarray(bt_row),)
+        new_t, new_d = self._chunk_fns[key](*args)
+        if warm:
+            # compile the commit path too, then discard everything
+            if paged not in self._chunk_commit_fns:
+                self._chunk_commit_fns[paged] = self._build_chunk_commit(paged)
+            cargs = (state.seq_lens, state.last2, state.out,
+                     state.n_generated, state.done, jnp.int32(slot),
+                     jnp.int32(total_len), jnp.zeros((2,), jnp.int32))
+            if paged:
+                cargs = cargs + (state.tcache["bt"], jnp.asarray(bt_row))
+            self._chunk_commit_fns[paged](*cargs)
+            return state
+        state = dataclasses.replace(state, tcache=new_t, dcache=new_d)
+
+        # ---- final chunk: the slot becomes a live decode row ----
+        if final:
+            if paged:
+                # cover row total_len - 1 (written by the first decode step)
+                pk.ensure(slot, total_len)
+                pk.commit(slot, 1)
+                pk.clear_pending(slot)
+                ids = pk.table(slot)
+                bt_row = np.full((pk.max_blocks,), -1, np.int32)
+                bt_row[:len(ids)] = ids
+            if paged not in self._chunk_commit_fns:
+                self._chunk_commit_fns[paged] = self._build_chunk_commit(paged)
+            cargs = (state.seq_lens, state.last2, state.out,
+                     state.n_generated, state.done, jnp.int32(slot),
+                     jnp.int32(total_len),
+                     jnp.asarray(np.asarray(last2, np.int32)))
+            if paged:
+                cargs = cargs + (state.tcache["bt"], jnp.asarray(bt_row))
+                seq_lens, l2, out, n_gen, done, bt = \
+                    self._chunk_commit_fns[paged](*cargs)
+                state = dataclasses.replace(
+                    state, seq_lens=seq_lens, last2=l2, out=out,
+                    n_generated=n_gen, done=done,
+                    tcache=dict(state.tcache, bt=bt))
+            else:
+                seq_lens, l2, out, n_gen, done = \
+                    self._chunk_commit_fns[paged](*cargs)
+                state = dataclasses.replace(
+                    state, seq_lens=seq_lens, last2=l2, out=out,
+                    n_generated=n_gen, done=done)
+        return state
+
+    # ------------------------------------------------------------------
     # one speculative step
 
     def _build_step(self, B: int, s: int):
@@ -395,13 +638,21 @@ class SpecDecodeEngine:
             pk = state.paged
             grew = False
             for slot in pk.active_slots():
+                if pk.is_pending(slot):
+                    # mid-chunked-prefill: the slot is parked done, writes
+                    # nothing this step, and grows only when its next chunk
+                    # is fed (prefill_chunk_into allocates those blocks)
+                    continue
                 grew |= bool(pk.ensure(slot, pk.tokens(slot) + s))
             if grew:
                 # prefill_into/retire_slot keep the device table in sync, so
-                # the host->device upload only happens on actual growth
+                # the host->device upload only happens on actual growth.
+                # Pending (mid-chunked-prefill) slots' rows stay -1 so their
+                # parked rows' masked decode writes remain dropped; their
+                # blocks are published by the final chunk's commit.
                 state = dataclasses.replace(
-                    state, tcache=dict(state.tcache,
-                                       bt=jnp.asarray(pk.device_tables())))
+                    state, tcache=dict(state.tcache, bt=jnp.asarray(
+                        pk.device_tables(exclude_pending=True))))
         B = state.seq_lens.shape[0]
         key = (B, s)
         if key not in self._step_fns:
@@ -419,7 +670,8 @@ class SpecDecodeEngine:
         stats = StepStats(accepted=np.asarray(a), committed=np.asarray(n_commit))
         if state.paged is not None and not warm:
             for slot in state.paged.active_slots():
-                state.paged.commit(slot, int(stats.committed[slot]))
+                if not state.paged.is_pending(slot):
+                    state.paged.commit(slot, int(stats.committed[slot]))
         return new_state, stats
 
     # ------------------------------------------------------------------

@@ -257,8 +257,10 @@ class DecoderLM:
         bidx = jnp.arange(B)[:, None]
         if a.kind == "mla":
             q_nope, q_rope, ckv_new, krope_new = self._mla_proj(lp, x, positions)
-            ckv = layer_cache["ckv"].at[bidx, rows].set(ckv_new.astype(layer_cache["ckv"].dtype))
-            krope = layer_cache["krope"].at[bidx, rows].set(krope_new.astype(layer_cache["krope"].dtype))
+            ckv = layer_cache["ckv"].at[bidx, rows].set(
+                ckv_new.astype(layer_cache["ckv"].dtype), mode="drop")
+            krope = layer_cache["krope"].at[bidx, rows].set(
+                krope_new.astype(layer_cache["krope"].dtype), mode="drop")
             # absorbed attention: score via compressed cache
             q_abs = jnp.einsum("bthk,lhk->bthl", q_nope, lp["w_uk"])
             s1 = jnp.einsum("bthl,bsl->bhts", q_abs, ckv)
@@ -277,12 +279,12 @@ class DecoderLM:
             kq, ks = _quant_rows(k_new)
             vq, vs = _quant_rows(v_new)
             new_lcache = {
-                "k": layer_cache["k"].at[bidx, rows].set(kq),
-                "v": layer_cache["v"].at[bidx, rows].set(vq),
+                "k": layer_cache["k"].at[bidx, rows].set(kq, mode="drop"),
+                "v": layer_cache["v"].at[bidx, rows].set(vq, mode="drop"),
                 "k_scale": layer_cache["k_scale"].at[bidx, rows].set(
-                    ks.astype(layer_cache["k_scale"].dtype)),
+                    ks.astype(layer_cache["k_scale"].dtype), mode="drop"),
                 "v_scale": layer_cache["v_scale"].at[bidx, rows].set(
-                    vs.astype(layer_cache["v_scale"].dtype)),
+                    vs.astype(layer_cache["v_scale"].dtype), mode="drop"),
             }
             # int8 tiles + scales go straight into the kernel wrapper: the
             # TPU kernel streams 1 B/elem and dequantizes in VMEM, the CPU
@@ -294,8 +296,10 @@ class DecoderLM:
                                    v_scale=new_lcache["v_scale"])
             out = jnp.einsum("bthk,hkd->btd", out, lp["wo"])
             return out, new_lcache
-        k = layer_cache["k"].at[bidx, rows].set(k_new.astype(layer_cache["k"].dtype))
-        v = layer_cache["v"].at[bidx, rows].set(v_new.astype(layer_cache["v"].dtype))
+        k = layer_cache["k"].at[bidx, rows].set(
+            k_new.astype(layer_cache["k"].dtype), mode="drop")
+        v = layer_cache["v"].at[bidx, rows].set(
+            v_new.astype(layer_cache["v"].dtype), mode="drop")
         new_lcache = {"k": k, "v": v}
         # verify-step attention: s+1 tiny q rows vs the ragged ring-buffer
         # cache — the paper's hot spot (Pallas spec_verify_attn on TPU,
@@ -547,6 +551,107 @@ class DecoderLM:
         pb = jnp.take_along_axis(bt, blk, axis=1)               # [B, T]
         pb = jnp.where(pb < 0, NB, pb)                          # NB => dropped
         pos_arr = cache["pos"].at[pb, off].set(positions, mode="drop")
+        prefix_len = c.prefix_len if c.bidirectional_prefix else 0
+
+        def layer(carry, xs):
+            h = carry
+            lp, lcache = xs
+            hn = cm.rms_norm(h, lp["attn_norm"], c.norm_eps)
+            q, k_new, v_new = self._qkv_gqa(lp, hn, positions)
+            k = lcache["k"].at[pb, off].set(
+                k_new.astype(lcache["k"].dtype), mode="drop")
+            v = lcache["v"].at[pb, off].set(
+                v_new.astype(lcache["v"].dtype), mode="drop")
+            a_out = paged_verify_attn(q, k, v, positions, pos_arr, bt,
+                                      window=a.window, prefix_len=prefix_len)
+            a_out = jnp.einsum("bthk,hkd->btd", a_out, lp["wo"])
+            h = h + shard(a_out, "data", None, None)
+            m_out, _ = self._mlp(lp, cm.rms_norm(h, lp["mlp_norm"], c.norm_eps))
+            h = h + shard(m_out, "data", None, None)
+            return h, {"k": k, "v": v}
+
+        layer_caches = {k: v for k, v in cache.items() if k in ("k", "v")}
+        x, new_caches = jax.lax.scan(layer, x, (params["layers"], layer_caches))
+        x = cm.rms_norm(x, params["final_norm"], c.norm_eps)
+        table = params["embed"] if c.tie_embeddings else params["unembed"]
+        logits = cm.unembed(x, table, c.vocab_size)
+        return logits, dict(new_caches, pos=pos_arr, bt=bt)
+
+    # ------------------------------------------------------------------
+    # chunked prefill (prefix extension)
+
+    def prefill_chunk(self, params: Params, tokens: jax.Array, cache: Dict,
+                      offset: jax.Array, limit: jax.Array,
+                      ) -> Tuple[jax.Array, Dict]:
+        """One prefill *chunk*: write ``tokens`` [B, T] at absolute positions
+        ``offset .. offset+T-1``, attending over the already-written cache
+        prefix plus the chunk itself (Sarathi-style chunked prefill).
+
+        Positions at or beyond ``limit`` are bucket padding: their cache
+        writes are routed out of bounds and dropped, so a ragged final chunk
+        never clobbers live rows (including the ring-wrap case where the
+        padded tail would alias row 0).  Attention reuses the verify-step
+        position masking unchanged — a chunk query at position p sees exactly
+        the keys with position <= p, which is what makes the chunked cache
+        bit-compatible with a whole-prompt prefill.
+
+        Returns (logits [B, T, V], updated cache); callers that only extend
+        the cache can discard the logits (XLA dead-code-eliminates the
+        unembed under jit).
+        """
+        if "bt" in cache:
+            return self._prefill_chunk_paged(params, tokens, cache, offset,
+                                             limit)
+        c = self.cfg
+        B, T = tokens.shape
+        L = cache["pos"].shape[1]
+        x = cm.embed(tokens, params["embed"])
+        x = shard(x, "data", None, None)
+        positions = offset[:, None] + jnp.arange(T, dtype=jnp.int32)[None]
+        valid = positions < limit[:, None]
+        rows = jnp.where(valid, positions % L, L)       # L => dropped write
+        pos_arr = cache["pos"].at[jnp.arange(B)[:, None], rows].set(
+            jnp.where(valid, positions, -1), mode="drop")
+        prefix_len = c.prefix_len if c.bidirectional_prefix else 0
+
+        def layer(carry, xs):
+            h = carry
+            lp, lcache = xs
+            hn = cm.rms_norm(h, lp["attn_norm"], c.norm_eps)
+            a_out, new_lcache = self._attn_decode(lp, hn, positions, lcache,
+                                                  pos_arr, rows, prefix_len)
+            h = h + shard(a_out, "data", None, None)
+            m_out, _ = self._mlp(lp, cm.rms_norm(h, lp["mlp_norm"], c.norm_eps))
+            h = h + shard(m_out, "data", None, None)
+            return h, new_lcache
+
+        layer_caches = {k: v for k, v in cache.items() if k != "pos"}
+        x, new_caches = jax.lax.scan(layer, x, (params["layers"], layer_caches))
+        x = cm.rms_norm(x, params["final_norm"], c.norm_eps)
+        table = params["embed"] if c.tie_embeddings else params["unembed"]
+        return cm.unembed(x, table, c.vocab_size), dict(new_caches, pos=pos_arr)
+
+    def _prefill_chunk_paged(self, params: Params, tokens: jax.Array,
+                             cache: Dict, offset: jax.Array, limit: jax.Array,
+                             ) -> Tuple[jax.Array, Dict]:
+        """Chunked prefill against the paged KV pool: chunk rows scatter
+        block-wise through the slot's block table (padding and unallocated
+        logical blocks are dropped), and attention gathers the slot's prefix
+        through the same table (kernels/paged.py masking unchanged)."""
+        c, a = self.cfg, self.cfg.attn
+        B, T = tokens.shape
+        NB, bs = cache["pos"].shape
+        bt = cache["bt"]                                        # [B, MAXB]
+        x = cm.embed(tokens, params["embed"])
+        x = shard(x, "data", None, None)
+        positions = offset[:, None] + jnp.arange(T, dtype=jnp.int32)[None]
+        valid = positions < limit[:, None]
+        blk = jnp.clip(positions // bs, 0, bt.shape[1] - 1)
+        off = positions % bs
+        pb = jnp.take_along_axis(bt, blk, axis=1)               # [B, T]
+        pb = jnp.where((pb < 0) | ~valid, NB, pb)               # NB => dropped
+        pos_arr = cache["pos"].at[pb, off].set(
+            jnp.where(valid, positions, -1), mode="drop")
         prefix_len = c.prefix_len if c.bidirectional_prefix else 0
 
         def layer(carry, xs):

@@ -3,8 +3,8 @@ from repro.serving.request import BatchRecord, Request
 from repro.serving.scheduler import (AdmissionPolicy, ContinuousEngineBackend,
                                      ContinuousScheduler, FCFSBacklog,
                                      ImmediateAdmit, PrefillBudgetAdmit,
-                                     SimStepBackend, replay_sources,
-                                     serve_continuous_live)
+                                     SimStepBackend, controller_s_cap,
+                                     replay_sources, serve_continuous_live)
 from repro.serving.server import (EngineBackend, ServeResult, SimBackend,
                                   serve, serve_continuous)
 from repro.serving.slots import (BlockPool, BlockPoolExhausted, PagedKVTables,

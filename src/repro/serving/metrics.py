@@ -1,6 +1,7 @@
 """Latency metrics & timeline grouping for the serving experiments."""
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Dict, List, Sequence, Tuple
 
@@ -18,25 +19,52 @@ class LatencySummary:
     p99: float
     max: float
     n: int
+    n_skipped: int = 0      # unfinished/rejected requests excluded upstream
 
     @staticmethod
-    def of(latencies: Sequence[float]) -> "LatencySummary":
+    def of(latencies: Sequence[float], name: str = "latency",
+           n_skipped: int = 0) -> "LatencySummary":
         a = np.asarray(latencies, dtype=np.float64)
+        if a.size == 0:
+            # previously this died inside numpy ("zero-size array to
+            # reduction operation maximum") — name the empty metric instead
+            raise ValueError(
+                f"LatencySummary.of: no '{name}' samples to summarize"
+                + (f" ({n_skipped} unfinished/rejected requests skipped)"
+                   if n_skipped else ""))
         return LatencySummary(
             mean=float(a.mean()), p50=float(np.percentile(a, 50)),
             p90=float(np.percentile(a, 90)), p99=float(np.percentile(a, 99)),
-            max=float(a.max()), n=len(a))
+            max=float(a.max()), n=len(a), n_skipped=n_skipped)
+
+
+def _finished(result: ServeResult) -> Tuple[List[Request], int]:
+    """Requests with a recorded finish time, plus the skipped count.
+
+    Runs that were interrupted (or that rejected requests) leave
+    ``finish = None`` on some records; summarizing those used to crash via
+    the ``Request.latency`` assert.
+    """
+    done = [r for r in result.requests if r.finish is not None]
+    return done, len(result.requests) - len(done)
 
 
 def summarize(result: ServeResult) -> LatencySummary:
-    return LatencySummary.of(result.latencies)
+    done, skipped = _finished(result)
+    return LatencySummary.of([r.latency for r in done], name="latency",
+                             n_skipped=skipped)
 
 
 def timeline_groups(result: ServeResult, group: int = 40,
                     ) -> List[Tuple[float, float]]:
     """Fig. 6 view: (timestamp of first request in group, mean latency of the
-    group) for consecutive groups of ``group`` requests in arrival order."""
-    reqs = sorted(result.requests, key=lambda r: r.arrival)
+    group) for consecutive groups of ``group`` requests in arrival order.
+    Unfinished/rejected requests are skipped (with a warning)."""
+    done, skipped = _finished(result)
+    if skipped:
+        warnings.warn(f"timeline_groups: skipping {skipped} unfinished/"
+                      f"rejected requests")
+    reqs = sorted(done, key=lambda r: r.arrival)
     out = []
     for i in range(0, len(reqs) - group + 1, group):
         chunk = reqs[i:i + group]
@@ -66,7 +94,8 @@ def ttft_summary(result: ServeResult) -> LatencySummary:
     if not vals:
         raise ValueError("no per-request first-token times recorded "
                          "(run an iteration-level scheduler)")
-    return LatencySummary.of(vals)
+    return LatencySummary.of(vals, name="ttft",
+                             n_skipped=len(result.requests) - len(vals))
 
 
 def itl_summary(result: ServeResult) -> LatencySummary:
@@ -74,7 +103,8 @@ def itl_summary(result: ServeResult) -> LatencySummary:
     vals = [r.itl for r in result.requests if r.itl is not None]
     if not vals:
         raise ValueError("no per-request inter-token latencies recorded")
-    return LatencySummary.of(vals)
+    return LatencySummary.of(vals, name="itl",
+                             n_skipped=len(result.requests) - len(vals))
 
 
 def occupancy_timeline(result: ServeResult) -> List[Tuple[float, int]]:
@@ -87,3 +117,30 @@ def mean_occupancy(result: ServeResult) -> float:
     num = sum(b.batch_size * b.duration for b in result.batches)
     den = sum(b.duration for b in result.batches)
     return num / max(den, 1e-12)
+
+
+def admission_gaps(result: ServeResult) -> List[float]:
+    """Per-iteration wall time of iterations that performed admission work
+    (whole-prompt prefills or prefill chunks) while a decode batch was
+    already running — i.e. the inter-token gap those admissions impose on
+    every running request.  The chunked-prefill study compares the max of
+    this under whole-prompt-burst vs chunked admission.
+
+    ``StepTrace.occupancy`` is recorded *after* admission, so it counts
+    the just-admitted slots themselves; an admission into an idle pool
+    stalls nobody and must not count as a gap.  A request is "running"
+    here once it has decoded in an earlier iteration.
+    """
+    if result.trace is None:
+        raise ValueError("no StepTrace recorded "
+                         "(run an iteration-level scheduler)")
+    gaps = []
+    seen_decoding: set = set()
+    for t in result.trace:
+        work = (sum(dt for dt in t.prefill_s if dt > 0)
+                + sum(t.chunk_s))
+        stalled = [rid for rid in t.rids if rid in seen_decoding]
+        if work > 0 and stalled:
+            gaps.append(t.duration + work)
+        seen_decoding.update(t.rids)
+    return gaps

@@ -24,6 +24,11 @@ class Request:
     finish: Optional[float] = None       # t_b
     first_token: Optional[float] = None  # first committed token (TTFT end)
     n_generated: int = 0                 # tokens actually committed
+    # chunked-prefill cursor: positions of the (prompt + stash) feed already
+    # written into this request's slot.  0 while queued; advances as the
+    # iteration-level scheduler feeds chunks; reset to 0 on preemption (a
+    # re-admission re-prefills — chunked again if still over the budget).
+    prefill_pos: int = 0
 
     @property
     def latency(self) -> float:

@@ -28,15 +28,28 @@ Paged KV + preemption: when the engine slot pool is paged (fixed-size
 blocks + a free list, core/spec_decode.py design note), the scheduler also
 (a) admits by block feasibility — a prompt only enters when the free list
 covers it, (b) hard-rejects requests whose worst-case footprint
-(prompt + max_new + S_MAX) exceeds the per-request capacity (previously
-they silently wrapped their KV ring), and (c) preempts under memory
-pressure: if covering this step's worst-case commit (s+1 tokens per live
-slot) could exhaust the free list, the victim with the longest remaining
-budget (ties: most recently admitted, i.e. LIFO) is evicted back to the
-backlog and later re-prefilled from prompt + its generated-token stash.
-Preemptions are recorded in :class:`StepTrace`; because they are pure
-functions of the block accounting, a :class:`SimStepBackend` built with
-the same pool geometry re-derives them exactly during replay.
+(prompt + max_new + the controller's speculation ceiling) exceeds the
+per-request capacity (previously they silently wrapped their KV ring), and
+(c) preempts under memory pressure: if covering this step's worst-case
+commit (s+1 tokens per live slot) could exhaust the free list, the victim
+with the longest remaining budget (ties: most recently admitted, i.e.
+LIFO) is evicted back to the backlog and later re-prefilled from prompt +
+its generated-token stash.  Preemptions are recorded in
+:class:`StepTrace`; because they are pure functions of the block
+accounting, a :class:`SimStepBackend` built with the same pool geometry
+re-derives them exactly during replay.
+
+In-step chunked prefill (Sarathi-style; SNIPPETS §2): with a
+:class:`PrefillBudgetAdmit` policy, admission work is bounded by a strict
+per-iteration token budget.  A prompt that fits the budget prefills whole;
+a longer one is admitted *chunked* — its slot carries PREFILLING state
+across iterations (``Request.prefill_pos``), each iteration feeds at most
+one ``chunk`` of tokens (interleaved with the running batch's decode
+steps), and the slot joins the decode batch only when its last chunk
+commits.  The controller therefore keeps seeing the *decode* batch size,
+admission can no longer stall every running request for a whole-prompt
+burst, and chunk events are recorded in :class:`StepTrace` so the sim
+backend replays them for exact sim-vs-live parity.
 """
 from __future__ import annotations
 
@@ -78,21 +91,59 @@ class PrefillBudgetAdmit(AdmissionPolicy):
     iteration so admission work cannot starve the running batch (bounds the
     inter-token latency hit of each admission burst; SNIPPETS §2).
 
-    Always admits at least one request when a slot is free, so the policy
-    never deadlocks on a prompt longer than the budget.
+    ``chunk`` (default: the budget) is the fixed chunk size used when the
+    scheduler runs a chunk-capable backend: a prompt longer than the
+    remaining budget is then admitted chunked — never as a whole-prompt
+    burst — and continues across iterations.  On a backend without chunk
+    support, :meth:`select` falls back to whole-prompt budgeting: an
+    over-budget head prompt waits (without blocking smaller backlog
+    requests that still fit this step's budget) but only for at most
+    ``max_defer`` iterations — after that it is admitted whole so a steady
+    stream of small prompts cannot starve it forever — and when nothing
+    fits at all the head is admitted whole immediately (no deadlock).
     """
 
-    def __init__(self, token_budget: int = 64):
+    def __init__(self, token_budget: int = 64, chunk: Optional[int] = None,
+                 max_defer: int = 16):
+        if token_budget < 1:
+            raise ValueError("token_budget must be >= 1")
         self.token_budget = token_budget
+        self.chunk_tokens = token_budget if chunk is None else chunk
+        if self.chunk_tokens < 1:
+            raise ValueError("chunk must be >= 1")
+        self.max_defer = max_defer
+        self._deferred: Dict[int, int] = {}    # rid -> times passed over
 
     def select(self, backlog, free_slots, clock):
         out: List[Request] = []
         used = 0
-        for req in backlog[:free_slots]:
-            if out and used + req.prompt_len > self.token_budget:
-                break
+        for req in backlog:
+            if len(out) >= free_slots or used >= self.token_budget:
+                break                  # nothing else can fit this step
+            if used + req.prompt_len > self.token_budget:
+                skips = self._deferred.get(req.rid, 0) + 1
+                if skips > self.max_defer and not out:
+                    # aging escape: a chronically deferred prompt bursts
+                    # whole rather than being starved by a steady stream
+                    # of smaller fits (chunk-capable backends never get
+                    # here — the scheduler admits it chunked instead)
+                    self._deferred.pop(req.rid, None)
+                    out.append(req)
+                    used += req.prompt_len
+                    continue
+                # over budget this step: wait — but do not block smaller
+                # backlog requests that still fit (the head-of-line fix)
+                self._deferred[req.rid] = skips
+                continue
             out.append(req)
             used += req.prompt_len
+            self._deferred.pop(req.rid, None)
+        if not out and backlog and free_slots > 0:
+            # nothing fits the budget at all: whole-prompt fallback so the
+            # policy never deadlocks
+            req = backlog[0]
+            self._deferred.pop(req.rid, None)
+            out.append(req)
         return out
 
 
@@ -111,15 +162,35 @@ class FCFSBacklog(AdmissionPolicy):
 # step backends
 
 
-def _reject_oversize(req: Request, max_context: int) -> None:
+def controller_s_cap(controller) -> int:
+    """Largest speculation length ``controller`` can ever choose.
+
+    This — not the global S_MAX — is the right worst-case reservation unit
+    for admission and KV-overflow checks: a controller capped below S_MAX
+    can serve requests the S_MAX bound would wrongly reject.
+    """
+    try:
+        cap = max(controller.lut.table.values())
+    except (AttributeError, ValueError):
+        return S_MAX
+    if getattr(controller, "model", None) is not None:
+        # online LUT refresh may rebuild entries up to controller.s_max
+        cap = max(cap, getattr(controller, "s_max", S_MAX))
+    return min(int(cap), S_MAX)
+
+
+def _reject_oversize(req: Request, max_context: int,
+                     s_cap: int = S_MAX) -> None:
     """Hard admission bound: a request whose worst-case KV footprint exceeds
     the per-request capacity can never be served — deferring it would spin
     forever, and admitting it would silently wrap the ring / overrun the
-    block table and corrupt the KV (the PR-1 bug this check closes)."""
-    if req.prompt_len + req.max_new + S_MAX > max_context:
+    block table and corrupt the KV (the PR-1 bug this check closes).
+    ``s_cap`` is the scheduler's speculation ceiling (one step can overshoot
+    ``max_new`` by at most that many tokens)."""
+    if req.prompt_len + req.max_new + s_cap > max_context:
         raise ValueError(
             f"request {req.rid}: prompt_len={req.prompt_len} + "
-            f"max_new={req.max_new} + S_MAX={S_MAX} exceeds the per-request "
+            f"max_new={req.max_new} + s_cap={s_cap} exceeds the per-request "
             f"KV capacity {max_context}; the KV ring would wrap and corrupt "
             f"itself")
 
@@ -137,13 +208,18 @@ class ContinuousEngineBackend:
     A preempted request's generated tokens are stashed host-side; on
     re-admission it re-prefills from prompt + stash (recompute-style
     restore) and greedy decoding continues exactly where it left off.
+
+    :meth:`prefill_chunk` feeds one chunk of a request's prompt through the
+    engine's ``prefill_chunk_into`` (in-step chunked prefill); the slot
+    stays masked out of the decode steps until its final chunk commits.
     """
 
     def __init__(self, engine, tparams, dparams, capacity: int,
                  cache_len: int = 256, warm_s: Sequence[int] = (),
                  block_size: Optional[int] = None,
                  num_blocks: Optional[int] = None,
-                 collect_outputs: bool = False):
+                 collect_outputs: bool = False,
+                 s_cap: int = S_MAX):
         if engine.tcfg.family in ("encdec", "audio", "vlm"):
             # these families need per-request modality extras (src_embeds /
             # prefix_embeds) that the admission path does not plumb yet; see
@@ -155,6 +231,7 @@ class ContinuousEngineBackend:
         self.tparams = tparams
         self.dparams = dparams
         self.capacity = capacity
+        self.s_cap = s_cap
         self.state = engine.init_slots(capacity, cache_len,
                                        block_size=block_size,
                                        num_blocks=num_blocks)
@@ -165,6 +242,7 @@ class ContinuousEngineBackend:
         self.outputs: Dict[int, np.ndarray] = {}   # rid -> generated tokens
         self._stash: Dict[int, np.ndarray] = {}    # rid -> pre-preempt tokens
         self._warm_prefill: set = set()
+        self._warm_chunk: set = set()
         self._warm_step: set = set()
         for s in warm_s:
             self.warm_step(s)
@@ -173,6 +251,14 @@ class ContinuousEngineBackend:
     def max_context(self) -> int:
         """Per-request KV capacity in tokens (admission hard limit)."""
         return self.cache_len
+
+    @property
+    def can_chunk(self) -> bool:
+        """Whether the engine's model pair supports chunked prefill."""
+        eng = self.engine
+        return (hasattr(eng.target, "prefill_chunk")
+                and (eng.draft is None
+                     or hasattr(eng.draft, "prefill_chunk")))
 
     def warm_step(self, s: int) -> None:
         if s not in self._warm_step:
@@ -196,7 +282,7 @@ class ContinuousEngineBackend:
 
     def prefill(self, req: Request, slot: int) -> float:
         """Inject ``req`` into ``slot``; returns seconds of prefill work."""
-        _reject_oversize(req, self.max_context)   # defense in depth
+        _reject_oversize(req, self.max_context, self.s_cap)  # defense in depth
         prompt = self._full_prompt(req)
         plen = len(prompt)
         P = self._bucket(plen)
@@ -212,6 +298,38 @@ class ContinuousEngineBackend:
         self.state = self.engine.prefill_into(
             self.tparams, self.dparams, self.state, slot, toks,
             plen, self.cache_len)
+        np.asarray(self.state.seq_lens)          # block until ready
+        return time.perf_counter() - t0
+
+    def prefill_chunk(self, req: Request, slot: int, start: int,
+                      n: int) -> float:
+        """Feed feed-positions ``[start, start + n)`` of ``req``'s prompt
+        (+ pre-preemption stash) into ``slot``; returns seconds.
+
+        The feed spans ``len(prompt) - 1`` positions (the last token is
+        written by the slot's first decode step, exactly like whole-prompt
+        prefill); the chunk carrying the final position also commits the
+        slot into the decode batch.
+        """
+        if start == 0:
+            _reject_oversize(req, self.max_context, self.s_cap)
+        prompt = self._full_prompt(req)
+        total_len = len(prompt)
+        feed_total = total_len - 1
+        CB = self._bucket(n)
+        toks = np.ones((CB,), np.int32)
+        toks[:n] = prompt[start:start + n]
+        final = start + n == feed_total
+        if CB not in self._warm_chunk:
+            # compile begin/chunk/commit for this bucket off the clock
+            self.engine.prefill_chunk_into(
+                self.tparams, self.dparams, self.state, slot,
+                np.ones((CB,), np.int32), 0, CB, CB + 2, warm=True)
+            self._warm_chunk.add(CB)
+        t0 = time.perf_counter()
+        self.state = self.engine.prefill_chunk_into(
+            self.tparams, self.dparams, self.state, slot, toks, start, n,
+            total_len, last2=prompt[-2:] if final else None)
         np.asarray(self.state.seq_lens)          # block until ready
         return time.perf_counter() - t0
 
@@ -274,6 +392,8 @@ class SimStepBackend:
     replayed ``accept_source(step_idx, rids, s) -> accepted`` trace.
     """
 
+    can_chunk = True
+
     def __init__(self, model: LatencyModel, capacity: int, seed: int = 0,
                  accept_source: Optional[Callable] = None,
                  duration_source: Optional[Callable] = None,
@@ -281,7 +401,8 @@ class SimStepBackend:
                  block_size: Optional[int] = None,
                  num_blocks: Optional[int] = None,
                  max_context: int = 256,
-                 done_source: Optional[Callable] = None):
+                 done_source: Optional[Callable] = None,
+                 chunk_source: Optional[Callable] = None):
         self.model = model
         self.capacity = capacity
         self.acceptance = GeometricAcceptance(model, seed)
@@ -292,6 +413,8 @@ class SimStepBackend:
         # its EOS step (commit > 0) one iteration before it commits 0, and
         # victim selection must see the same flag to replay identically
         self.done_source = done_source
+        # replayed per-rid chunk durations (FIFO, like prefill_source)
+        self.chunk_source = chunk_source
         self.done = np.ones(capacity, dtype=bool)
         self.rids = np.full(capacity, -1, dtype=np.int64)
         self._step_idx = 0
@@ -326,14 +449,44 @@ class SimStepBackend:
             return float(self.prefill_source(req.rid))
         return 0.0                     # prefill is outside the fitted model
 
+    def prefill_chunk(self, req: Request, slot: int, start: int,
+                      n: int) -> float:
+        """Mirror of the live chunked-prefill block accounting: tokens grow
+        chunk-by-chunk, the slot stays done (out of the decode batch) until
+        the final chunk, then joins with the whole-prompt end state."""
+        total_len = req.prompt_len + req.n_generated
+        feed_total = total_len - 1
+        if start == 0:
+            self.done[slot] = True
+            self.rids[slot] = req.rid
+            if self.kv is not None:
+                self.kv.prefill(slot, n)
+                self.kv.mark_pending(slot)
+        elif self.kv is not None:
+            self.kv.ensure(slot, start + n)
+            self.kv.commit(slot, n)
+        if start + n == feed_total:
+            if self.kv is not None:
+                # cover the row the first decode step writes (row total-1)
+                self.kv.ensure(slot, total_len)
+                self.kv.commit(slot, 1)
+                self.kv.clear_pending(slot)
+            self.done[slot] = False
+        if self.chunk_source is not None:
+            return float(self.chunk_source(req.rid))
+        return 0.0
+
     def step(self, s: int) -> Tuple[float, np.ndarray, np.ndarray]:
         active = np.where(~self.done)[0]
         b = len(active)
         bk = self._batch_key(b)
         if self.kv is not None:
             # same slot set as the live engine's pre-step growth: every slot
-            # still holding blocks (incl. EOS'd rows awaiting retirement)
+            # still holding blocks (incl. EOS'd rows awaiting retirement),
+            # minus mid-prefill slots (they grow chunk-by-chunk instead)
             for slot in self.kv.active_slots():
+                if self.kv.is_pending(slot):
+                    continue
                 self.kv.ensure(slot, self.kv.tokens(slot) + s)
         if self.duration_source is not None:
             dt = float(self.duration_source(self._step_idx, b, s))
@@ -358,7 +511,8 @@ class SimStepBackend:
                     self.done[slot] = True
         if self.kv is not None:
             for slot in self.kv.active_slots():
-                self.kv.commit(slot, int(committed[slot]))
+                if not self.kv.is_pending(slot):
+                    self.kv.commit(slot, int(committed[slot]))
         self._step_idx += 1
         return dt, committed, self.done.copy()
 
@@ -390,55 +544,76 @@ class StepTrace:
     admitted: Tuple[int, ...] = ()
     duration: float = 0.0              # step duration charged to the clock
     prefill_s: Tuple[float, ...] = ()  # per-admission prefill seconds
+                                       # (-1.0 => admitted via chunks)
     preempted: Tuple[int, ...] = ()    # rids evicted before this step
     done_rids: Tuple[int, ...] = ()    # rids the backend flagged done after
+    chunked: Tuple[Tuple[int, int], ...] = ()  # (rid, tokens) chunk events
+    chunk_s: Tuple[float, ...] = ()    # per-chunk-event seconds
 
 
 def replay_sources(trace: Sequence[StepTrace]):
-    """(accept, duration, prefill, done) replay callbacks from a trace.
+    """(accept, duration, prefill, done, chunk) replay callbacks from a
+    trace.
 
     Feeding these into :class:`SimStepBackend` pins every *outcome* (commit
-    counts, step durations, prefill costs, per-step done flags) to the
-    recorded run, so a second scheduler run over the sim backend must
-    reproduce the recorded admission order and batch-size sequence exactly
-    — the sim-vs-live parity check.  Preemption decisions are NOT replayed:
-    they are pure functions of the block-pool accounting plus the done
-    flags, so a sim backend built with the live pool's geometry re-derives
-    them (and the parity test checks they match).
+    counts, step durations, prefill and chunk costs, per-step done flags)
+    to the recorded run, so a second scheduler run over the sim backend
+    must reproduce the recorded admission order, chunk schedule, and
+    batch-size sequence exactly — the sim-vs-live parity check.  Preemption
+    decisions are NOT replayed: they are pure functions of the block-pool
+    accounting plus the done flags, so a sim backend built with the live
+    pool's geometry re-derives them (and the parity test checks they
+    match).  Chunk *sizes* are likewise re-derived (they are pure functions
+    of the admission budget) — only their durations are replayed.
+
+    ``step_idx`` counts executed steps: iterations that only fed prefill
+    chunks (no live decode row) record a trace entry but no backend step,
+    so the replay indexes into the occupancy > 0 subset of the trace.
 
     A preempted request is admitted (and so prefilled) more than once, so
-    per-rid prefill costs replay as a FIFO queue of the recorded durations.
+    per-rid prefill/chunk costs replay as FIFO queues of the recorded
+    durations.
     """
+    steps = [t for t in trace if t.occupancy > 0]
     prefill: Dict[int, List[float]] = {}
+    chunks: Dict[int, List[float]] = {}
     for t in trace:
         for rid, dt in zip(t.admitted, t.prefill_s):
-            prefill.setdefault(rid, []).append(dt)
+            if dt >= 0:                # -1.0 marks a chunked admission
+                prefill.setdefault(rid, []).append(dt)
+        for (rid, _m), dt in zip(t.chunked, t.chunk_s):
+            chunks.setdefault(rid, []).append(dt)
 
     def accept(step_idx, rids, s):
         # committed - 1; a recorded 0 maps to -1 (zero-commit step: the
         # recorded run had retired this request via EOS / engine max_new)
-        rec = trace[step_idx].committed
+        rec = steps[step_idx].committed
         return np.array([rec.get(int(r), 1) - 1 for r in rids])
 
     def duration(step_idx, b, s):
-        return trace[step_idx].duration
+        return steps[step_idx].duration
 
     def prefill_src(rid):
         q = prefill.get(rid)
         return q.pop(0) if q else 0.0
 
     def done_src(step_idx):
-        return trace[step_idx].done_rids
+        return steps[step_idx].done_rids
 
-    return accept, duration, prefill_src, done_src
+    def chunk_src(rid):
+        q = chunks.get(rid)
+        return q.pop(0) if q else 0.0
+
+    return accept, duration, prefill_src, done_src, chunk_src
 
 
 class ContinuousScheduler:
     """Iteration-level serving loop over any step backend.
 
     After :meth:`run`, ``self.trace`` holds one :class:`StepTrace` per
-    iteration (admission order, live batch size, per-request commits) —
-    the observable scheduling behaviour compared in parity tests.
+    iteration (admission order, live batch size, per-request commits,
+    chunked-prefill events) — the observable scheduling behaviour compared
+    in parity tests.
     """
 
     def __init__(self, backend, controller: AdaptiveController,
@@ -449,6 +624,11 @@ class ContinuousScheduler:
         self.policy = policy or ImmediateAdmit()
         self.observe = observe
         self.trace: List[StepTrace] = []
+        # the controller's speculation ceiling, not the global S_MAX, is the
+        # worst-case reservation unit for admission/overflow checks
+        self.s_cap = controller_s_cap(controller)
+        if hasattr(backend, "s_cap"):
+            backend.s_cap = self.s_cap
 
     @staticmethod
     def _select_victim(slots: Sequence[int], pool: SlotPool,
@@ -467,9 +647,37 @@ class ContinuousScheduler:
         self.trace = []
         kv = getattr(self.backend, "kv", None)
         max_ctx = getattr(self.backend, "max_context", None)
+        s_cap = self.s_cap
+        chunk_cfg = getattr(self.policy, "chunk_tokens", None)
+        budget_cfg = getattr(self.policy, "token_budget", None)
+        chunking = (chunk_cfg is not None
+                    and getattr(self.backend, "can_chunk", False))
+        prefilling: Dict[int, Request] = {}   # slot -> mid-chunked-prefill
         admit_seq: Dict[int, int] = {}
         n_admits = 0
         prev_done: set = set()         # rids the backend flagged done last step
+
+        def decode_slots() -> List[int]:
+            return [sl for sl in pool.active_slots() if sl not in prefilling]
+
+        def growth_reserve(s: int) -> int:
+            """Blocks the running decode batch may claim this step."""
+            return sum(
+                max(0, kv.blocks_for(kv.tokens(sl) + s) - kv.allocated(sl))
+                for sl in decode_slots())
+
+        def pending_reserve(exclude: Optional[int] = None) -> int:
+            """Blocks the mid-prefill slots still need to complete.  Keeping
+            ``free >= this`` at all times is what guarantees every admitted
+            chunked prefill can finish (no admit-then-starve)."""
+            tot = 0
+            for sl, rq in prefilling.items():
+                if sl == exclude:
+                    continue
+                tot += max(0, kv.blocks_for(rq.prompt_len + rq.n_generated)
+                           - kv.allocated(sl))
+            return tot
+
         clock, i, n_done, n = 0.0, 0, 0, len(pending)
         while n_done < n:
             while i < n and pending[i].arrival <= clock:
@@ -477,108 +685,211 @@ class ContinuousScheduler:
                 i += 1
             admitted: List[int] = []
             prefill_s: List[float] = []
-            for req in self.policy.select(backlog, pool.free_count, clock):
-                if max_ctx is not None:
-                    # oversized requests can NEVER be served (deferring would
-                    # spin forever); fail loudly before claiming a slot
-                    _reject_oversize(req, max_ctx)
-                if kv is not None:
-                    # admit only if the free list covers the prompt (plus
-                    # stash), this request's worst-case first step, AND the
-                    # running batch's own worst-case growth — otherwise a
-                    # fresh admit pays a full B=1 prefill just to be evicted
-                    # by the pressure check below (prefill thrash)
-                    growth = sum(
-                        max(0, kv.blocks_for(kv.tokens(sl) + S_MAX)
-                            - kv.allocated(sl))
-                        for sl in pool.active_slots())
-                    need = kv.blocks_for(req.prompt_len + req.n_generated
-                                         + S_MAX)
-                    if need + growth > kv.free_blocks:
-                        break          # head-of-line: wait for free blocks
+            chunked: List[Tuple[int, int]] = []
+            chunk_s: List[float] = []
+            budget_left = (budget_cfg if (chunking and budget_cfg is not None)
+                           else float("inf"))
+
+            def feed_chunk(req: Request, slot: int, m: int) -> None:
+                nonlocal clock
+                dt = self.backend.prefill_chunk(req, slot, req.prefill_pos, m)
+                clock += dt
+                chunked.append((req.rid, m))
+                chunk_s.append(dt)
+                req.prefill_pos += m
+
+            def claim_for(req: Request) -> int:
+                """Shared admission bookkeeping (both admission modes)."""
+                nonlocal n_admits
                 backlog.remove(req)
                 slot = pool.claim(req)
                 if req.start is None:  # keep the first admission's start
                     req.start = clock
-                p_dt = self.backend.prefill(req, slot)
-                clock += p_dt
-                admitted.append(req.rid)
-                prefill_s.append(p_dt)
                 n_admits += 1
                 admit_seq[req.rid] = n_admits
+                admitted.append(req.rid)
+                return slot
+
+            # ---- continue in-flight chunked prefills (Sarathi: ongoing
+            # prefills spend the budget before new admissions) ----
+            if chunking and prefilling:
+                for slot in sorted(prefilling,
+                                   key=lambda sl: admit_seq[
+                                       prefilling[sl].rid]):
+                    if budget_left <= 0:
+                        break
+                    req = prefilling[slot]
+                    feed_total = req.prompt_len + req.n_generated - 1
+                    start = req.prefill_pos
+                    m = int(min(chunk_cfg, feed_total - start, budget_left))
+                    if kv is not None:
+                        # blocks actually available to this chunk right now
+                        avail = (kv.free_blocks - growth_reserve(s_cap)
+                                 - pending_reserve(exclude=slot))
+                        cap_rows = ((kv.allocated(slot) + avail)
+                                    * kv.block_size - start)
+                        if cap_rows < feed_total - start + 1:
+                            # full completion (incl. the +1 commit row) does
+                            # not fit yet: feed what fits, short of the
+                            # final position
+                            m = min(m, max(cap_rows, 0),
+                                    feed_total - start - 1)
+                    if m <= 0:
+                        continue       # blocked on blocks; retry next step
+                    feed_chunk(req, slot, m)
+                    budget_left -= m
+                    if req.prefill_pos == feed_total:
+                        del prefilling[slot]
+            # ---- admissions ----
+            if chunking:
+                # budgeted admission supersedes policy.select(): its
+                # whole-prompt budget semantics (skip over-budget heads)
+                # exist precisely because chunk-incapable backends cannot
+                # split a prompt — here an over-budget prompt is admitted
+                # chunked instead, in the same FCFS order select() uses
+                for req in list(backlog):
+                    if pool.free_count == 0 or budget_left <= 0:
+                        break
+                    if max_ctx is not None:
+                        _reject_oversize(req, max_ctx, s_cap)
+                    total_len = req.prompt_len + req.n_generated
+                    if kv is not None:
+                        # reserve the full prompt + first-step worst case up
+                        # front (plus the running batch's growth and the
+                        # other pending prefills' completion) — a chunked
+                        # admission that could not finish would hold blocks
+                        # forever
+                        need = kv.blocks_for(total_len + s_cap)
+                        if (need + growth_reserve(s_cap) + pending_reserve()
+                                > kv.free_blocks):
+                            break      # head-of-line: wait for free blocks
+                    slot = claim_for(req)
+                    req.prefill_pos = 0
+                    if total_len <= budget_left:
+                        p_dt = self.backend.prefill(req, slot)
+                        clock += p_dt
+                        prefill_s.append(p_dt)
+                        budget_left -= total_len
+                    else:
+                        # over the remaining budget: admit CHUNKED — never a
+                        # whole-prompt burst (bounds this iteration's stall)
+                        prefill_s.append(-1.0)
+                        feed_total = total_len - 1
+                        m = int(min(chunk_cfg, budget_left, feed_total))
+                        feed_chunk(req, slot, m)
+                        budget_left -= m
+                        if req.prefill_pos < feed_total:
+                            prefilling[slot] = req
+            else:
+                for req in self.policy.select(backlog, pool.free_count,
+                                              clock):
+                    if max_ctx is not None:
+                        # oversized requests can NEVER be served (deferring
+                        # would spin forever); fail loudly before claiming
+                        _reject_oversize(req, max_ctx, s_cap)
+                    if kv is not None:
+                        # admit only if the free list covers the prompt
+                        # (plus stash), this request's worst-case first
+                        # step, AND the running batch's own worst-case
+                        # growth — otherwise a fresh admit pays a full B=1
+                        # prefill just to be evicted by the pressure check
+                        # below (prefill thrash)
+                        need = kv.blocks_for(req.prompt_len + req.n_generated
+                                             + s_cap)
+                        if need + growth_reserve(s_cap) > kv.free_blocks:
+                            break      # head-of-line: wait for free blocks
+                    slot = claim_for(req)
+                    p_dt = self.backend.prefill(req, slot)
+                    clock += p_dt
+                    prefill_s.append(p_dt)
             if pool.occupancy == 0:
                 if not backlog and i < n:
                     clock = max(clock, pending[i].arrival)
                 continue
             # ---- preemption under memory pressure (paged pool only) ----
-            # worst case this step commits s+1 tokens per slot, i.e. KV
-            # writes up to seq_len + s rows; if covering that could exhaust
-            # the free list, evict victims back to the backlog (they
-            # re-prefill from prompt + generated stash later).  A lone slot
-            # always fits: admission bounds every request to the pool.
+            # worst case this step commits s+1 tokens per decode slot, i.e.
+            # KV writes up to seq_len + s rows; if covering that (plus the
+            # pending prefills' completion) could exhaust the free list,
+            # evict victims back to the backlog (they re-prefill from
+            # prompt + generated stash later).  A lone slot always fits:
+            # admission bounds every request to the pool.
             preempted: List[int] = []
             if kv is not None:
                 while pool.occupancy > 1:
-                    s = self.controller.choose(pool.occupancy)
-                    need = sum(
-                        max(0, kv.blocks_for(kv.tokens(sl) + s)
-                            - kv.allocated(sl))
-                        for sl in pool.active_slots())
+                    ds = decode_slots()
+                    s = self.controller.choose(len(ds))
+                    need = (growth_reserve(s) + pending_reserve())
                     if need <= kv.free_blocks:
                         break
                     # never evict a slot the backend already flagged done
                     # (EOS'd, awaiting its zero-commit retirement step):
                     # re-prefilling it would resurrect a finished request
-                    # and generate past its EOS
-                    eligible = [sl for sl in pool.active_slots()
+                    # and generate past its EOS.  Mid-prefill slots are not
+                    # eligible either: their completion is what the
+                    # reservation protects.
+                    eligible = [sl for sl in ds
                                 if pool.request_at(sl).rid not in prev_done]
                     if not eligible:
                         break          # done slots free their blocks shortly
                     victim = self._select_victim(eligible, pool, admit_seq)
                     req = pool.retire(victim)
                     self.backend.preempt(victim, req)
+                    req.prefill_pos = 0
                     backlog.insert(0, req)
                     preempted.append(req.rid)
-            b = pool.occupancy
-            s = self.controller.choose(b)
-            dt, committed, backend_done = self.backend.step(s)
-            done_rids = tuple(sorted(
-                pool.request_at(sl).rid for sl in pool.active_slots()
-                if backend_done[sl]))
-            clock += dt
-            toks = 0
-            raw: Dict[int, int] = {}
-            accepted_live: List[int] = []
-            for slot in pool.active_slots():
-                req = pool.request_at(slot)
-                c_raw = int(committed[slot])
-                raw[req.rid] = c_raw
-                accepted_live.append(max(c_raw - 1, 0))
-                c = min(c_raw, pool.remaining(slot))
-                if c > 0 and req.first_token is None:
-                    req.first_token = clock
-                pool.consume(slot, c)
-                req.n_generated += c
-                toks += c
-                # finished: served its token budget, or the backend stopped
-                # committing for it (EOS / engine-level max_new)
-                if pool.remaining(slot) <= 0 or (c_raw == 0 and backend_done[slot]):
-                    req.finish = clock
-                    pool.retire(slot)
-                    self.backend.retire(slot, req)
-                    n_done += 1
-            if self.observe and s > 0:
-                self.controller.observe(np.asarray(accepted_live), s)
-            batches.append(BatchRecord(
-                start=clock - dt, duration=dt, batch_size=b, s_used=s,
-                tokens_generated=toks, n_steps=1,
-                rids=tuple(sorted(raw))))
+            ds = decode_slots()
+            b = len(ds)
+            if b > 0:
+                s = self.controller.choose(b)
+                dt, committed, backend_done = self.backend.step(s)
+                done_rids = tuple(sorted(
+                    pool.request_at(sl).rid for sl in ds
+                    if backend_done[sl]))
+                clock += dt
+                toks = 0
+                raw: Dict[int, int] = {}
+                accepted_live: List[int] = []
+                for slot in ds:
+                    req = pool.request_at(slot)
+                    c_raw = int(committed[slot])
+                    raw[req.rid] = c_raw
+                    accepted_live.append(max(c_raw - 1, 0))
+                    c = min(c_raw, pool.remaining(slot))
+                    if c > 0 and req.first_token is None:
+                        req.first_token = clock
+                    pool.consume(slot, c)
+                    req.n_generated += c
+                    toks += c
+                    # finished: served its token budget, or the backend
+                    # stopped committing for it (EOS / engine-level max_new)
+                    if pool.remaining(slot) <= 0 or (c_raw == 0
+                                                     and backend_done[slot]):
+                        req.finish = clock
+                        pool.retire(slot)
+                        self.backend.retire(slot, req)
+                        n_done += 1
+                if self.observe and s > 0:
+                    self.controller.observe(np.asarray(accepted_live), s)
+                batches.append(BatchRecord(
+                    start=clock - dt, duration=dt, batch_size=b, s_used=s,
+                    tokens_generated=toks, n_steps=1,
+                    rids=tuple(sorted(raw))))
+            else:
+                # no live decode row this iteration (all occupied slots are
+                # mid-chunked-prefill): the clock advanced by chunk work only
+                if not chunked and not admitted and not preempted:
+                    raise RuntimeError(
+                        "scheduler stalled: occupied slots but no decode "
+                        "step, chunk, admission, or preemption this "
+                        "iteration (block accounting out of sync?)")
+                s, dt, raw, done_rids = 0, 0.0, {}, ()
             self.trace.append(StepTrace(
                 clock=clock - dt, occupancy=b, s=s,
                 rids=tuple(sorted(raw)), committed=raw,
                 admitted=tuple(admitted), duration=dt,
                 prefill_s=tuple(prefill_s), preempted=tuple(preempted),
-                done_rids=done_rids))
+                done_rids=done_rids, chunked=tuple(chunked),
+                chunk_s=tuple(chunk_s)))
             prev_done = set(done_rids)
         return ServeResult(requests=list(pending), batches=batches)
 
@@ -603,27 +914,34 @@ def serve_continuous_live(requests: Sequence[Request], engine, tparams,
     ``block_size`` switches the KV slot pool to the paged block allocator
     (``num_blocks`` sizes it; default worst-case) with preemption under
     memory pressure.  Admission hard-rejects any request whose worst-case
-    KV footprint (``prompt_len + max_new + S_MAX``) exceeds the per-request
-    capacity — previously such a request silently wrapped its KV ring and
-    corrupted itself.
+    KV footprint (``prompt_len + max_new`` + the controller's speculation
+    ceiling) exceeds the per-request capacity — previously such a request
+    silently wrapped its KV ring and corrupted itself.
+
+    A :class:`PrefillBudgetAdmit` policy additionally enables in-step
+    chunked prefill: prompts longer than the per-iteration token budget are
+    admitted chunk-by-chunk, interleaved with the running batch's decode
+    steps.
     """
     for r in requests:
         if r.max_new > engine.max_new:
             raise ValueError(
                 f"request {r.rid} wants {r.max_new} tokens but the engine "
                 f"slot pool is sized for max_new={engine.max_new}")
+    s_cap = controller_s_cap(controller)
     if backend is None:
         warm = sorted(set(controller.lut.table.values()))
         backend = ContinuousEngineBackend(engine, tparams, dparams,
                                           capacity=capacity,
                                           cache_len=cache_len, warm_s=warm,
                                           block_size=block_size,
-                                          num_blocks=num_blocks)
+                                          num_blocks=num_blocks,
+                                          s_cap=s_cap)
     for r in requests:
-        if r.prompt_len + r.max_new + S_MAX > backend.max_context:
+        if r.prompt_len + r.max_new + s_cap > backend.max_context:
             raise ValueError(
                 f"request {r.rid}: prompt_len={r.prompt_len} + "
-                f"max_new={r.max_new} + S_MAX={S_MAX} exceeds the "
+                f"max_new={r.max_new} + s_cap={s_cap} exceeds the "
                 f"per-request KV capacity {backend.max_context}; the KV "
                 f"ring would wrap and corrupt itself")
     sched = ContinuousScheduler(backend, controller, policy, observe=observe)

@@ -103,6 +103,11 @@ class PagedKVTables:
         self.max_blocks = max_blocks_per_slot
         self._tables: List[List[int]] = [[] for _ in range(capacity)]
         self._tokens = np.zeros(capacity, dtype=np.int64)
+        # slots whose prefill is still being fed chunk-by-chunk: they hold
+        # blocks but do not decode, so the per-step worst-case growth
+        # (seq + s) must not be charged to them — the live engine and the
+        # sim mirror both skip pending slots in their pre-step growth
+        self._pending: set = set()
 
     # ------------------------------------------------------------------
     # geometry
@@ -143,6 +148,19 @@ class PagedKVTables:
         return [i for i, t in enumerate(self._tables) if t]
 
     # ------------------------------------------------------------------
+    # chunked-prefill (pending) slots
+
+    def mark_pending(self, slot: int) -> None:
+        """Flag ``slot`` as mid-chunked-prefill (holds blocks, not decoding)."""
+        self._pending.add(slot)
+
+    def clear_pending(self, slot: int) -> None:
+        self._pending.discard(slot)
+
+    def is_pending(self, slot: int) -> bool:
+        return slot in self._pending
+
+    # ------------------------------------------------------------------
     # lifecycle
 
     def prefill(self, slot: int, n_tokens: int) -> List[int]:
@@ -180,13 +198,23 @@ class PagedKVTables:
         blocks = self._tables[slot]
         self._tables[slot] = []
         self._tokens[slot] = 0
+        self._pending.discard(slot)
         self.pool.free(blocks)
         return blocks
 
-    def device_tables(self) -> np.ndarray:
-        """[capacity, max_blocks] int32 block table, -1 = unallocated."""
+    def device_tables(self, exclude_pending: bool = False) -> np.ndarray:
+        """[capacity, max_blocks] int32 block table, -1 = unallocated.
+
+        ``exclude_pending=True`` keeps mid-chunked-prefill slots' rows at -1:
+        the decode step uploads with this set, so a parked slot's (masked,
+        garbage) decode-step writes stay dropped on the device even while
+        other slots' growth re-uploads the table — its blocks are only
+        published by the final chunk's commit.
+        """
         out = np.full((self.capacity, self.max_blocks), -1, np.int32)
         for i, t in enumerate(self._tables):
+            if exclude_pending and i in self._pending:
+                continue
             out[i, :len(t)] = t
         return out
 

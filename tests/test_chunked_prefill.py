@@ -1,0 +1,404 @@
+"""In-step chunked prefill: engine-level chunk-vs-whole equality (contiguous
+and paged pools), scheduler-level chunked admission with exact outputs and
+sim-vs-live StepTrace parity (chunk events replayed), a chunked slot that
+later gets preempted, and regressions for the admission/metrics bugfix
+sweep (s-ceiling rejection, unfinished-request metrics, empty
+LatencySummary, citier zero-collection)."""
+import dataclasses
+import os
+import sys
+from collections import Counter
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry as R
+from repro.core.adaptive import (AdaptiveController, SpeculationLUT,
+                                 fixed_controller)
+from repro.core.analytical import LatencyModel
+from repro.core.spec_decode import S_MAX, SpecDecodeEngine
+from repro.serving.metrics import (LatencySummary, admission_gaps, summarize,
+                                   timeline_groups)
+from repro.serving.request import Request
+from repro.serving.scheduler import (ContinuousEngineBackend,
+                                     ContinuousScheduler, PrefillBudgetAdmit,
+                                     SimStepBackend, controller_s_cap,
+                                     replay_sources, serve_continuous_live)
+from repro.serving.server import ServeResult
+from repro.serving.traffic import TrafficPhase, make_requests
+
+CACHE_LEN = 96
+BLOCK = 8
+
+
+@pytest.fixture(scope="module")
+def engine():
+    tcfg = R.get_smoke_config("yi-9b")
+    d = R.get_draft_config("yi-9b")
+    dcfg = dataclasses.replace(
+        d, n_layers=1, d_model=64, d_ff=128, vocab_size=tcfg.vocab_size,
+        dtype="float32",
+        attn=dataclasses.replace(d.attn, n_heads=2, n_kv_heads=2, head_dim=32))
+    eng = SpecDecodeEngine(tcfg, dcfg, max_new=24)
+    tp = eng.target.init(jax.random.PRNGKey(0))
+    dp = eng.draft.init(jax.random.PRNGKey(1))
+    return eng, tp, dp, tcfg
+
+
+def _ctrl():
+    return AdaptiveController(lut=SpeculationLUT({1: 4, 2: 3, 4: 2}))
+
+
+def _model(bs=(1, 2, 4)):
+    return LatencyModel(alpha={b: 1e-4 for b in bs},
+                        beta={b: 5e-3 for b in bs},
+                        t_s={b: 2e-4 for b in bs}, c=0.9, gamma=0.548)
+
+
+# ---------------------------------------------------------------------------
+# engine level: chunked prefill == whole-prompt prefill, token for token
+
+
+@pytest.mark.parametrize("paged", [False, True], ids=["contiguous", "paged"])
+def test_prefill_chunk_into_matches_whole_prefill(engine, paged):
+    """A prompt fed across >= 3 chunks — with live decode steps of another
+    slot interleaved between the chunks — must produce token-identical
+    output to a whole-prompt prefill_into admission, and must not disturb
+    the companion slot."""
+    eng, tp, dp, tcfg = engine
+    rng = np.random.default_rng(3)
+    long_p = rng.integers(0, tcfg.vocab_size, (22,)).astype(np.int32)
+    short_p = rng.integers(0, tcfg.vocab_size, (7,)).astype(np.int32)
+    refs = {}
+    for name, p in (("long", long_p), ("short", short_p)):
+        out, _, _ = eng.generate(tp, dp, p[None], np.array([len(p)], np.int32),
+                                 s=3, cache_len=CACHE_LEN)
+        refs[name] = out[0]
+
+    kw = dict(block_size=BLOCK) if paged else {}
+    state = eng.init_slots(3, cache_len=CACHE_LEN, **kw)
+    state = eng.prefill_into(tp, dp, state, 0, short_p, 7, CACHE_LEN)
+    total = len(long_p)
+    feed_total = total - 1                       # 21 tokens -> 3 chunks of 8
+    cur, n_chunks = 0, 0
+    while cur < feed_total:
+        m = min(8, feed_total - cur)
+        toks = np.ones((8,), np.int32)
+        toks[:m] = long_p[cur:cur + m]
+        final = cur + m == feed_total
+        state = eng.prefill_chunk_into(
+            tp, dp, state, 1, toks, cur, m, total,
+            last2=long_p[-2:] if final else None)
+        cur += m
+        n_chunks += 1
+        if not final:
+            # mid-prefill: the slot stays masked out of the decode step
+            state, st = eng.step(tp, dp, state, 3)
+            assert st.committed[1] == 0 and st.committed[2] == 0
+    assert n_chunks >= 3
+    for _ in range(40):
+        state, _ = eng.step(tp, dp, state, 3)
+        if bool(np.asarray(state.done)[:2].all()):
+            break
+    out = np.asarray(state.out)[:, :eng.max_new]
+    np.testing.assert_array_equal(out[1], refs["long"],
+                                  err_msg="chunked slot diverged")
+    np.testing.assert_array_equal(out[0], refs["short"],
+                                  err_msg="companion slot was disturbed")
+
+
+def test_prefill_chunk_into_validates_args(engine):
+    eng, tp, dp, tcfg = engine
+    state = eng.init_slots(2, cache_len=CACHE_LEN)
+    toks = np.ones((8,), np.int32)
+    with pytest.raises(ValueError, match="bucket"):
+        eng.prefill_chunk_into(tp, dp, state, 0, toks, 0, 0, 20)
+    with pytest.raises(ValueError, match="overruns"):
+        eng.prefill_chunk_into(tp, dp, state, 0, toks, 16, 8, 20)
+    with pytest.raises(ValueError, match="last2"):
+        # final chunk (start + n == total_len - 1) without last2
+        eng.prefill_chunk_into(tp, dp, state, 0, toks, 11, 8, 20)
+
+
+# ---------------------------------------------------------------------------
+# scheduler level: chunked admission, exact outputs, sim-vs-live parity
+
+
+def _trace(tcfg, n=10, seed=7, long_every=3, long_len=(30, 40),
+           budget=(4, 17)):
+    reqs = make_requests(n, [TrafficPhase(0.0005, 1.0, float("inf"))],
+                         tcfg.vocab_size, seed=seed, max_new=16)
+    rng = np.random.default_rng(3)
+    for i, r in enumerate(reqs):
+        r.max_new = int(rng.integers(*budget))
+        if i % long_every == 0:
+            L = int(rng.integers(*long_len))
+            r.tokens = rng.integers(0, tcfg.vocab_size, (L,)).astype(np.int32)
+            r.prompt_len = L
+    return reqs
+
+
+@pytest.mark.parametrize("paged", [False, True], ids=["contiguous", "paged"])
+def test_chunked_admission_outputs_and_parity(engine, paged):
+    """Long prompts admitted under a 16-token budget are served across >= 3
+    chunks with token-identical outputs, the per-iteration admission work
+    never exceeds the budget, and a sim backend replaying the recorded
+    outcomes reproduces the StepTrace — chunk events included — exactly."""
+    eng, tp, dp, tcfg = engine
+    kw = dict(block_size=BLOCK, num_blocks=40) if paged else {}
+    backend = ContinuousEngineBackend(eng, tp, dp, capacity=4,
+                                      cache_len=CACHE_LEN,
+                                      collect_outputs=True, warm_s=(2, 3, 4),
+                                      **kw)
+    pol = PrefillBudgetAdmit(token_budget=16, chunk=8)
+    res = serve_continuous_live(_trace(tcfg), eng, tp, dp, _ctrl(),
+                                backend=backend, policy=pol)
+    assert all(r.finish is not None for r in res.requests)
+    assert all(r.n_generated == r.max_new for r in res.requests)
+    per_rid = Counter(rid for t in res.trace for rid, _ in t.chunked)
+    assert per_rid, "no chunk events recorded"
+    assert max(per_rid.values()) >= 3            # a prompt spanned >= 3 chunks
+    for t in res.trace:
+        assert sum(m for _, m in t.chunked) <= pol.token_budget
+    for r in res.requests:
+        ref, _, _ = eng.generate(tp, dp, np.asarray(r.tokens)[None, :],
+                                 np.array([r.prompt_len], np.int32), s=3,
+                                 cache_len=CACHE_LEN)
+        np.testing.assert_array_equal(
+            backend.outputs[r.rid], ref[0][:r.n_generated],
+            err_msg=f"rid {r.rid} ({per_rid.get(r.rid, 0)} chunks)")
+    # ---- exact sim-vs-live StepTrace parity, chunk events replayed ----
+    accept, duration, prefill, done, chunk = replay_sources(res.trace)
+    simkw = (dict(block_size=BLOCK, num_blocks=40, max_context=CACHE_LEN)
+             if paged else {})
+    sim = ContinuousScheduler(
+        SimStepBackend(_model(), capacity=4, accept_source=accept,
+                       duration_source=duration, prefill_source=prefill,
+                       done_source=done, chunk_source=chunk, **simkw),
+        _ctrl(), policy=PrefillBudgetAdmit(token_budget=16, chunk=8))
+    res_sim = sim.run(_trace(tcfg))
+    for field in ("admitted", "chunked", "occupancy", "committed",
+                  "preempted"):
+        assert ([getattr(t, field) for t in sim.trace]
+                == [getattr(t, field) for t in res.trace]), field
+    np.testing.assert_allclose(res_sim.latencies, res.latencies, rtol=1e-9)
+
+
+def test_chunked_slot_later_preempted(engine):
+    """A request admitted chunked, once live, is a normal preemption victim:
+    under an undersized block pool it is evicted mid-decode, re-admitted
+    (re-chunked from prompt + stash), and still finishes with
+    token-identical output; the block-mirror sim re-derives the identical
+    schedule."""
+    eng, tp, dp, tcfg = engine
+
+    def reqs():
+        return _trace(tcfg, n=8, seed=11, long_every=2, long_len=(28, 40),
+                      budget=(18, 25))
+
+    backend = ContinuousEngineBackend(eng, tp, dp, capacity=4,
+                                      cache_len=CACHE_LEN, block_size=BLOCK,
+                                      num_blocks=22, collect_outputs=True,
+                                      warm_s=(2, 3, 4))
+    pol = PrefillBudgetAdmit(token_budget=16, chunk=8)
+    res = serve_continuous_live(reqs(), eng, tp, dp, _ctrl(),
+                                backend=backend, policy=pol)
+    chunk_rids = {rid for t in res.trace for rid, _ in t.chunked}
+    pre_rids = {rid for t in res.trace for rid in t.preempted}
+    assert pre_rids, "pool was not under pressure; test lost its bite"
+    assert chunk_rids & pre_rids, \
+        "no chunk-admitted request was ever preempted"
+    assert all(r.finish is not None for r in res.requests)
+    assert all(r.n_generated == r.max_new for r in res.requests)
+    for r in res.requests:
+        ref, _, _ = eng.generate(tp, dp, np.asarray(r.tokens)[None, :],
+                                 np.array([r.prompt_len], np.int32), s=3,
+                                 cache_len=CACHE_LEN)
+        np.testing.assert_array_equal(
+            backend.outputs[r.rid], ref[0][:r.n_generated],
+            err_msg=f"rid {r.rid} (preempted={r.rid in pre_rids})")
+    accept, duration, prefill, done, chunk = replay_sources(res.trace)
+    sim = ContinuousScheduler(
+        SimStepBackend(_model(), capacity=4, accept_source=accept,
+                       duration_source=duration, prefill_source=prefill,
+                       done_source=done, chunk_source=chunk, block_size=BLOCK,
+                       num_blocks=22, max_context=CACHE_LEN),
+        _ctrl(), policy=PrefillBudgetAdmit(token_budget=16, chunk=8))
+    res_sim = sim.run(reqs())
+    for field in ("admitted", "chunked", "preempted", "occupancy",
+                  "committed"):
+        assert ([getattr(t, field) for t in sim.trace]
+                == [getattr(t, field) for t in res.trace]), field
+    np.testing.assert_allclose(res_sim.latencies, res.latencies, rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# sim-only scheduler behaviour (fast, no engine)
+
+
+def _req(rid, arrival=0.0, plen=8, max_new=16):
+    return Request(rid=rid, arrival=arrival,
+                   tokens=np.arange(plen, dtype=np.int32) % 97,
+                   prompt_len=plen, max_new=max_new)
+
+
+def test_over_budget_head_admitted_chunked_not_burst():
+    """The old PrefillBudgetAdmit escape hatch admitted an over-budget head
+    prompt as one whole-prompt burst; with chunking it must enter via
+    chunks bounded by the budget, and smaller backlog requests must ride
+    along when the chunk size leaves budget to spare."""
+    ctrl = fixed_controller(2)
+    reqs = [_req(0, plen=64, max_new=8), _req(1, plen=6, max_new=8)]
+    sched = ContinuousScheduler(
+        SimStepBackend(_model((1, 2, 4, 8)), capacity=4, seed=0),
+        ctrl, policy=PrefillBudgetAdmit(token_budget=16, chunk=8))
+    sched.run(reqs)
+    t0 = sched.trace[0]
+    assert t0.admitted == (0, 1)
+    # rid 0 entered via a chunk (prefill_s sentinel), rid 1 prefilled whole
+    assert t0.prefill_s[0] < 0 and t0.prefill_s[1] >= 0
+    assert t0.chunked and t0.chunked[0] == (0, 8)
+    # rid 1 starts decoding immediately while rid 0 is still prefilling
+    assert t0.occupancy == 1
+    # every iteration's admission work stays within the budget
+    for t in sched.trace:
+        assert sum(m for _, m in t.chunked) <= 16
+    # rid 0's chunks eventually complete and it decodes to its full budget
+    fed = sum(m for t in sched.trace for rid, m in t.chunked if rid == 0)
+    assert fed == 64 - 1                         # feed_total = prompt - 1
+    by_rid = {r.rid: r for r in reqs}
+    assert by_rid[0].n_generated == 8 and by_rid[0].finish is not None
+
+
+def test_budget_policy_never_starves_over_budget_prompt():
+    """Legacy (chunk-incapable) whole-prompt budgeting: skipping an
+    over-budget head in favour of smaller fits must be bounded — a steady
+    stream of small prompts cannot defer the long one forever."""
+    pol = PrefillBudgetAdmit(token_budget=20, max_defer=5)
+    big = _req(0, plen=99)
+    for i in range(20):                          # fresh small fit every step
+        picked = pol.select([big, _req(100 + i, plen=4)], 2, float(i))
+        if big in picked:
+            break
+    else:
+        pytest.fail("over-budget head was starved past max_defer")
+    assert i == 5                                # admitted right after aging
+
+
+def test_chunked_schedule_is_deterministic():
+    def run():
+        reqs = [_req(i, plen=40 if i % 2 else 8, max_new=12)
+                for i in range(6)]
+        sched = ContinuousScheduler(
+            SimStepBackend(_model((1, 2, 4, 8)), capacity=4, seed=3,
+                           block_size=8, num_blocks=30, max_context=96),
+            fixed_controller(3),
+            policy=PrefillBudgetAdmit(token_budget=12, chunk=6))
+        sched.run(reqs)
+        return sched.trace
+    a, b = run(), run()
+    assert [t.chunked for t in a] == [t.chunked for t in b]
+    assert [t.admitted for t in a] == [t.admitted for t in b]
+    assert [t.occupancy for t in a] == [t.occupancy for t in b]
+
+
+def test_decode_batch_size_stable_during_chunked_admission():
+    """The controller must see the *decode* batch size while a long prompt
+    is mid-chunked-prefill — the occupancy the adaptive-s LUT keys on must
+    not count PREFILLING slots."""
+    ctrl = AdaptiveController(lut=SpeculationLUT({1: 4, 2: 3, 4: 2}))
+    reqs = [_req(0, plen=8, max_new=20), _req(1, plen=8, max_new=20),
+            _req(2, plen=60, max_new=8)]
+    sched = ContinuousScheduler(
+        SimStepBackend(_model((1, 2, 4)), capacity=4, seed=0),
+        ctrl, policy=PrefillBudgetAdmit(token_budget=20, chunk=10))
+    sched.run(reqs)
+    feed_total = 60 - 1
+    fed = 0
+    for t in sched.trace:
+        assert t.s == ctrl.choose(t.occupancy)
+        fed += sum(m for rid, m in t.chunked if rid == 2)
+        # while rid 2 is still mid-prefill it must not count toward the
+        # decode occupancy (it joins the batch on its final-chunk step)
+        if 0 < fed < feed_total:
+            assert t.occupancy <= 2 and 2 not in t.rids
+
+
+# ---------------------------------------------------------------------------
+# bugfix regressions: s-ceiling admission, metrics on unfinished runs
+
+
+def test_reject_oversize_uses_controller_ceiling_not_smax():
+    """A request feasible under the controller's capped speculation length
+    must be admitted even though the global S_MAX bound would reject it."""
+    # plen + max_new + s: 8 + 16 + 2 = 26 <= 30 < 8 + 16 + 8 = 32
+    def run(ctrl):
+        reqs = [_req(0, plen=8, max_new=16)]
+        sched = ContinuousScheduler(
+            SimStepBackend(_model((1, 2, 4, 8)), capacity=2, seed=0,
+                           block_size=5, num_blocks=12, max_context=30),
+            ctrl)
+        return sched.run(reqs)
+
+    res = run(fixed_controller(2))               # capped: feasible
+    assert res.requests[0].n_generated == 16
+    with pytest.raises(ValueError, match="s_cap"):
+        run(fixed_controller(S_MAX))             # uncapped: over capacity
+    assert controller_s_cap(fixed_controller(2)) == 2
+    assert controller_s_cap(fixed_controller(S_MAX)) == S_MAX
+    # the online-refresh controller can rebuild its LUT up to s_max
+    c = AdaptiveController(lut=SpeculationLUT({1: 2}), model=_model(),
+                           s_max=6)
+    assert controller_s_cap(c) == 6
+
+
+def test_summarize_skips_unfinished_requests():
+    done = _req(0); done.finish = 3.0
+    hung = _req(1)                               # finish is None
+    res = ServeResult(requests=[done, hung], batches=[])
+    s = summarize(res)
+    assert s.n == 1 and s.n_skipped == 1
+    assert s.mean == pytest.approx(3.0)
+    with pytest.warns(UserWarning, match="skipping 1"):
+        timeline_groups(res, group=1)
+
+
+def test_latency_summary_empty_raises_clear_error():
+    with pytest.raises(ValueError, match="latency"):
+        LatencySummary.of([])
+    with pytest.raises(ValueError, match="ttft"):
+        LatencySummary.of([], name="ttft")
+    hung = _req(1)
+    with pytest.raises(ValueError, match="unfinished"):
+        summarize(ServeResult(requests=[hung], batches=[]))
+
+
+def test_admission_gaps_requires_trace():
+    res = ServeResult(requests=[], batches=[])
+    with pytest.raises(ValueError, match="StepTrace"):
+        admission_gaps(res)
+
+
+# ---------------------------------------------------------------------------
+# citier: a run that collects zero tests must fail loudly
+
+
+def test_citier_zero_collection_fails(monkeypatch, tmp_path):
+    tools = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "tools")
+    sys.path.insert(0, tools)
+    try:
+        import citier
+    finally:
+        sys.path.remove(tools)
+    monkeypatch.setattr(citier, "check_importable", lambda env: None)
+    monkeypatch.setattr(citier.subprocess, "call",
+                        lambda *a, **k: citier.EXIT_NO_TESTS_COLLECTED)
+    assert citier.main(["fast"]) == 2            # vacuous run is a failure
+    monkeypatch.setattr(citier.subprocess, "call", lambda *a, **k: 0)
+    assert citier.main(["fast"]) == 0
+    # a src tree that cannot provide `repro` is rejected before pytest runs
+    monkeypatch.setattr(citier, "ROOT", str(tmp_path))
+    with pytest.raises(SystemExit, match="repro"):
+        citier.build_env()

@@ -127,7 +127,7 @@ def test_sim_vs_live_scheduling_parity(engine):
     res = serve_continuous_live(_trace(tcfg), eng, tp, dp, _ctrl(),
                                 capacity=4, cache_len=CACHE_LEN)
     live = res.trace
-    accept, duration, prefill, done = replay_sources(live)
+    accept, duration, prefill, done, _chunk = replay_sources(live)
     model = LatencyModel(alpha={b: 1e-4 for b in (1, 2, 4)},
                          beta={b: 5e-3 for b in (1, 2, 4)},
                          t_s={b: 2e-4 for b in (1, 2, 4)}, c=0.9, gamma=0.548)
@@ -163,7 +163,7 @@ def test_parity_with_eos_retirement(engine):
     assert all(r.finish is not None for r in res.requests)
     # at least one request must have stopped early for this test to bite
     assert any(r.n_generated < r.max_new for r in res.requests)
-    accept, duration, prefill, done = replay_sources(res.trace)
+    accept, duration, prefill, done, _chunk = replay_sources(res.trace)
     model = LatencyModel(alpha={b: 1e-4 for b in (1, 2)},
                          beta={b: 5e-3 for b in (1, 2)},
                          t_s={b: 2e-4 for b in (1, 2)}, c=0.9, gamma=0.548)

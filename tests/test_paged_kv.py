@@ -232,7 +232,7 @@ def test_preemption_sim_vs_live_parity(engine):
                                 _ctrl(), capacity=4, cache_len=CACHE_LEN,
                                 block_size=BLOCK, num_blocks=18)
     assert sum(len(t.preempted) for t in res.trace) > 0
-    accept, duration, prefill, done = replay_sources(res.trace)
+    accept, duration, prefill, done, _chunk = replay_sources(res.trace)
     bs = (1, 2, 4)
     model = LatencyModel(alpha={b: 1e-4 for b in bs},
                          beta={b: 5e-3 for b in bs},

@@ -97,12 +97,22 @@ def test_immediate_admit_fills_free_slots():
 def test_prefill_budget_admission():
     pol = PrefillBudgetAdmit(token_budget=20)
     backlog = [_req(0, plen=12), _req(1, plen=12), _req(2, plen=4)]
-    # 12 + 12 > 20: second request waits for the next iteration
-    assert [r.rid for r in pol.select(backlog, 3, 0.0)] == [0]
-    # a single over-budget prompt is still admitted (no deadlock)
+    # 12 + 12 > 20: the second 12-token prompt waits, but the 4-token one
+    # still fits this step's budget — a too-long prompt must not block
+    # smaller backlog requests (the head-of-line fix)
+    assert [r.rid for r in pol.select(backlog, 3, 0.0)] == [0, 2]
+    # a single over-budget prompt is still admitted (no deadlock) — only on
+    # chunk-incapable backends; the scheduler admits it chunked otherwise
     assert [r.rid for r in pol.select([_req(9, plen=99)], 2, 0.0)] == [9]
-    # budget is FCFS: it never skips ahead to the small prompt
+    # free slots still bound the admission count
     assert [r.rid for r in pol.select(backlog, 1, 0.0)] == [0]
+    # an over-budget head never bursts when something smaller fits
+    backlog2 = [_req(5, plen=99), _req(6, plen=4)]
+    assert [r.rid for r in pol.select(backlog2, 2, 0.0)] == [6]
+    with pytest.raises(ValueError):
+        PrefillBudgetAdmit(token_budget=0)
+    with pytest.raises(ValueError):
+        PrefillBudgetAdmit(token_budget=8, chunk=0)
 
 
 def test_fcfs_backlog_rate_limit():
@@ -222,7 +232,7 @@ def test_sim_preemption_replay_parity():
     sched.run(reqs)
     ref = sched.trace
     assert sum(len(t.preempted) for t in ref) > 0
-    accept, duration, prefill, done = replay_sources(ref)
+    accept, duration, prefill, done, _chunk = replay_sources(ref)
     reqs2 = uniform_traffic(20, 0.001, 1.0, 100, seed=9, max_new=18)
     sched2 = ContinuousScheduler(
         SimStepBackend(m, capacity=4, accept_source=accept,

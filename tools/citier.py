@@ -10,6 +10,11 @@ Tiers:
 Usage:
   PYTHONPATH=src python tools/citier.py fast [extra pytest args...]
   PYTHONPATH=src python tools/citier.py full
+
+The runner sets PYTHONPATH itself, then sanity-checks that ``repro`` is
+actually importable with that environment and that pytest collected at
+least one test — a broken src layout or pytest exit code 5 ("no tests
+collected") previously looked like a green run.
 """
 import os
 import subprocess
@@ -22,19 +27,52 @@ TIERS = {
     "full": [],
 }
 
+# pytest's "no tests were collected" exit code — a vacuous pass, not a pass
+EXIT_NO_TESTS_COLLECTED = 5
+
+
+def build_env() -> dict:
+    """os.environ with ROOT/src prepended to PYTHONPATH, validated loudly."""
+    src = os.path.join(ROOT, "src")
+    if not os.path.isdir(os.path.join(src, "repro")):
+        raise SystemExit(
+            f"citier: {src}/repro does not exist — cannot build a PYTHONPATH "
+            f"that makes the test suite importable")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    return env
+
+
+def check_importable(env: dict) -> None:
+    """Fail loudly if ``repro`` cannot be imported with ``env`` — otherwise
+    pytest quietly fails collection (or collects zero tests) and the tier
+    looks green for the wrong reason."""
+    probe = subprocess.run([sys.executable, "-c", "import repro"],
+                           env=env, cwd=ROOT, capture_output=True, text=True)
+    if probe.returncode != 0:
+        raise SystemExit(
+            "citier: `import repro` failed with the runner's PYTHONPATH "
+            f"({env.get('PYTHONPATH')!r}) — refusing to run a suite that "
+            f"would collect zero tests:\n{probe.stderr.strip()}")
+
 
 def main(argv):
     tier = argv[0] if argv else "fast"
     if tier not in TIERS:
         print(f"unknown tier {tier!r}; pick one of {sorted(TIERS)}")
         return 2
-    env = dict(os.environ)
-    src = os.path.join(ROOT, "src")
-    env["PYTHONPATH"] = src + (
-        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env = build_env()
+    check_importable(env)
     cmd = [sys.executable, "-m", "pytest", "-q", *TIERS[tier], *argv[1:]]
     print("$", " ".join(cmd), flush=True)
-    return subprocess.call(cmd, cwd=ROOT, env=env)
+    rc = subprocess.call(cmd, cwd=ROOT, env=env)
+    if rc == EXIT_NO_TESTS_COLLECTED:
+        print("citier: pytest collected ZERO tests — treating the vacuous "
+              "run as a failure (is PYTHONPATH missing src, or the tests "
+              "directory empty?)", file=sys.stderr)
+        return 2
+    return rc
 
 
 if __name__ == "__main__":
