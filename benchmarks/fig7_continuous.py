@@ -27,8 +27,44 @@ StepTrace parity (admissions, occupancies, commits, preemptions).
 into a live decode batch, admitted whole (one big stall per admission) vs
 chunked under a per-iteration token budget (in-step chunked prefill) — the
 max admission-iteration gap imposed on running requests must drop.
+
+``--live --shards N`` additionally runs the SHARDED study: the same slot
+pool served on an N-way data mesh (``serve_continuous_live(mesh=...)``)
+vs the single-device run, asserting token-identical outputs and an
+identical StepTrace.  ``--shards`` forces N host devices via XLA_FLAGS, so
+it works on a CPU-only box; without it the study is skipped unless
+multiple devices are already visible.
 """
 from __future__ import annotations
+
+import os
+import sys
+
+# must run before jax initialises (any repro import below pulls it in):
+# --shards N forces N virtual host devices for the sharded study
+def _early_shards_arg(argv):
+    """Parse --shards N / --shards=N before argparse (and before jax)."""
+    for i, a in enumerate(argv):
+        if a == "--shards" and i + 1 < len(argv):
+            return int(argv[i + 1])
+        if a.startswith("--shards="):
+            return int(a.split("=", 1)[1])
+    return 0
+
+
+if __name__ == "__main__":
+    _n = _early_shards_arg(sys.argv)
+    if _n > 1 and "xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={_n} "
+            + os.environ.get("XLA_FLAGS", ""))
+
+# make the benchmarks package importable when run as a script
+# (PYTHONPATH=src python benchmarks/fig7_continuous.py ...)
+_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
 
 import time
 from typing import Dict
@@ -265,7 +301,69 @@ def run_live(n_requests: int = 120, capacity: int = 8, cache_len: int = 256,
     gap_chunk = _max_gap(res_chunk, "chunked")
     n_chunk_events = sum(len(t.chunked) for t in res_chunk.trace)
 
+    # -- sharded serving: the same pool on an N-way data mesh --------------
+    # The parity contract of docs/ARCHITECTURE.md: sharding the slot pool's
+    # capacity axis over the mesh's data shards changes WHERE rows live,
+    # never what they compute — outputs and the StepTrace must be identical
+    # to the single-device run.  Requires >= 2 devices (run with --shards N
+    # on CPU, which forces N virtual host devices).
+    import jax
+    from repro.launch.mesh import make_serving_mesh
+    from repro.serving.scheduler import ContinuousEngineBackend
+    n_dev = jax.device_count()
+    if n_dev < 2:
+        sharded = {"skipped": "1 device visible; rerun with --live "
+                              "--shards 2 (or more) to force host devices"}
+    else:
+        divisors = [d for d in range(2, min(n_dev, capacity) + 1)
+                    if capacity % d == 0]
+        n_sh = max(divisors) if divisors else n_dev
+        # no divisor => slot_pool_specs falls back to a replicated pool
+        # (n_shards = 1); the study still runs and reports that honestly
+        mesh = make_serving_mesh(n_sh)
+
+        def shard_trace():
+            reqs = mixed_trace(n_mixed, seed=17)
+            for r in reqs:
+                # arrival = 0: admission composition must not depend on the
+                # two runs' measured wall clocks or the exact-trace check
+                # below would be timing-sensitive
+                r.arrival = 0.0
+            return reqs
+
+        def shard_run(m):
+            be = ContinuousEngineBackend(engine, tparams, dparams,
+                                         capacity=capacity,
+                                         cache_len=cache_long,
+                                         warm_s=sorted(set(lut.table.values())),
+                                         collect_outputs=True, mesh=m)
+            t0 = time.time()
+            res = serve_continuous_live(shard_trace(), engine, tparams,
+                                        dparams,
+                                        AdaptiveController(lut=lut),
+                                        backend=be)
+            return res, be, time.time() - t0
+
+        res_1d, be_1d, wall_1d = shard_run(None)
+        res_sh, be_sh, wall_sh = shard_run(mesh)
+        trace_ok = (
+            [t.admitted for t in res_1d.trace] == [t.admitted for t in res_sh.trace]
+            and [t.occupancy for t in res_1d.trace] == [t.occupancy for t in res_sh.trace]
+            and [t.committed for t in res_1d.trace] == [t.committed for t in res_sh.trace])
+        toks_ok = (set(be_1d.outputs) == set(be_sh.outputs) and all(
+            np.array_equal(be_1d.outputs[r], be_sh.outputs[r])
+            for r in be_1d.outputs))
+        sharded = {
+            "device_count": n_dev, "n_shards": be_sh.n_shards,
+            "trace_identical": bool(trace_ok),
+            "tokens_identical": bool(toks_ok),
+            "mean_latency_1dev_s": summarize(res_1d).mean,
+            "mean_latency_sharded_s": summarize(res_sh).mean,
+            "wall_1dev_s": wall_1d, "wall_sharded_s": wall_sh,
+        }
+
     payload = {
+        "sharded": sharded,
         "n_requests": n_requests, "capacity": capacity,
         "chunked_prefill": {
             "token_budget": chunk_budget,
@@ -338,6 +436,18 @@ def run_live(n_requests: int = 120, capacity: int = 8, cache_len: int = 256,
     if ck["max_admission_gap_chunked_s"] >= ck["max_admission_gap_burst_s"]:
         print("WARNING: chunked admission did not lower the max "
               "admission-iteration gap")
+    sd = payload["sharded"]
+    if "skipped" in sd:
+        print(f"sharded study: skipped ({sd['skipped']})")
+    else:
+        print(f"sharded serving ({sd['n_shards']} data shards over "
+              f"{sd['device_count']} devices): trace identical = "
+              f"{sd['trace_identical']}, tokens identical = "
+              f"{sd['tokens_identical']}, mean latency "
+              f"{sd['mean_latency_1dev_s']:.3f}s (1 dev) vs "
+              f"{sd['mean_latency_sharded_s']:.3f}s (sharded)")
+        if not (sd["trace_identical"] and sd["tokens_identical"]):
+            print("WARNING: sharded run diverged from the single-device run")
     return payload
 
 
@@ -347,6 +457,10 @@ if __name__ == "__main__":
     ap.add_argument("--live", action="store_true",
                     help="run the live-engine study (slot-pool scheduler)")
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="force N host devices (XLA_FLAGS, set at module "
+                         "import) and run the --live sharded study on an "
+                         "N-way data mesh")
     args = ap.parse_args()
     if args.live:
         run_live(quick=args.quick)

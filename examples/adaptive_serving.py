@@ -13,6 +13,10 @@
      re-chosen from live occupancy every step.
 
   PYTHONPATH=src python examples/adaptive_serving.py [--requests 32]
+
+The runtime's full study set (paged KV, preemption, chunked prefill, and
+sharded serving on a data mesh) lives in benchmarks/fig7_continuous.py
+--live [--shards 2]; docs/ARCHITECTURE.md walks the runtime end to end.
 """
 import argparse
 import dataclasses

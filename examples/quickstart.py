@@ -5,6 +5,9 @@ of prompts with and without speculation, and prints the per-step acceptance.
 Runs on CPU in under a minute.
 
   PYTHONPATH=src python examples/quickstart.py
+
+Next steps: examples/adaptive_serving.py (the full adaptive pipeline on a
+trained pair) and docs/ARCHITECTURE.md (the continuous-batching runtime).
 """
 import dataclasses
 

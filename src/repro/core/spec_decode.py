@@ -54,6 +54,21 @@ long requests stop sharing one worst-case ``cache_len`` and total KV
 memory is ``num_blocks * block_size`` instead of ``capacity * cache_len``.
 The draft model's (tiny) cache stays a contiguous ring at the logical
 per-slot length.
+
+Sharded serving (the production mesh): passing ``mesh`` to
+:meth:`SpecDecodeEngine.init_slots` runs the whole slot pool as one SPMD
+program.  The pool's capacity axis (and, for paged pools, the shared block
+axis) is sharded over the mesh's data axes with the same
+:func:`~repro.launch.specs._batch_spec` machinery the decode plans use;
+params are placed replicated (data-parallel serving); and every jit-cached
+engine function — the (capacity, s) step, the B=1 prefill and chunk
+forwards (explicitly replicated), the inject / retire / chunk-commit
+scatters — is compiled with explicit ``in_shardings`` / ``out_shardings``
+so state never silently migrates or replicates between steps.  Host-side
+bookkeeping (block free lists, slot claims, StepTrace) is unchanged, which
+is what makes the sharded run token- and trace-identical to the
+single-device run (tests/test_sharded_serving.py verifies this under
+``XLA_FLAGS=--xla_force_host_platform_device_count=2``).
 """
 from __future__ import annotations
 
@@ -65,6 +80,7 @@ from typing import Any, Dict, Optional, TYPE_CHECKING, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.configs.base import ModelConfig
 from repro.configs.registry import build_model
@@ -103,6 +119,30 @@ class StepStats:
     committed: np.ndarray    # [B] tokens committed this step (a+1, 0 if done)
 
 
+@dataclasses.dataclass
+class PoolShardings:
+    """NamedSharding trees of a mesh-sharded slot pool (one per init_slots).
+
+    Every engine jit below threads these through ``in_shardings`` /
+    ``out_shardings``: pool-shaped leaves carry their capacity-axis (or
+    block-axis) sharding, while params, B=1 prefill outputs, scalars, and
+    host-built index vectors use ``rep`` (explicitly replicated).
+    """
+    tcache: Any
+    dcache: Any              # None when the engine has no draft model
+    seq_lens: Any
+    last2: Any
+    out: Any
+    n_generated: Any
+    done: Any
+    rep: Any                 # NamedSharding(mesh, P()) — fully replicated
+
+    @property
+    def dc(self):
+        """Draft-cache sharding usable as a jit prefix (rep if no draft)."""
+        return self.dcache if self.dcache is not None else self.rep
+
+
 class SpecDecodeEngine:
     """Target + draft pair with adaptive-ready batched speculative stepping."""
 
@@ -130,6 +170,27 @@ class SpecDecodeEngine:
         self._chunk_fns: Dict[Tuple, Any] = {}
         self._chunk_begin_fns: Dict[bool, Any] = {}
         self._chunk_commit_fns: Dict[bool, Any] = {}
+        # sharded-serving state, set by init_slots(mesh=...): the mesh, the
+        # pool's NamedSharding trees, the capacity they were built for, and
+        # how many data shards the capacity axis splits into
+        self.mesh: Optional[Mesh] = None
+        self._shardings: Optional[PoolShardings] = None
+        self._shard_capacity: Optional[int] = None
+        self.n_data_shards: int = 1
+
+    def _reset_jit_caches(self) -> None:
+        """Drop every cached compilation.  init_slots calls this so a pool
+        re-initialised with a different mesh (or none) can never reuse a
+        step/prefill/inject function compiled for the old sharding."""
+        self._step_fns.clear()
+        self._prefill_fns.clear()
+        self._inject_fn = None
+        self._inject_paged_fn = None
+        self._retire_fn = None
+        self._retire_paged_fn = None
+        self._chunk_fns.clear()
+        self._chunk_begin_fns.clear()
+        self._chunk_commit_fns.clear()
 
     # ------------------------------------------------------------------
     # prefill
@@ -152,7 +213,14 @@ class SpecDecodeEngine:
                                tokens[bidx, prompt_lens - 1]], axis=1)
             return tcache, dcache, seq_lens, last2
 
-        return jax.jit(fn)
+        sh = self._shardings
+        if sh is None:
+            return jax.jit(fn)
+        # sharded pool: the B=1 admission prefill runs explicitly REPLICATED
+        # across the mesh (B=1 cannot shard the batch axis) so its outputs
+        # can be scattered into any slot of any data shard without an
+        # implicit-replication round-trip
+        return jax.jit(fn, in_shardings=(sh.rep,) * 5, out_shardings=sh.rep)
 
     def prefill(self, tparams, dparams, tokens: jax.Array, prompt_lens: jax.Array,
                 cache_len: int, target_extras: Optional[Dict] = None) -> DecodeState:
@@ -190,7 +258,8 @@ class SpecDecodeEngine:
     def init_slots(self, capacity: int, cache_len: int,
                    src_len: Optional[int] = None, *,
                    block_size: Optional[int] = None,
-                   num_blocks: Optional[int] = None) -> DecodeState:
+                   num_blocks: Optional[int] = None,
+                   mesh: Optional[Mesh] = None) -> DecodeState:
         """Blank fixed-capacity slot pool: every row is an empty slot
         (``done = True``), ready to be claimed via :meth:`prefill_into`.
 
@@ -200,7 +269,27 @@ class SpecDecodeEngine:
         (default: worst case, ``capacity * blocks_per_slot``) sizes the
         shared pool — undersize it to trade memory for scheduler
         preemptions.  See the module docstring's paged KV design note.
+
+        With ``mesh`` set, the pool lives sharded on that mesh (module
+        docstring, sharded-serving note): the capacity axis — and the block
+        axis of a paged pool — splits over the mesh's data axes, and every
+        engine function compiled for this pool carries explicit in/out
+        shardings.  Params must be placed replicated on the same mesh by
+        the caller (``jax.device_put(params, NamedSharding(mesh, P()))``;
+        :class:`~repro.serving.scheduler.ContinuousEngineBackend` does
+        this).  Each init_slots call resets the jit caches and the engine's
+        sharding state, so the same engine can serve sharded and unsharded
+        pools in sequence (never concurrently).
         """
+        if mesh is not None or self._shardings is not None:
+            # entering or leaving sharded mode: compilations for the other
+            # placement must never be reused.  Unsharded -> unsharded keeps
+            # the caches (repeat backends stay warm).
+            self._reset_jit_caches()
+        self.mesh = mesh
+        self._shardings = None
+        self._shard_capacity = None
+        self.n_data_shards = 1
         if block_size is None:
             tcache, dcache = self._init_caches(capacity, cache_len, src_len)
             paged = None
@@ -222,7 +311,7 @@ class SpecDecodeEngine:
                                             cache_len=paged.logical_len,
                                             dtype=self.dtype)
                       if self.draft is not None else None)
-        return DecodeState(
+        state = DecodeState(
             tcache=tcache, dcache=dcache,
             # seq_lens = 2 keeps the masked step's positions non-negative
             seq_lens=jnp.full((capacity,), 2, jnp.int32),
@@ -231,6 +320,45 @@ class SpecDecodeEngine:
             n_generated=jnp.zeros((capacity,), jnp.int32),
             done=jnp.ones((capacity,), bool),
             paged=paged)
+        if mesh is not None:
+            state = self._shard_slot_pool(state, mesh, capacity)
+        return state
+
+    def _shard_slot_pool(self, state: DecodeState, mesh: Mesh,
+                         capacity: int) -> DecodeState:
+        """Place a fresh slot pool on ``mesh`` and record its shardings.
+
+        Reuses the decode-plan sharding machinery (launch/specs.py): the
+        capacity axis shards like a decode plan's batch dim, paged block
+        arrays shard over the block axis, everything else replicates.
+        """
+        # lazy import: launch/specs.py imports make_spec_step back from here
+        from repro.launch.specs import _ns, slot_pool_specs
+        sp = slot_pool_specs(
+            mesh, self.target, self.draft, capacity,
+            paged_num_blocks=(state.paged.num_blocks
+                              if state.paged is not None else None))
+        sh = PoolShardings(
+            tcache=_ns(mesh, sp.tcache),
+            dcache=(_ns(mesh, sp.dcache) if sp.dcache is not None else None),
+            seq_lens=_ns(mesh, sp.seq_lens), last2=_ns(mesh, sp.last2),
+            out=_ns(mesh, sp.out), n_generated=_ns(mesh, sp.n_generated),
+            done=_ns(mesh, sp.done),
+            rep=NamedSharding(mesh, PartitionSpec()))
+        state = dataclasses.replace(
+            state,
+            tcache=jax.device_put(state.tcache, sh.tcache),
+            dcache=(jax.device_put(state.dcache, sh.dcache)
+                    if state.dcache is not None else None),
+            seq_lens=jax.device_put(state.seq_lens, sh.seq_lens),
+            last2=jax.device_put(state.last2, sh.last2),
+            out=jax.device_put(state.out, sh.out),
+            n_generated=jax.device_put(state.n_generated, sh.n_generated),
+            done=jax.device_put(state.done, sh.done))
+        self._shardings = sh
+        self._shard_capacity = capacity
+        self.n_data_shards = sp.n_shards
+        return state
 
     @staticmethod
     def _slot_axis(full_shape, single_shape) -> int:
@@ -240,14 +368,35 @@ class SpecDecodeEngine:
         assert len(diff) == 1, (full_shape, single_shape)
         return diff[0]
 
-    def _build_inject(self):
+    def _build_inject(self, paged_pool: bool = False):
+        """Scatter every B=1 prefill leaf into its slot row of the pool.
+
+        On a sharded pool the jit carries explicit shardings: the pool tuple
+        keeps its capacity-axis shardings on both sides of the scatter and
+        the replicated B=1 leaves are consumed as such — the update-slice at
+        a dynamic slot lowers to SPMD without replicating the pool.
+        ``paged_pool`` only selects the sharding tuple for the ``full``
+        argument (the paged path injects the target cache separately via
+        :meth:`_build_inject_paged`).
+        """
         def fn(full, single, slot):
             def upd(f, x):
                 ax = self._slot_axis(f.shape, x.shape)
                 starts = tuple(slot if i == ax else 0 for i in range(f.ndim))
                 return jax.lax.dynamic_update_slice(f, x.astype(f.dtype), starts)
             return jax.tree.map(upd, full, single)
-        return jax.jit(fn)
+
+        sh = self._shardings
+        if sh is None:
+            return jax.jit(fn)
+        if paged_pool:
+            full_sh = (sh.dc, sh.seq_lens, sh.last2, sh.out,
+                       sh.n_generated, sh.done)
+        else:
+            full_sh = (sh.tcache, sh.dc, sh.seq_lens, sh.last2, sh.out,
+                       sh.n_generated, sh.done)
+        return jax.jit(fn, in_shardings=(full_sh, sh.rep, sh.rep),
+                       out_shardings=full_sh)
 
     def _build_inject_paged(self):
         """Scatter a B=1 contiguous prefill into the paged pool block-wise.
@@ -272,7 +421,13 @@ class SpecDecodeEngine:
             pos = tcache["pos"].at[scat_tbl].set(spos, mode="drop")
             bt = tcache["bt"].at[slot].set(bt_row)
             return {"k": k, "v": v, "pos": pos, "bt": bt}
-        return jax.jit(fn)
+
+        sh = self._shardings
+        if sh is None:
+            return jax.jit(fn)
+        return jax.jit(fn, in_shardings=(sh.tcache, sh.rep, sh.rep, sh.rep,
+                                         sh.rep),
+                       out_shardings=sh.tcache)
 
     def prefill_into(self, tparams, dparams, state: DecodeState, slot: int,
                      tokens, prompt_len: int, cache_len: int,
@@ -299,7 +454,8 @@ class SpecDecodeEngine:
                               target_extras)
         capacity = int(state.seq_lens.shape[0])
         if self._inject_fn is None:
-            self._inject_fn = self._build_inject()
+            self._inject_fn = self._build_inject(
+                paged_pool=state.paged is not None)
         if state.paged is None:
             if capacity == 1:
                 return single
@@ -341,6 +497,7 @@ class SpecDecodeEngine:
         so a recycled block can never leak stale attendable keys into its
         next owner.
         """
+        sh = self._shardings
         if state.paged is not None:
             pk = state.paged
             freed = pk.release(slot)
@@ -351,15 +508,26 @@ class SpecDecodeEngine:
                     return (done.at[slot].set(True),
                             pos.at[freed].set(-1, mode="drop"),
                             bt.at[slot].set(-1))
-                self._retire_paged_fn = jax.jit(fn)
+                if sh is None:
+                    self._retire_paged_fn = jax.jit(fn)
+                else:
+                    self._retire_paged_fn = jax.jit(
+                        fn,
+                        in_shardings=(sh.done, sh.tcache["pos"],
+                                      sh.tcache["bt"], sh.rep, sh.rep),
+                        out_shardings=(sh.done, sh.tcache["pos"],
+                                       sh.tcache["bt"]))
             done, pos, bt = self._retire_paged_fn(
                 state.done, state.tcache["pos"], state.tcache["bt"],
                 jnp.int32(slot), jnp.asarray(pad))
             return dataclasses.replace(
                 state, done=done, tcache=dict(state.tcache, pos=pos, bt=bt))
         if self._retire_fn is None:
-            self._retire_fn = jax.jit(
-                lambda done, slot: done.at[slot].set(True))
+            fn = lambda done, slot: done.at[slot].set(True)
+            self._retire_fn = (
+                jax.jit(fn) if sh is None else
+                jax.jit(fn, in_shardings=(sh.done, sh.rep),
+                        out_shardings=sh.done))
         return dataclasses.replace(
             state, done=self._retire_fn(state.done, jnp.int32(slot)))
 
@@ -381,7 +549,17 @@ class SpecDecodeEngine:
             new_tpos = tpos if paged else tpos.at[slot].set(-1)
             new_dpos = None if dpos is None else dpos.at[slot].set(-1)
             return new_tpos, new_dpos, seq_lens.at[slot].set(plen)
-        return jax.jit(fn)
+
+        sh = self._shardings
+        if sh is None:
+            return jax.jit(fn)
+        tpos_sh = sh.tcache["pos"]
+        dpos_sh = (sh.dcache["pos"]
+                   if isinstance(sh.dcache, dict) and "pos" in sh.dcache
+                   else sh.rep)
+        return jax.jit(fn, in_shardings=(tpos_sh, dpos_sh, sh.seq_lens,
+                                         sh.rep, sh.rep),
+                       out_shardings=(tpos_sh, dpos_sh, sh.seq_lens))
 
     def _build_chunk_commit(self, paged: bool):
         """Last-chunk commit: the slot becomes a live decode row — exactly
@@ -397,7 +575,18 @@ class SpecDecodeEngine:
             if paged:
                 res = res + (bt.at[slot].set(bt_row),)
             return res
-        return jax.jit(fn)
+
+        sh = self._shardings
+        if sh is None:
+            return jax.jit(fn)
+        in_sh = [sh.seq_lens, sh.last2, sh.out, sh.n_generated, sh.done,
+                 sh.rep, sh.rep, sh.rep]
+        out_sh = [sh.seq_lens, sh.last2, sh.out, sh.n_generated, sh.done]
+        if paged:
+            in_sh += [sh.tcache["bt"], sh.rep]
+            out_sh += [sh.tcache["bt"]]
+        return jax.jit(fn, in_shardings=tuple(in_sh),
+                       out_shardings=tuple(out_sh))
 
     def _build_chunk(self, CB: int, paged: bool, t_single, d_single):
         """One bucketed chunk forward for one slot.
@@ -461,7 +650,15 @@ class SpecDecodeEngine:
                 new_d = put(dcache, d1n, d_single, slot)
             return new_t, new_d
 
-        return jax.jit(fn)
+        sh = self._shardings
+        if sh is None:
+            return jax.jit(fn)
+        in_sh = [sh.rep, sh.rep, sh.tcache, sh.dc, sh.rep, sh.rep, sh.rep,
+                 sh.rep, sh.rep]
+        if paged:
+            in_sh.append(sh.rep)              # bt_row (host-built, per chunk)
+        return jax.jit(fn, in_shardings=tuple(in_sh),
+                       out_shardings=(sh.tcache, sh.dc))
 
     def prefill_chunk_into(self, tparams, dparams, state: DecodeState,
                            slot: int, tokens, start: int, n: int,
@@ -475,11 +672,35 @@ class SpecDecodeEngine:
         its limit is ``total_len - 2``, exactly mirroring the whole-prompt
         prefill which leaves the last prompt token to the first decode
         step).  ``tokens`` is the bucket-padded chunk (first ``n`` entries
-        real).  The slot stays ``done`` — masked out of the interleaved
-        decode steps — until the chunk with ``start + n == total_len - 1``
-        commits, at which point ``last2`` (the feed's final two tokens)
-        must be supplied and the slot joins the decode batch with the same
-        row state a whole-prompt ``prefill_into`` would have produced.
+        real).
+
+        Row-state contract (what the interleaved decode steps may observe):
+
+        * **first chunk** (``start == 0``): the slot's stale ``pos`` rows
+          are wiped (contiguous target ring + draft ring — a previous
+          occupant's keys must never be attendable) and ``seq_lens[slot]``
+          is PARKED at ``total_len``.  Parking is load-bearing: the slot is
+          still ``done``, so interleaved decode steps compute masked
+          garbage writes for it, and at ``seq_lens = total_len`` those land
+          at positions ``>= total_len - 1`` — beyond every chunk query, and
+          rewritten by the slot's own first real decode step before they
+          can ever be attended.  On a paged pool the slot is additionally
+          marked *pending*: its device block-table row stays ``-1`` (decode
+          writes drop) until the final chunk publishes it.
+        * **middle chunks**: only cache rows ``[start, start + n)`` change;
+          ``done/out/n_generated/last2`` stay untouched, so the scheduler
+          sees an occupied-but-not-decoding slot.
+        * **final chunk** (``start + n == total_len - 1``): ``last2`` (the
+          feed's final two tokens) must be supplied; the commit reproduces
+          exactly the non-cache row state a whole-prompt ``prefill_into``
+          would have left — ``seq_lens = total_len``, ``last2`` set, ``out``
+          zeroed, ``n_generated = 0``, ``done = False``, and (paged) the
+          block table published including the block covering row
+          ``total_len - 1``, which the first decode step writes.  From the
+          next iteration on, the slot is indistinguishable from a
+          whole-prompt admission — that equivalence is what makes
+          chunk-vs-whole token equality (tests/test_chunked_prefill.py)
+          hold bit-for-bit.
 
         ``warm=True`` compiles the begin/chunk/commit paths for this chunk
         bucket without touching host block bookkeeping (result discarded).
@@ -607,10 +828,25 @@ class SpecDecodeEngine:
     # one speculative step
 
     def _build_step(self, B: int, s: int):
-        return jax.jit(make_spec_step(
+        fn = make_spec_step(
             self.target, self.draft, B, s, eos_id=self.eos_id,
             max_new=self.max_new, prefix_offset=self.prefix_offset,
-            sample=self.sample, temperature=self.temperature))
+            sample=self.sample, temperature=self.temperature)
+        sh = self._shardings
+        if sh is None or B != self._shard_capacity:
+            # no mesh, or a non-pool batch size (generate()/warmup paths):
+            # plain single-placement jit
+            return jax.jit(fn)
+        # sharded pool: the serving step is one explicit SPMD program —
+        # params replicated, every pool-shaped leaf sharded on its capacity
+        # (or block) axis on both sides, per-slot stats sharded like seq_lens
+        in_sh = [sh.rep, sh.rep, sh.tcache, sh.dc, sh.seq_lens, sh.last2,
+                 sh.out, sh.n_generated, sh.done]
+        if self.sample:
+            in_sh.append(sh.rep)
+        out_sh = (sh.tcache, sh.dc, sh.seq_lens, sh.last2, sh.out,
+                  sh.n_generated, sh.done, sh.seq_lens, sh.seq_lens)
+        return jax.jit(fn, in_shardings=tuple(in_sh), out_shardings=out_sh)
 
 
 

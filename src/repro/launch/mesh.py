@@ -24,6 +24,16 @@ def make_test_mesh(data: int = 2, model: int = 4):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def make_serving_mesh(n_data: Optional[int] = None):
+    """Data-only mesh for sharded continuous serving (replicated params,
+    slot-pool capacity axis sharded over ``data``).  Defaults to every
+    visible device.  On CPU, force multiple host devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* jax is
+    imported (see tests/test_sharded_serving.py)."""
+    n = n_data if n_data is not None else len(jax.devices())
+    return jax.make_mesh((n,), ("data",))
+
+
 def data_axes(mesh) -> Tuple[str, ...]:
     """The batch-sharding axes of a mesh ('pod' folds into data-parallel)."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -102,6 +102,85 @@ def _sds(shape, dtype=jnp.float32) -> jax.ShapeDtypeStruct:
 
 
 # ---------------------------------------------------------------------------
+# serving slot-pool shardings (continuous batching on the production mesh)
+
+
+@dataclass(frozen=True)
+class SlotPoolSpecs:
+    """PartitionSpec trees for a continuous-batching slot pool on ``mesh``.
+
+    The pool's batch (= slot capacity) axis is sharded over the mesh's data
+    axes exactly like a decode plan's batch dim (:func:`_batch_spec`), so the
+    serving step is the same SPMD program the dry-run lowers; params stay
+    replicated (data-parallel serving).  For a paged pool the shared block
+    arrays shard along ``num_blocks`` — each data shard owns a contiguous
+    range of physical KV blocks — while the per-slot block *tables* shard
+    along capacity with the slots they describe.  Host block accounting
+    (:class:`~repro.serving.slots.PagedKVTables`) is untouched: block ids
+    stay global, the NamedSharding maps them to devices.
+
+    ``n_shards`` is the number of distinct data shards of the capacity axis
+    (1 when capacity does not divide the data axes) — the scheduler's
+    per-host admission queue round-robins slot claims across these shards.
+    """
+    tcache: Any                       # P tree matching DecodeState.tcache
+    dcache: Any                       # P tree for the draft cache (or None)
+    seq_lens: P
+    last2: P
+    out: P
+    n_generated: P
+    done: P
+    batch_axes: Any                   # mesh axes the capacity dim shards over
+    n_shards: int
+
+
+def slot_pool_specs(mesh: Mesh, target, draft, capacity: int, *,
+                    paged_num_blocks: Optional[int] = None) -> SlotPoolSpecs:
+    """Build the sharding-spec trees for a serving slot pool.
+
+    ``target`` / ``draft`` are model objects exposing ``cache_specs`` (every
+    decode family does — the same machinery the decode plans use).  With
+    ``paged_num_blocks`` set, the target KV specs describe the paged block
+    pool (k/v/pos sharded over blocks + a capacity-sharded ``bt`` table)
+    instead of per-slot contiguous rings.
+    """
+    if not hasattr(target, "cache_specs"):
+        raise NotImplementedError(
+            f"{type(target).__name__} has no cache_specs; cannot shard its "
+            f"slot pool over a mesh")
+    bspec = _batch_spec(mesh, capacity)
+    baxes = bspec[0] if len(bspec) else None
+    n_shards = 1
+    if baxes:
+        for a in (baxes if isinstance(baxes, (tuple, list)) else (baxes,)):
+            n_shards *= mesh.shape[a]
+    elif any(mesh.shape[a] > 1 for a in data_axes(mesh)):
+        import warnings
+        warnings.warn(
+            f"slot pool capacity {capacity} does not divide the mesh's "
+            f"data axes {dict(mesh.shape)}; the pool will be REPLICATED "
+            f"(n_shards=1) — every device computes the full batch. Pick a "
+            f"capacity divisible by the data-axis product to actually "
+            f"shard.", stacklevel=3)
+    if paged_num_blocks is None:
+        tc = target.cache_specs({}, batch_axis=baxes, seq_axis=None)
+    else:
+        nspec = _batch_spec(mesh, paged_num_blocks)
+        naxes = nspec[0] if len(nspec) else None
+        # k/v: [nL, num_blocks, block_size, KVH, hd]; pos: [NB, bs];
+        # bt: [capacity, max_blocks] (added by SpecDecodeEngine.init_slots)
+        tc = {"k": P(None, naxes), "v": P(None, naxes), "pos": P(naxes),
+              "bt": P(baxes)}
+    dc = (draft.cache_specs({}, batch_axis=baxes, seq_axis=None)
+          if draft is not None else None)
+    return SlotPoolSpecs(
+        tcache=tc, dcache=dc,
+        seq_lens=P(baxes), last2=P(baxes), out=P(baxes),
+        n_generated=P(baxes), done=P(baxes),
+        batch_axes=baxes, n_shards=n_shards)
+
+
+# ---------------------------------------------------------------------------
 # input specs (deliverable: allocation-free stand-ins for every model input)
 
 

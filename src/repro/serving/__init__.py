@@ -1,10 +1,15 @@
+"""Serving layer: request/traffic modelling, the run-to-completion server,
+the iteration-level continuous-batching scheduler (live engine + simulation
+backends behind one protocol), slot/block-pool bookkeeping, and latency
+metrics.  See docs/ARCHITECTURE.md for the end-to-end picture."""
 from repro.serving.acceptance import GeometricAcceptance, match_prob
 from repro.serving.request import BatchRecord, Request
 from repro.serving.scheduler import (AdmissionPolicy, ContinuousEngineBackend,
                                      ContinuousScheduler, FCFSBacklog,
-                                     ImmediateAdmit, PrefillBudgetAdmit,
-                                     SimStepBackend, controller_s_cap,
-                                     replay_sources, serve_continuous_live)
+                                     HostShardQueue, ImmediateAdmit,
+                                     PrefillBudgetAdmit, SimStepBackend,
+                                     controller_s_cap, replay_sources,
+                                     serve_continuous_live)
 from repro.serving.server import (EngineBackend, ServeResult, SimBackend,
                                   serve, serve_continuous)
 from repro.serving.slots import (BlockPool, BlockPoolExhausted, PagedKVTables,

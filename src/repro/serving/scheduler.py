@@ -50,6 +50,18 @@ commits.  The controller therefore keeps seeing the *decode* batch size,
 admission can no longer stall every running request for a whole-prompt
 burst, and chunk events are recorded in :class:`StepTrace` so the sim
 backend replays them for exact sim-vs-live parity.
+
+Sharded serving (the production mesh): ``serve_continuous_live(mesh=...)``
+runs the engine slot pool sharded over the mesh's data axes (engine design
+note in core/spec_decode.py).  The scheduler side is deliberately small:
+the capacity axis splits into ``backend.n_shards`` contiguous slot ranges —
+one per data shard, i.e. per serving host in a multi-host deployment — and
+a :class:`HostShardQueue` round-robins slot claims across those ranges so
+every shard carries an even share of the live batch.  Because the queue
+only changes *which slot* a request lands in (never *when* it is admitted,
+FCFS order is untouched) and StepTrace records request ids, the sharded
+run's trace is identical to the single-device run's — the sharded parity
+contract tests/test_sharded_serving.py enforces.
 """
 from __future__ import annotations
 
@@ -72,7 +84,28 @@ from repro.serving.slots import PagedKVTables, SlotPool
 
 
 class AdmissionPolicy:
-    """Chooses which backlog requests to admit into free slots this step."""
+    """Chooses which backlog requests to admit into free slots this step.
+
+    Protocol contract (every policy must honour it):
+
+    * ``backlog`` is the FCFS-ordered list of arrived, not-yet-admitted
+      requests (a re-admitted preemption victim sits at the head).  The
+      policy must treat it as read-only — the scheduler removes admitted
+      requests itself.
+    * ``free_slots`` is the number of currently claimable slots;
+      ``clock`` is the scheduler's virtual time in seconds (policies may
+      use it for deadline/aging decisions).
+    * Returns the requests to admit this iteration, in admission order, a
+      subset of ``backlog`` with ``len(result) <= free_slots``.  Returning
+      a request not in ``backlog`` is a protocol violation.
+    * The policy only *selects*; feasibility is the scheduler's job.  The
+      scheduler may admit fewer than selected (KV-block feasibility,
+      oversize rejection), and on a chunk-capable backend a
+      :class:`PrefillBudgetAdmit` policy's budget/chunk attributes are read
+      directly by the scheduler instead of :meth:`select` (see that class).
+    * Policies may keep internal state across calls (e.g. deferral
+      counters); the scheduler instantiates one policy per run.
+    """
 
     def select(self, backlog: Sequence[Request], free_slots: int,
                clock: float) -> List[Request]:
@@ -158,6 +191,51 @@ class FCFSBacklog(AdmissionPolicy):
         return list(backlog[:min(free_slots, self.max_per_step)])
 
 
+class HostShardQueue:
+    """Per-host admission queue for a mesh-sharded slot pool.
+
+    A slot pool sharded over ``n_shards`` data shards places slot rows in
+    contiguous ranges — shard ``i`` (one serving host's devices in a
+    multi-host deployment) owns slots ``[i * capacity/n, (i+1) *
+    capacity/n)``, exactly the layout a NamedSharding gives the capacity
+    axis.  This queue claims slots ROUND-ROBIN across those ranges (lowest
+    free slot within the chosen shard), so admissions spread evenly over
+    the shards instead of filling shard 0 first — every host carries an
+    even share of the live batch and of the per-step KV writes.
+
+    It deliberately does NOT reorder admissions: the scheduler admits in
+    the same FCFS order with or without a mesh, which is what keeps the
+    sharded StepTrace identical to the single-device one (rids, commits,
+    preemptions are all slot-number-free).
+    """
+
+    def __init__(self, capacity: int, n_shards: int):
+        if n_shards < 1 or capacity % n_shards != 0:
+            raise ValueError(
+                f"capacity {capacity} does not split into {n_shards} "
+                f"equal shard ranges")
+        self.n_shards = n_shards
+        self.per_shard = capacity // n_shards
+        self._next = 0                 # round-robin cursor
+
+    def claim(self, pool: SlotPool, req: Request) -> int:
+        """Claim a slot for ``req``, round-robining across shard ranges.
+
+        Starts at the cursor and takes the first shard with a free slot
+        (lowest slot id within it), then advances the cursor past that
+        shard.  Deterministic: a pure function of the pool's free set and
+        the claim history.
+        """
+        for k in range(self.n_shards):
+            sh = (self._next + k) % self.n_shards
+            lo = sh * self.per_shard
+            for slot in range(lo, lo + self.per_shard):
+                if pool.is_free(slot):
+                    self._next = (sh + 1) % self.n_shards
+                    return pool.claim(req, slot=slot)
+        raise RuntimeError("slot pool full")
+
+
 # ---------------------------------------------------------------------------
 # step backends
 
@@ -166,8 +244,17 @@ def controller_s_cap(controller) -> int:
     """Largest speculation length ``controller`` can ever choose.
 
     This — not the global S_MAX — is the right worst-case reservation unit
-    for admission and KV-overflow checks: a controller capped below S_MAX
-    can serve requests the S_MAX bound would wrongly reject.
+    for admission and KV-overflow checks: one speculative step commits at
+    most ``s + 1`` tokens, so every "can this request still fit its KV
+    budget" bound is of the form ``prompt + max_new + s_cap``, and a
+    controller capped below S_MAX can serve requests the S_MAX bound would
+    wrongly reject.
+
+    Derivation: the max over the controller's LUT entries, raised to
+    ``controller.s_max`` when an online acceptance model may rebuild LUT
+    entries upward, clamped to the engine's hard S_MAX (the ``out``-buffer
+    headroom).  Controllers without a LUT (e.g. ad-hoc stubs) conservatively
+    get S_MAX.
     """
     try:
         cap = max(controller.lut.table.values())
@@ -212,6 +299,12 @@ class ContinuousEngineBackend:
     :meth:`prefill_chunk` feeds one chunk of a request's prompt through the
     engine's ``prefill_chunk_into`` (in-step chunked prefill); the slot
     stays masked out of the decode steps until its final chunk commits.
+
+    With ``mesh`` set, the slot pool is sharded over the mesh's data axes
+    (one SPMD program per step; core/spec_decode.py sharded-serving note),
+    params are placed replicated on the mesh, and ``n_shards`` reports how
+    many data shards the capacity axis splits into — the scheduler's
+    :class:`HostShardQueue` round-robins slot claims across them.
     """
 
     def __init__(self, engine, tparams, dparams, capacity: int,
@@ -219,7 +312,8 @@ class ContinuousEngineBackend:
                  block_size: Optional[int] = None,
                  num_blocks: Optional[int] = None,
                  collect_outputs: bool = False,
-                 s_cap: int = S_MAX):
+                 s_cap: int = S_MAX,
+                 mesh=None):
         if engine.tcfg.family in ("encdec", "audio", "vlm"):
             # these families need per-request modality extras (src_embeds /
             # prefix_embeds) that the admission path does not plumb yet; see
@@ -227,14 +321,26 @@ class ContinuousEngineBackend:
             raise NotImplementedError(
                 f"continuous batching does not support family "
                 f"'{engine.tcfg.family}' yet (per-request modality extras)")
+        if mesh is not None:
+            # replicate params across the serving mesh (data-parallel
+            # serving; the engine's sharded jits consume them as such)
+            import jax
+            from jax.sharding import NamedSharding, PartitionSpec
+            rep = NamedSharding(mesh, PartitionSpec())
+            tparams = jax.device_put(tparams, rep)
+            if dparams is not None:
+                dparams = jax.device_put(dparams, rep)
         self.engine = engine
         self.tparams = tparams
         self.dparams = dparams
         self.capacity = capacity
         self.s_cap = s_cap
+        self.mesh = mesh
         self.state = engine.init_slots(capacity, cache_len,
                                        block_size=block_size,
-                                       num_blocks=num_blocks)
+                                       num_blocks=num_blocks,
+                                       mesh=mesh)
+        self.n_shards = getattr(engine, "n_data_shards", 1)
         self.kv = self.state.paged               # None => contiguous rings
         self.cache_len = (self.kv.logical_len if self.kv is not None
                           else cache_len)
@@ -642,6 +748,11 @@ class ContinuousScheduler:
         from repro.serving.server import ServeResult   # avoid import cycle
         pending = sorted(requests, key=lambda r: r.arrival)
         pool = SlotPool(self.backend.capacity)
+        # sharded pool: round-robin slot placement across the data shards
+        # (placement only — admission order and the trace are unaffected)
+        n_shards = getattr(self.backend, "n_shards", 1)
+        shardq = (HostShardQueue(self.backend.capacity, n_shards)
+                  if n_shards > 1 else None)
         backlog: List[Request] = []
         batches: List[BatchRecord] = []
         self.trace = []
@@ -702,7 +813,8 @@ class ContinuousScheduler:
                 """Shared admission bookkeeping (both admission modes)."""
                 nonlocal n_admits
                 backlog.remove(req)
-                slot = pool.claim(req)
+                slot = (shardq.claim(pool, req) if shardq is not None
+                        else pool.claim(req))
                 if req.start is None:  # keep the first admission's start
                     req.start = clock
                 n_admits += 1
@@ -901,7 +1013,8 @@ def serve_continuous_live(requests: Sequence[Request], engine, tparams,
                           observe: bool = False,
                           backend: Optional[ContinuousEngineBackend] = None,
                           block_size: Optional[int] = None,
-                          num_blocks: Optional[int] = None):
+                          num_blocks: Optional[int] = None,
+                          mesh=None):
     """Serve a request trace on a LIVE SpecDecodeEngine with iteration-level
     continuous batching: requests join/leave at speculative-step granularity
     and the controller re-chooses s from live occupancy every step.
@@ -922,6 +1035,14 @@ def serve_continuous_live(requests: Sequence[Request], engine, tparams,
     chunked prefill: prompts longer than the per-iteration token budget are
     admitted chunk-by-chunk, interleaved with the running batch's decode
     steps.
+
+    ``mesh`` runs the slot pool sharded over the mesh's data axes (SPMD
+    serving step, replicated params, round-robin slot placement across the
+    data shards via :class:`HostShardQueue`) — token outputs and the
+    StepTrace are identical to the single-device run on the same trace.
+    On CPU, force multiple host devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before importing
+    jax to try this without accelerators.
     """
     for r in requests:
         if r.max_new > engine.max_new:
@@ -929,6 +1050,14 @@ def serve_continuous_live(requests: Sequence[Request], engine, tparams,
                 f"request {r.rid} wants {r.max_new} tokens but the engine "
                 f"slot pool is sized for max_new={engine.max_new}")
     s_cap = controller_s_cap(controller)
+    if (backend is not None and mesh is not None
+            and getattr(backend, "mesh", None) is not mesh):
+        # an explicit backend owns its pool placement; silently dropping
+        # mesh here would let a caller believe a sharded run happened
+        raise ValueError(
+            "serve_continuous_live: `mesh` conflicts with the explicit "
+            "`backend` (which was built with a different mesh, or none); "
+            "construct the backend with mesh=... or omit one of the two")
     if backend is None:
         warm = sorted(set(controller.lut.table.values()))
         backend = ContinuousEngineBackend(engine, tparams, dparams,
@@ -936,7 +1065,7 @@ def serve_continuous_live(requests: Sequence[Request], engine, tparams,
                                           cache_len=cache_len, warm_s=warm,
                                           block_size=block_size,
                                           num_blocks=num_blocks,
-                                          s_cap=s_cap)
+                                          s_cap=s_cap, mesh=mesh)
     for r in requests:
         if r.prompt_len + r.max_new + s_cap > backend.max_context:
             raise ValueError(

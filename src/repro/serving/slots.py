@@ -234,18 +234,32 @@ class SlotPool:
     # ------------------------------------------------------------------
     # lifecycle
 
-    def claim(self, req: Request) -> int:
+    def claim(self, req: Request, slot: Optional[int] = None) -> int:
         """Assign ``req`` to a free slot; returns the slot index.
 
-        A preempted request re-enters with ``n_generated > 0``; its budget
-        resumes where it left off rather than restarting at ``max_new``.
+        Without ``slot``, the lowest-numbered free slot is claimed
+        (deterministic placement).  With ``slot``, that specific free slot
+        is claimed — the sharded scheduler's per-host admission queue
+        (:class:`~repro.serving.scheduler.HostShardQueue`) uses this to
+        round-robin placements across the data shards of a mesh-sharded
+        pool.  A preempted request re-enters with ``n_generated > 0``; its
+        budget resumes where it left off rather than restarting at
+        ``max_new``.
         """
         if not self._free:
             raise RuntimeError("slot pool full")
-        slot = self._free.pop()
+        if slot is None:
+            slot = self._free.pop()
+        else:
+            if slot not in self._free:
+                raise RuntimeError(f"slot {slot} is not free")
+            self._free.remove(slot)
         self._reqs[slot] = req
         self._remaining[slot] = req.max_new - req.n_generated
         return slot
+
+    def is_free(self, slot: int) -> bool:
+        return self._reqs[slot] is None
 
     def retire(self, slot: int) -> Request:
         """Release ``slot``; returns the request that occupied it."""

@@ -1,21 +1,30 @@
 """Tiered test runner: a fast gate for every PR, the full matrix for merges.
 
 Tiers:
-  fast  — ``pytest -m "not slow"``: everything except the >5-minute
-          model-consistency matrix and the subprocess pjit dry-run.  This is
-          the tier the continuous-batching scheduler tests gate on (~5 min).
-  full  — the whole suite including ``slow`` (tier-1 verify,
-          ROADMAP "Tier-1 verify" command).
+  fast  — the ``docs`` check, then ``pytest -m "not slow"``: everything
+          except the >5-minute model-consistency matrix and the subprocess
+          pjit dry-run.  This is the tier the continuous-batching scheduler
+          tests gate on (~5 min).
+  full  — the ``docs`` check, then the whole suite including ``slow``
+          (tier-1 verify, ROADMAP "Tier-1 verify" command).
+  docs  — documentation-hygiene gate only, no pytest: fails when README.md
+          or docs/ARCHITECTURE.md is missing, or when any module under
+          src/repro/serving/ lacks a module docstring (the serving layer is
+          the repo's public runtime surface; an undocumented module there
+          is a regression).
 
 Usage:
   PYTHONPATH=src python tools/citier.py fast [extra pytest args...]
   PYTHONPATH=src python tools/citier.py full
+  python tools/citier.py docs
 
 The runner sets PYTHONPATH itself, then sanity-checks that ``repro`` is
 actually importable with that environment and that pytest collected at
 least one test — a broken src layout or pytest exit code 5 ("no tests
 collected") previously looked like a green run.
 """
+import ast
+import glob
 import os
 import subprocess
 import sys
@@ -29,6 +38,39 @@ TIERS = {
 
 # pytest's "no tests were collected" exit code — a vacuous pass, not a pass
 EXIT_NO_TESTS_COLLECTED = 5
+
+# files whose absence fails the docs gate
+REQUIRED_DOCS = ["README.md", os.path.join("docs", "ARCHITECTURE.md")]
+# every module here must carry a module docstring
+DOCSTRING_DIRS = [os.path.join("src", "repro", "serving")]
+
+
+def docs_check() -> int:
+    """Documentation-hygiene gate (tier ``docs``; also runs before every
+    pytest tier).  Returns 0 when clean, 2 with a problem list on stderr."""
+    problems = []
+    for rel in REQUIRED_DOCS:
+        if not os.path.isfile(os.path.join(ROOT, rel)):
+            problems.append(f"missing required doc: {rel}")
+    for d in DOCSTRING_DIRS:
+        for path in sorted(glob.glob(os.path.join(ROOT, d, "*.py"))):
+            rel = os.path.relpath(path, ROOT)
+            try:
+                tree = ast.parse(open(path, encoding="utf-8").read())
+            except SyntaxError as e:
+                problems.append(f"{rel}: unparseable ({e})")
+                continue
+            if not ast.get_docstring(tree):
+                problems.append(f"{rel}: missing module docstring")
+    if problems:
+        print("citier docs check FAILED:", file=sys.stderr)
+        for p in problems:
+            print(f"  - {p}", file=sys.stderr)
+        return 2
+    print("citier docs check OK "
+          f"({len(REQUIRED_DOCS)} required docs, module docstrings under "
+          + ", ".join(DOCSTRING_DIRS) + ")")
+    return 0
 
 
 def build_env() -> dict:
@@ -59,9 +101,15 @@ def check_importable(env: dict) -> None:
 
 def main(argv):
     tier = argv[0] if argv else "fast"
+    if tier == "docs":
+        return docs_check()
     if tier not in TIERS:
-        print(f"unknown tier {tier!r}; pick one of {sorted(TIERS)}")
+        print(f"unknown tier {tier!r}; pick one of "
+              f"{sorted([*TIERS, 'docs'])}")
         return 2
+    rc = docs_check()
+    if rc:
+        return rc
     env = build_env()
     check_importable(env)
     cmd = [sys.executable, "-m", "pytest", "-q", *TIERS[tier], *argv[1:]]
