@@ -1,0 +1,246 @@
+"""Paged-attention kernel microbenchmark: materialized gather vs the fused
+block-table-streaming Pallas kernel, across a (batch, s, blocks) grid.
+
+Measures, per shape:
+
+* ``fused_us``          — the fused kernel (kernels/paged_verify_attn.py);
+                          native on TPU, interpret mode elsewhere
+* ``gather_pallas_us``  — gather the logical view, then the shared Pallas
+                          verify kernel at the *matched* tile size
+                          (``block_k = block_size``) — the apples-to-apples
+                          "same tiles, plus the copy" baseline
+* ``gather_ref_us``     — gather + the pure-XLA reference attention (the
+                          CPU serving path)
+* ``gather_view_bytes`` — the transient ``[B, MAXB*bs, KVH, hd]`` k+v copy
+                          the gather path materializes per call (and per
+                          layer, per step, on the serving path) — the
+                          fused path's figure is 0 by construction
+* ``*_temp_bytes``      — XLA's compiled temp-allocation sizes where the
+                          backend reports them
+* ``fused/gather_materializes`` — jaxpr inspection: does any op output a
+                          ``MAXB*bs``-row logical view?  Must be False for
+                          the fused path (the kernel's whole point) and
+                          True for the gather path (keeps the check
+                          honest).
+
+``--check`` is the CI smoke mode: on the reference shape it exits nonzero
+if the fused path materializes a gathered view, if the gather path
+mysteriously stops materializing one (the check would be vacuous), or if
+the fused kernel is slower than gather+verify at matched tiles — so a perf
+regression on the hot path fails loudly.  Off-TPU both paths execute in
+interpret mode, which prices grid steps rather than HBM, so the matched-
+tile comparison is the meaningful one there; on TPU the same code compares
+the native kernels.  Results land in results/BENCH_kernels.json.
+
+  PYTHONPATH=src python benchmarks/kernel_bench.py [--quick] [--check]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.paged import gather_verify_attn, paged_verify_attn
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+OUT_PATH = os.path.join(RESULTS, "BENCH_kernels.json")
+
+# model-ish head geometry (bench-scale): 4 q heads over 2 kv heads, hd=64
+H, KVH, HD = 4, 2, 64
+BLOCK_SIZE = 16
+CHECK_SHAPE = (4, 3, 8)                  # (batch, s, max_blocks) for --check
+
+
+def build_case(B: int, s: int, MAXB: int, bs: int = BLOCK_SIZE,
+               seed: int = 0):
+    """A ragged paged pool + verify-step inputs for one grid point."""
+    rng = np.random.default_rng(seed)
+    T = s + 1
+    NB = B * MAXB + 4                    # slack blocks (unowned => garbage)
+    k = jnp.asarray(rng.normal(size=(NB, bs, KVH, HD)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(NB, bs, KVH, HD)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(B, T, H, HD)), jnp.float32)
+    bt = np.full((B, MAXB), -1, np.int32)
+    pos = np.full((NB, bs), -1, np.int32)
+    order = rng.permutation(NB)
+    nxt = 0
+    lens = rng.integers(max(1, (MAXB - 2) * bs), MAXB * bs - T, size=B)
+    for b, L in enumerate(lens):
+        for j in range(-(-int(L) // bs)):
+            pb = int(order[nxt]); nxt += 1
+            bt[b, j] = pb
+            rows = np.arange(bs) + j * bs
+            write = rows < L
+            pos[pb, write[: bs].nonzero()[0]] = rows[write]
+    qp = jnp.asarray(np.stack([np.arange(T, dtype=np.int32) + int(L) - 1
+                               for L in lens]))
+    return q, k, v, qp, jnp.asarray(pos), jnp.asarray(bt)
+
+
+def best_us(fn, args, repeats: int = 7, inner: int = 10) -> float:
+    """Best-of-N timing: the min over repeats is the standard noise-robust
+    microbenchmark estimator (scheduler contention only ever adds time)."""
+    fn(*args).block_until_ready()        # warmup/compile
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            out = fn(*args)
+        out.block_until_ready()
+        ts.append((time.perf_counter() - t0) / inner)
+    return float(np.min(ts) * 1e6)
+
+
+def materializes_view(fn, args, B: int, MAXB: int, bs: int) -> bool:
+    """True iff the traced computation builds a [.., MAXB*bs, ..] logical
+    view (the gathered copy the fused kernel exists to eliminate)."""
+    L = MAXB * bs
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    for eqn in jaxpr.jaxpr.eqns:
+        for av in eqn.outvars:
+            sh = tuple(getattr(av.aval, "shape", ()))
+            if len(sh) >= 2 and L in sh[:2]:
+                return True
+    return False
+
+
+def temp_bytes(fn, args) -> Optional[int]:
+    try:
+        ma = jax.jit(fn).lower(*args).compile().memory_analysis()
+        return int(ma.temp_size_in_bytes)
+    except Exception:
+        return None
+
+
+def bench_case(B: int, s: int, MAXB: int, bs: int = BLOCK_SIZE) -> Dict:
+    q, k, v, qp, pos, bt = build_case(B, s, MAXB, bs)
+    fused = jax.jit(lambda *a: paged_verify_attn(*a, use_pallas=True))
+    gpal = jax.jit(lambda *a: gather_verify_attn(*a, use_pallas=True,
+                                                 block_k=bs))
+    gref = jax.jit(lambda *a: gather_verify_attn(*a, use_pallas=False))
+    args = (q, k, v, qp, pos, bt)
+
+    # parity first: a microbenchmark of a wrong kernel is worse than none
+    np.testing.assert_allclose(np.asarray(fused(*args)),
+                               np.asarray(gref(*args)), rtol=2e-4, atol=2e-4)
+
+    itemsize = np.dtype(np.float32).itemsize
+    view_bytes = 2 * B * MAXB * bs * KVH * HD * itemsize   # k + v copies
+    rec = {
+        "batch": B, "s": s, "max_blocks": MAXB, "block_size": bs,
+        "kv_heads": KVH, "q_heads": H, "head_dim": HD,
+        "fused_us": best_us(fused, args),
+        "gather_pallas_us": best_us(gpal, args),
+        "gather_ref_us": best_us(gref, args),
+        "gather_view_bytes": view_bytes,
+        "fused_view_bytes": 0,
+        "fused_temp_bytes": temp_bytes(
+            lambda *a: paged_verify_attn(*a, use_pallas=True), args),
+        "gather_ref_temp_bytes": temp_bytes(
+            lambda *a: gather_verify_attn(*a, use_pallas=False), args),
+        "fused_materializes": materializes_view(
+            lambda *a: paged_verify_attn(*a, use_pallas=True),
+            args, B, MAXB, bs),
+        "gather_materializes": materializes_view(
+            lambda *a: gather_verify_attn(*a, use_pallas=False),
+            args, B, MAXB, bs),
+    }
+    rec["fused_vs_gather_pallas"] = (
+        rec["gather_pallas_us"] / max(rec["fused_us"], 1e-9))
+    return rec
+
+
+def run(quick: bool = False, check: bool = False) -> Dict:
+    on_tpu = jax.default_backend() == "tpu"
+    if check or quick:
+        grid: List[Tuple[int, int, int]] = [CHECK_SHAPE]
+        if quick and not check:
+            grid += [(1, 1, 4)]
+    else:
+        grid = [(B, s, MAXB)
+                for B in (1, 4, 8)
+                for s in (1, 3)
+                for MAXB in (4, 8, 16)]
+    records = [bench_case(B, s, MAXB) for (B, s, MAXB) in grid]
+
+    payload = {
+        "meta": {
+            "backend": jax.default_backend(),
+            "execution": "native" if on_tpu else "interpret",
+            "note": ("off-TPU the Pallas kernels run in interpret mode, "
+                     "which prices grid steps rather than HBM traffic; "
+                     "gather_pallas_us uses the matched tile size "
+                     "block_k=block_size so fused-vs-gather compares the "
+                     "same tiles with and without the materialized copy"),
+            "block_size": BLOCK_SIZE,
+            "check_shape": list(CHECK_SHAPE),
+        },
+        "grid": records,
+    }
+
+    problems = []
+    ref = next(r for r in records
+               if (r["batch"], r["s"], r["max_blocks"]) == CHECK_SHAPE)
+    if ref["fused_materializes"]:
+        problems.append("fused path materializes a gathered KV view")
+    if not ref["gather_materializes"]:
+        problems.append("gather path no longer materializes a view — the "
+                        "no-materialization check is vacuous")
+    # native TPU timings are stable: 10% headroom over best-of-N.  Interpret
+    # mode prices Python grid steps, not HBM, and is contention-sensitive,
+    # so off-TPU the gate only trips at the >=2x an actual regression (the
+    # fused path re-growing a gather, tiling collapse) actually produces —
+    # the materialization checks above stay hard either way
+    factor = 1.10 if on_tpu else 2.0
+    if ref["fused_us"] > factor * ref["gather_pallas_us"]:
+        problems.append(
+            f"fused kernel slower than gather+verify on the reference "
+            f"shape: {ref['fused_us']:.0f}us vs "
+            f"{ref['gather_pallas_us']:.0f}us")
+    payload["check"] = {"ok": not problems, "problems": problems}
+
+    # --check / --quick are smoke gates, not the artifact: never clobber an
+    # existing full-grid BENCH_kernels.json with their 1-2 point grids
+    os.makedirs(RESULTS, exist_ok=True)
+    if not (check or quick) or not os.path.exists(OUT_PATH):
+        with open(OUT_PATH, "w") as f:
+            json.dump(payload, f, indent=1, default=float)
+        print(f"wrote {os.path.relpath(OUT_PATH)} "
+              f"({len(records)} grid points, backend={jax.default_backend()})")
+    else:
+        print(f"kept existing {os.path.relpath(OUT_PATH)} "
+              f"(smoke mode, {len(records)} grid points measured)")
+    for r in records:
+        print(f"  B={r['batch']} s={r['s']} blocks={r['max_blocks']}: "
+              f"fused {r['fused_us']:.0f}us  gather+pallas "
+              f"{r['gather_pallas_us']:.0f}us  gather-ref "
+              f"{r['gather_ref_us']:.0f}us  view {r['gather_view_bytes']}B")
+    if problems:
+        for p in problems:
+            print(f"CHECK FAILED: {p}")
+    return payload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="reference shape + one small point only")
+    ap.add_argument("--check", action="store_true",
+                    help="smoke mode: reference shape only; exit nonzero "
+                         "if the fused path regresses (slower than gather, "
+                         "or materializes the view)")
+    args = ap.parse_args(argv)
+    payload = run(quick=args.quick, check=args.check)
+    if args.check and not payload["check"]["ok"]:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

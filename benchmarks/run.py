@@ -13,7 +13,7 @@ import traceback
 
 from benchmarks import (fig1_grid, fig2_acceptance, fig3_tl_scaling,
                         fig4_uniform, fig5_dynamic, fig6_timeline,
-                        fig7_continuous, roofline)
+                        fig7_continuous, kernel_bench, roofline)
 
 BENCHES = {
     "fig1_grid": fig1_grid.run,
@@ -24,6 +24,7 @@ BENCHES = {
     "fig6_timeline": fig6_timeline.run,
     "fig7_continuous": fig7_continuous.run,
     "fig7_live": fig7_continuous.run_live,
+    "kernels": kernel_bench.run,
     "roofline": roofline.run,
 }
 

@@ -105,6 +105,13 @@ class ModelConfig:
     # cache is already rank-compressed).  §Perf lever: halves the decode
     # cache sweep, the dominant memory term at 32k context.
     kv_quant: bool = False
+    # paged-attention kernel routing for the block-pool decode path:
+    # None = auto (fused Pallas kernel on TPU, gather+verify reference on
+    # CPU), True = force the fused kernel (interpret mode off-TPU — tests /
+    # microbench), False = force the gather+verify reference.  Trace-time
+    # static: changing it requires rebuilding the model's jits
+    # (SpecDecodeEngine.set_paged_fused handles both).
+    paged_fused: Optional[bool] = None
     source: str = ""               # citation from the assignment
 
     # ---- derived ----

@@ -148,7 +148,15 @@ class SpecDecodeEngine:
 
     def __init__(self, target_cfg: ModelConfig, draft_cfg: Optional[ModelConfig],
                  max_new: int = 128, eos_id: int = -1, dtype=jnp.float32,
-                 sample: bool = False, temperature: float = 1.0):
+                 sample: bool = False, temperature: float = 1.0,
+                 paged_fused: Optional[bool] = None):
+        if paged_fused is not None:
+            # route the paged-pool attention (kernels/paged.py): None = auto
+            # (fused on TPU, gather reference on CPU), True = force the
+            # fused streaming kernel, False = force gather+verify.  The
+            # flag is trace-time static, so it lives on the model config
+            # and every engine jit compiled from it picks it up.
+            target_cfg = target_cfg.with_(paged_fused=paged_fused)
         self.tcfg = target_cfg
         self.dcfg = draft_cfg
         self.target = build_model(target_cfg)
@@ -177,6 +185,27 @@ class SpecDecodeEngine:
         self._shardings: Optional[PoolShardings] = None
         self._shard_capacity: Optional[int] = None
         self.n_data_shards: int = 1
+        # True when init_slots auto-pinned paged_fused=False for a sharded
+        # paged pool (restored to auto on the next unsharded init_slots)
+        self._paged_fused_auto: bool = False
+
+    def set_paged_fused(self, paged_fused: Optional[bool]) -> None:
+        """Re-route the paged-pool attention kernel (fused vs gather).
+
+        The flag is baked into every traced step/prefill/chunk function, so
+        flipping it rebuilds the target model from its config and drops all
+        cached compilations.  Call before :meth:`init_slots` — a pool
+        mid-flight would otherwise mix kernels across steps (numerically
+        identical, but the point of forcing a path is to not mix them).
+        """
+        # any explicit call supersedes a sharded-pool auto-pin: the next
+        # unsharded init_slots must not silently revert the caller's choice
+        self._paged_fused_auto = False
+        if paged_fused == self.tcfg.paged_fused:
+            return
+        self.tcfg = self.tcfg.with_(paged_fused=paged_fused)
+        self.target = build_model(self.tcfg)
+        self._reset_jit_caches()
 
     def _reset_jit_caches(self) -> None:
         """Drop every cached compilation.  init_slots calls this so a pool
@@ -280,12 +309,34 @@ class SpecDecodeEngine:
         this).  Each init_slots call resets the jit caches and the engine's
         sharding state, so the same engine can serve sharded and unsharded
         pools in sequence (never concurrently).
+
+        Sharded **paged** pools pin the paged-attention routing to the
+        gather path when it is on auto (``paged_fused=None``): the fused
+        kernel's scalar-prefetched block table may reference any shard's
+        blocks (allocation is not shard-local), which GSPMD cannot
+        partition through a ``pallas_call``.  Forcing ``paged_fused=True``
+        overrides; the next unsharded init_slots restores auto routing.
         """
         if mesh is not None or self._shardings is not None:
             # entering or leaving sharded mode: compilations for the other
             # placement must never be reused.  Unsharded -> unsharded keeps
             # the caches (repeat backends stay warm).
             self._reset_jit_caches()
+        if block_size is not None and mesh is not None \
+                and self.tcfg.paged_fused is None:
+            # sharded paged pool + auto kernel routing: the fused kernel's
+            # pallas_call cannot be partitioned over the block-sharded pool
+            # by GSPMD (its prefetched block table may reference any
+            # shard's blocks — the allocator is not shard-local), so auto
+            # routes through the gather path's collectives.  Forcing
+            # paged_fused=True overrides (ROADMAP: block-locality-aware
+            # allocation is the open item that would lift this).
+            self.set_paged_fused(False)
+            self._paged_fused_auto = True
+        elif getattr(self, "_paged_fused_auto", False) and mesh is None:
+            # leaving sharded mode: restore auto routing (fused on TPU)
+            self.set_paged_fused(None)
+            self._paged_fused_auto = False
         self.mesh = mesh
         self._shardings = None
         self._shard_capacity = None
@@ -409,18 +460,22 @@ class SpecDecodeEngine:
         def fn(tcache, single_tc, slot, scat_tbl, bt_row):
             NB, bs = tcache["pos"].shape
             MAXB = scat_tbl.shape[0]
-            sk = single_tc["k"][:, 0]                    # [nL, L, KVH, hd]
-            nL = sk.shape[0]
-            sk = sk.reshape(nL, MAXB, bs, *sk.shape[2:])
-            sv = single_tc["v"][:, 0].reshape(nL, MAXB, bs, *sk.shape[3:])
+            new = {}
+            # per-row leaves (k/v, plus k_scale/v_scale on an int8 pool):
+            # the B=1 contiguous row [nL, L, ...] folds to [nL, MAXB, bs,
+            # ...] and scatters block-wise through the slot's table
+            for name in tcache:
+                if name in ("pos", "bt"):
+                    continue
+                s1 = single_tc[name][:, 0]               # [nL, L, ...]
+                nL = s1.shape[0]
+                s1 = s1.reshape(nL, MAXB, bs, *s1.shape[2:])
+                new[name] = tcache[name].at[:, scat_tbl].set(
+                    s1.astype(tcache[name].dtype), mode="drop")
             spos = single_tc["pos"][0].reshape(MAXB, bs)
-            k = tcache["k"].at[:, scat_tbl].set(
-                sk.astype(tcache["k"].dtype), mode="drop")
-            v = tcache["v"].at[:, scat_tbl].set(
-                sv.astype(tcache["v"].dtype), mode="drop")
-            pos = tcache["pos"].at[scat_tbl].set(spos, mode="drop")
-            bt = tcache["bt"].at[slot].set(bt_row)
-            return {"k": k, "v": v, "pos": pos, "bt": bt}
+            new["pos"] = tcache["pos"].at[scat_tbl].set(spos, mode="drop")
+            new["bt"] = tcache["bt"].at[slot].set(bt_row)
+            return new
 
         sh = self._shardings
         if sh is None:
@@ -630,10 +685,13 @@ class SpecDecodeEngine:
             dl = jnp.full((1,), d_limit, jnp.int32)
             toks1 = toks[None, :]
             if paged:
-                t1 = {"k": tcache["k"], "v": tcache["v"],
-                      "pos": tcache["pos"], "bt": bt_row[None, :]}
+                # the pool IS the B=1 cache (writes land in place through
+                # the slot's host table); only bt is a per-slot view
+                t1 = dict({n: tcache[n] for n in tcache if n != "bt"},
+                          bt=bt_row[None, :])
                 _, t1n = tgt.prefill_chunk(tparams, toks1, t1, off, tl)
-                new_t = dict(tcache, k=t1n["k"], v=t1n["v"], pos=t1n["pos"])
+                new_t = dict(tcache,
+                             **{n: t1n[n] for n in t1n if n != "bt"})
             elif t_single is None:       # capacity == 1: the pool IS the slot
                 _, new_t = tgt.prefill_chunk(tparams, toks1, tcache, off, tl)
             else:

@@ -41,6 +41,12 @@ def _mode(use_pallas: Optional[bool]) -> str:
     return "ref"
 
 
+# public alias: kernels/paged.py routes its fused-vs-gather dispatch through
+# the exact same policy (None -> native on TPU / reference on CPU;
+# True -> native on TPU / interpret elsewhere; False -> reference)
+kernel_mode = _mode
+
+
 # ---------------------------------------------------------------------------
 # rmsnorm
 

@@ -1,0 +1,211 @@
+"""Fused paged verify-attention Pallas kernel: stream KV straight through
+the block tables, never materializing a gathered logical view.
+
+The gather path (kernels/paged.py ``gather_verify_attn``) rebuilds each
+slot's contiguous ``[B, MAXB*bs, KVH, hd]`` KV view before running the
+verify kernel over the copy — every paged verify step pays the pool's HBM
+traffic twice (gather write + kernel read) and the transient view grows
+linearly with batch size, exactly the regime where the paper's batching x
+speculation synergy lives.  This kernel removes the copy: the grid is
+``(batch, max_blocks_per_slot)`` and the k/v/pos BlockSpec index maps read
+each tile *directly* from the shared pool through the slot's block-table
+row, prefetched as a scalar (``PrefetchScalarGridSpec``) so the index maps
+can consume it before the kernel body runs.
+
+Tile-skip semantics (two layers, both ``@pl.when``):
+
+* ``-1`` table entries (unallocated logical blocks — ragged slots, empty
+  rows, mid-chunked-prefill pending slots) contribute nothing: the index
+  map clips them to physical block 0 so the DMA address is always valid —
+  consecutive dead entries then revisit the same block, which the Pallas
+  pipeline recognizes and skips re-fetching — and the body skips the tile
+  entirely, which is numerically identical to every key in it carrying
+  position ``-1`` (the gather path's convention).
+* live tiles whose positions are all outside the ``(q - window, q]``
+  visibility range are skipped exactly like ``spec_verify_attn``'s
+  flash-decode early exit.
+
+Masking (q_pos/k_pos arithmetic, ``window``, ``prefix_len``) is the shared
+position-mask contract of kernels/ref.py, evaluated against the pool's
+per-row ``pos`` map — identical to gathering first, because a slot only
+ever reaches its own blocks (ownership by construction of the table).
+
+GQA: the pool keeps its ``[NB, bs, KVH, hd]`` layout (one DMA per owned
+block covers every kv head — blocks are owned by exactly one slot, so each
+pool row is read exactly once per step, the HBM floor), and the kernel
+loops the kv heads as an unrolled static loop of 2D MXU dots.  The q block
+is pre-folded to ``[B, KVH, G*Tq, hd]`` host-side (tiny) and stays VMEM-
+resident across the whole block stream.
+
+int8 KV (kv_quant): per-(row, kv-head) ``k_scale``/``v_scale`` pool arrays
+ride the same block-table index maps; tiles stream from HBM at 1 B/elem and
+dequantize in VMEM — the contiguous kernel's quant path, carried over.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _fused_kernel(bt_ref, q_ref, k_ref, v_ref, qp_ref, pp_ref, *rest,
+                  scale: float, window: Optional[int], prefix_len: int,
+                  nb: int, kvh: int, quant: bool):
+    if quant:
+        ks_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        ks_ref = vs_ref = None
+        o_ref, acc_ref, m_ref, l_ref = rest
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    qp = qp_ref[0]                                       # [GT]
+    kp = pp_ref[0]                                       # [bs]
+    owned = bt_ref[b, j] >= 0
+
+    # tile-level visibility (flash-decode early exit): any pool row in this
+    # tile attendable by any query?  Dead tiles (unowned blocks) are skipped
+    # outright — identical to every row reporting position -1.
+    q_hi = qp.max()
+    vis = (kp >= 0) & (kp <= q_hi)
+    if window is not None:
+        q_lo = jnp.where(qp < 0, jnp.iinfo(jnp.int32).max, qp).min()
+        vis &= kp > q_lo - window
+    if prefix_len:
+        vis |= (kp >= 0) & (kp < prefix_len)
+
+    @pl.when(owned & vis.any())
+    def _compute():
+        ok = (kp[None, :] >= 0) & (kp[None, :] <= qp[:, None])   # [GT, bs]
+        if window is not None:
+            ok &= kp[None, :] > qp[:, None] - window
+        if prefix_len:
+            ok |= (kp[None, :] >= 0) & (kp[None, :] < prefix_len)
+        for h in range(kvh):                             # unrolled 2D dots
+            q = q_ref[0, h].astype(jnp.float32)          # [GT, hd]
+            k = k_ref[0, :, h, :].astype(jnp.float32)    # [bs, hd]
+            v = v_ref[0, :, h, :].astype(jnp.float32)
+            if ks_ref is not None:
+                # int8 pool tiles: moved at 1 B/elem, dequantized in VMEM
+                k = k * ks_ref[0, :, h].astype(jnp.float32)[:, None]
+                v = v * vs_ref[0, :, h].astype(jnp.float32)[:, None]
+            s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+            s = jnp.where(ok, s, -jnp.inf)
+            m_prev = m_ref[h]
+            m_new = jnp.maximum(m_prev, s.max(axis=-1))
+            m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+            p = jnp.where(ok, jnp.exp(s - m_safe[:, None]), 0.0)
+            corr = jnp.where(jnp.isneginf(m_prev), 0.0,
+                             jnp.exp(m_prev - m_safe))
+            l_ref[h] = l_ref[h] * corr + p.sum(axis=-1)
+            acc_ref[h] = acc_ref[h] * corr[:, None] + jax.lax.dot_general(
+                p, v, (((1,), (0,)), ((), ())))
+            m_ref[h] = m_new
+
+    @pl.when(j == nb - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[..., None]
+                    ).astype(o_ref.dtype)
+
+
+def paged_verify_attn_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                             q_pos: jax.Array, pos: jax.Array,
+                             block_tables: jax.Array,
+                             window: Optional[int] = None,
+                             prefix_len: int = 0,
+                             scale: Optional[float] = None,
+                             k_scale: Optional[jax.Array] = None,
+                             v_scale: Optional[jax.Array] = None,
+                             interpret: bool = False) -> jax.Array:
+    """Verify-step attention against the paged pool, fused.
+
+    q: [B, T, H, hd] (tiny T = s+1, or a prefill chunk); k/v:
+    [NB, bs, KVH, hd] pool; q_pos: [B, T]; pos: [NB, bs] (absolute position,
+    -1 unwritten); block_tables: [B, MAXB] (physical block ids, -1 unused).
+    Optional k_scale/v_scale: [NB, bs, KVH] per-(row, kv-head) dequant
+    scales for an int8 pool.  Returns [B, T, H, hd].
+
+    No ``[B, MAXB*bs, ...]`` logical view is ever built: tiles stream from
+    the pool through the prefetched block table (module docstring).
+    """
+    B, T, H, hd = q.shape
+    NB, bs, KVH = k.shape[0], k.shape[1], k.shape[2]
+    MAXB = block_tables.shape[1]
+    G = H // KVH
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    # fold q per kv head: [B, T, H, hd] -> [B, KVH, G*T, hd] (rows (g, t),
+    # matching ops._fold_gqa's ordering); q_pos repeats per group row.
+    qf = (q.reshape(B, T, KVH, G, hd).transpose(0, 2, 3, 1, 4)
+           .reshape(B, KVH, G * T, hd))
+    qpf = jnp.broadcast_to(q_pos[:, None, :], (B, G, T)).reshape(B, G * T)
+    rows = G * T
+    pad = (-rows) % 8                       # TPU sublane multiple
+    if pad:
+        qf = jnp.pad(qf, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        qpf = jnp.pad(qpf, ((0, 0), (0, pad)), constant_values=-1)
+    GT = rows + pad
+
+    # index maps receive the prefetched block table; dead entries clip to
+    # physical block 0 (valid address, body skips the tile — and repeated
+    # dead entries revisit the same block, so the pipeline elides the DMA)
+    def _kv_map(b, j, bt):
+        return (jnp.maximum(bt[b, j], 0), 0, 0, 0)
+
+    def _pos_map(b, j, bt):
+        return (jnp.maximum(bt[b, j], 0), 0)
+
+    def _scale_map(b, j, bt):
+        return (jnp.maximum(bt[b, j], 0), 0, 0)
+
+    quant = k_scale is not None
+    in_specs = [
+        pl.BlockSpec((1, KVH, GT, hd), lambda b, j, bt: (b, 0, 0, 0)),
+        pl.BlockSpec((1, bs, KVH, hd), _kv_map),
+        pl.BlockSpec((1, bs, KVH, hd), _kv_map),
+        pl.BlockSpec((1, GT), lambda b, j, bt: (b, 0)),
+        pl.BlockSpec((1, bs), _pos_map),
+    ]
+    args = [block_tables, qf, k, v, qpf, pos]
+    if quant:
+        in_specs += [pl.BlockSpec((1, bs, KVH), _scale_map),
+                     pl.BlockSpec((1, bs, KVH), _scale_map)]
+        args += [k_scale, v_scale]
+    kern = functools.partial(_fused_kernel, scale=scale, window=window,
+                             prefix_len=prefix_len, nb=MAXB, kvh=KVH,
+                             quant=quant)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, MAXB),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, KVH, GT, hd),
+                               lambda b, j, bt: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((KVH, GT, hd), jnp.float32),
+            pltpu.VMEM((KVH, GT), jnp.float32),
+            pltpu.VMEM((KVH, GT), jnp.float32),
+        ],
+    )
+    o = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KVH, GT, hd), q.dtype),
+        interpret=interpret,
+    )(*args)
+    if pad:
+        o = o[:, :, :rows]
+    # unfold: [B, KVH, G*T, hd] -> [B, T, H, hd]
+    return (o.reshape(B, KVH, G, T, hd).transpose(0, 3, 1, 2, 4)
+             .reshape(B, T, H, hd))

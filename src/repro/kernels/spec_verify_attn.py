@@ -83,6 +83,46 @@ def _verify_kernel(q_ref, k_ref, v_ref, qp_ref, kp_ref, o_ref,
                     / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
 
 
+def choose_block_k(L: int, block_k: int):
+    """Sublane-aligned cache tiling: ``(bk, Lp)`` with ``Lp % bk == 0``.
+
+    The old policy (``while L % bk: bk -= 1``) silently degraded to tiny —
+    even 1-row — tiles whenever L had no large divisor (prime-ish cache
+    lengths), collapsing MXU utilisation.  Policy now:
+
+    1. prefer a *divisor* tile — the largest multiple-of-8 divisor of L
+       that is <= requested and >= the 64-row floor — because it needs no
+       padding and therefore no physical copy of the cache operands (e.g.
+       L=640, block_k=512 picks 320 exactly as before; L=520 picks 104
+       where the old loop picked the unaligned 260 — smaller, but
+       sublane-aligned and still zero-copy);
+    2. otherwise keep the requested tile (rounded to the 8-row sublane
+       multiple) and pad the cache *tail* to the next multiple: padded
+       rows carry ``k_pos = -1`` and are never attendable, so numerics
+       are unchanged and the tile never collapses.  Padding copies the
+       cache operands, so it is reserved for lengths with no
+       MXU-reasonable divisor (any non-multiple-of-8 L necessarily pads —
+       there is no sublane-aligned divisor to find).
+
+    Known trade-off: a length with *no* divisor tile >= 64 (e.g. 8*prime)
+    pays the pad copy every call.  Serving cache lengths are chosen by the
+    caller, and every config in this repo uses lengths with good divisors;
+    callers picking exotic lengths should round up to a multiple of 64 at
+    cache-allocation time to get the zero-copy path.
+    """
+    req = max(8, min(block_k, L + (-L) % 8))
+    req -= req % 8                      # sublane multiple, never a tiny tile
+    if L % 8 == 0:
+        # 64-row floor: a divisor tile below it is the old degradation
+        # failure mode (tiny tiles), worse than one padded copy
+        for bk in range(req, min(64, req) - 1, -8):
+            if L % bk == 0:
+                return bk, L            # divisor tile: zero-copy
+    assert req % 8 == 0 and req >= 8, (L, block_k, req)
+    Lp = L + (-L) % req
+    return req, Lp
+
+
 def spec_verify_attn_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
                             q_pos: jax.Array, k_pos: jax.Array,
                             window: Optional[int] = None, prefix_len: int = 0,
@@ -99,10 +139,18 @@ def spec_verify_attn_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
     B, Tq, hd = q.shape
     L = k.shape[1]
     scale = scale if scale is not None else 1.0 / math.sqrt(hd)
-    bk = min(block_k, L)
-    while L % bk:
-        bk -= 1
-    nk = L // bk
+    bk, Lp = choose_block_k(L, block_k)
+    if Lp != L:
+        # pad the cache tail with k_pos = -1 rows (never attendable) so the
+        # tile stays a sublane multiple instead of degrading for prime-ish L
+        ext = ((0, 0), (0, Lp - L), (0, 0))
+        k = jnp.pad(k, ext)
+        v = jnp.pad(v, ext)
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, Lp - L)), constant_values=-1)
+        if k_scale is not None:
+            k_scale = jnp.pad(k_scale, ((0, 0), (0, Lp - L)))
+            v_scale = jnp.pad(v_scale, ((0, 0), (0, Lp - L)))
+    nk = Lp // bk
     quant = k_scale is not None
     in_specs = [
         pl.BlockSpec((1, Tq, hd), lambda b, j: (b, 0, 0)),

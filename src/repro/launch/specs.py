@@ -168,9 +168,16 @@ def slot_pool_specs(mesh: Mesh, target, draft, capacity: int, *,
         nspec = _batch_spec(mesh, paged_num_blocks)
         naxes = nspec[0] if len(nspec) else None
         # k/v: [nL, num_blocks, block_size, KVH, hd]; pos: [NB, bs];
-        # bt: [capacity, max_blocks] (added by SpecDecodeEngine.init_slots)
+        # bt: [capacity, max_blocks] (added by SpecDecodeEngine.init_slots).
+        # The block axis shards with the same machinery as the capacity
+        # axis, so the fused paged kernel's scalar-prefetched block table
+        # lines up with the pool placement (kernels/paged_verify_attn.py)
         tc = {"k": P(None, naxes), "v": P(None, naxes), "pos": P(naxes),
               "bt": P(baxes)}
+        if getattr(getattr(target, "cfg", None), "kv_quant", False):
+            # int8 pool: per-(row, kv-head) dequant scales ride the block axis
+            tc["k_scale"] = P(None, naxes)
+            tc["v_scale"] = P(None, naxes)
     dc = (draft.cache_specs({}, batch_axis=baxes, seq_axis=None)
           if draft is not None else None)
     return SlotPoolSpecs(

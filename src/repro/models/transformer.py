@@ -152,10 +152,22 @@ class DecoderLM:
         if a.kind == "mla":
             raise NotImplementedError(
                 "paged KV does not support MLA's compressed cache yet")
-        if c.kv_quant:
-            raise NotImplementedError(
-                "paged KV does not support int8 KV caches yet")
         nL = c.n_layers
+        if c.kv_quant:
+            # int8 block pool with per-(row, kv-head) dequant scales: both
+            # the fused kernel (VMEM dequant after a 1 B/elem stream) and
+            # the gather reference consume them (kernels/paged.py)
+            return {
+                "k": jnp.zeros((nL, num_blocks, block_size, a.n_kv_heads,
+                                a.head_dim), jnp.int8),
+                "v": jnp.zeros((nL, num_blocks, block_size, a.n_kv_heads,
+                                a.head_dim), jnp.int8),
+                "k_scale": jnp.zeros((nL, num_blocks, block_size,
+                                      a.n_kv_heads), dtype),
+                "v_scale": jnp.zeros((nL, num_blocks, block_size,
+                                      a.n_kv_heads), dtype),
+                "pos": jnp.full((num_blocks, block_size), -1, jnp.int32),
+            }
         return {
             "k": jnp.zeros((nL, num_blocks, block_size, a.n_kv_heads,
                             a.head_dim), dtype),
@@ -308,6 +320,49 @@ class DecoderLM:
                                window=a.window, prefix_len=prefix_len)
         out = jnp.einsum("bthk,hkd->btd", out, lp["wo"])
         return out, new_lcache
+
+    def _attn_paged(self, lp: Dict, x: jax.Array, positions: jax.Array,
+                    lcache: Dict, pos_arr: jax.Array, pb: jax.Array,
+                    off: jax.Array, bt: jax.Array, prefix_len: int,
+                    ) -> Tuple[jax.Array, Dict]:
+        """Paged incremental attention: scatter this step's KV rows through
+        the block table (``pb``/``off`` physical addresses, out-of-range =>
+        dropped write), then attend against the pool via
+        :func:`~repro.kernels.paged.paged_verify_attn` — the fused streaming
+        kernel or the gather reference per ``cfg.paged_fused``.  Shared by
+        the paged decode step and the paged prefill-chunk (prefix-extension)
+        forward, so both ride the same kernel.
+        """
+        c, a = self.cfg, self.cfg.attn
+        q, k_new, v_new = self._qkv_gqa(lp, x, positions)
+        if c.kv_quant:
+            kq, ks = _quant_rows(k_new)
+            vq, vs = _quant_rows(v_new)
+            new_lcache = {
+                "k": lcache["k"].at[pb, off].set(kq, mode="drop"),
+                "v": lcache["v"].at[pb, off].set(vq, mode="drop"),
+                "k_scale": lcache["k_scale"].at[pb, off].set(
+                    ks.astype(lcache["k_scale"].dtype), mode="drop"),
+                "v_scale": lcache["v_scale"].at[pb, off].set(
+                    vs.astype(lcache["v_scale"].dtype), mode="drop"),
+            }
+            out = paged_verify_attn(
+                q, new_lcache["k"], new_lcache["v"], positions, pos_arr, bt,
+                window=a.window, prefix_len=prefix_len,
+                k_scale=new_lcache["k_scale"],
+                v_scale=new_lcache["v_scale"], use_pallas=c.paged_fused)
+        else:
+            new_lcache = {
+                "k": lcache["k"].at[pb, off].set(
+                    k_new.astype(lcache["k"].dtype), mode="drop"),
+                "v": lcache["v"].at[pb, off].set(
+                    v_new.astype(lcache["v"].dtype), mode="drop"),
+            }
+            out = paged_verify_attn(
+                q, new_lcache["k"], new_lcache["v"], positions, pos_arr, bt,
+                window=a.window, prefix_len=prefix_len,
+                use_pallas=c.paged_fused)
+        return jnp.einsum("bthk,hkd->btd", out, lp["wo"]), new_lcache
 
     # ------------------------------------------------------------------
     # MLP
@@ -494,8 +549,10 @@ class DecoderLM:
         Returns (logits [B, T, V], updated cache).
 
         A cache with a ``bt`` (block table) entry is a paged pool (see
-        :meth:`init_paged_cache`) and takes the paged write/gather path;
-        otherwise the per-row ring-buffer path below runs unchanged.
+        :meth:`init_paged_cache`) and takes the paged path — block-table
+        scatter writes plus the fused streaming kernel or gather reference
+        per ``cfg.paged_fused`` (kernels/paged.py); otherwise the per-row
+        ring-buffer path below runs unchanged.
         """
         if "bt" in cache:
             return self._decode_step_paged(params, tokens, cache, seq_lens)
@@ -557,20 +614,15 @@ class DecoderLM:
             h = carry
             lp, lcache = xs
             hn = cm.rms_norm(h, lp["attn_norm"], c.norm_eps)
-            q, k_new, v_new = self._qkv_gqa(lp, hn, positions)
-            k = lcache["k"].at[pb, off].set(
-                k_new.astype(lcache["k"].dtype), mode="drop")
-            v = lcache["v"].at[pb, off].set(
-                v_new.astype(lcache["v"].dtype), mode="drop")
-            a_out = paged_verify_attn(q, k, v, positions, pos_arr, bt,
-                                      window=a.window, prefix_len=prefix_len)
-            a_out = jnp.einsum("bthk,hkd->btd", a_out, lp["wo"])
+            a_out, new_lcache = self._attn_paged(lp, hn, positions, lcache,
+                                                 pos_arr, pb, off, bt,
+                                                 prefix_len)
             h = h + shard(a_out, "data", None, None)
             m_out, _ = self._mlp(lp, cm.rms_norm(h, lp["mlp_norm"], c.norm_eps))
             h = h + shard(m_out, "data", None, None)
-            return h, {"k": k, "v": v}
+            return h, new_lcache
 
-        layer_caches = {k: v for k, v in cache.items() if k in ("k", "v")}
+        layer_caches = {k: v for k, v in cache.items() if k not in ("pos", "bt")}
         x, new_caches = jax.lax.scan(layer, x, (params["layers"], layer_caches))
         x = cm.rms_norm(x, params["final_norm"], c.norm_eps)
         table = params["embed"] if c.tie_embeddings else params["unembed"]
@@ -636,8 +688,11 @@ class DecoderLM:
                              ) -> Tuple[jax.Array, Dict]:
         """Chunked prefill against the paged KV pool: chunk rows scatter
         block-wise through the slot's block table (padding and unallocated
-        logical blocks are dropped), and attention gathers the slot's prefix
-        through the same table (kernels/paged.py masking unchanged)."""
+        logical blocks are dropped), and attention reads the slot's prefix
+        through the same table — the fused streaming kernel or the gather
+        reference per ``cfg.paged_fused`` (kernels/paged.py), masking
+        unchanged.  This is the fused prefix-extension chunk forward: the
+        chunk's q rows stream the pool exactly like a verify step's."""
         c, a = self.cfg, self.cfg.attn
         B, T = tokens.shape
         NB, bs = cache["pos"].shape
@@ -658,20 +713,15 @@ class DecoderLM:
             h = carry
             lp, lcache = xs
             hn = cm.rms_norm(h, lp["attn_norm"], c.norm_eps)
-            q, k_new, v_new = self._qkv_gqa(lp, hn, positions)
-            k = lcache["k"].at[pb, off].set(
-                k_new.astype(lcache["k"].dtype), mode="drop")
-            v = lcache["v"].at[pb, off].set(
-                v_new.astype(lcache["v"].dtype), mode="drop")
-            a_out = paged_verify_attn(q, k, v, positions, pos_arr, bt,
-                                      window=a.window, prefix_len=prefix_len)
-            a_out = jnp.einsum("bthk,hkd->btd", a_out, lp["wo"])
+            a_out, new_lcache = self._attn_paged(lp, hn, positions, lcache,
+                                                 pos_arr, pb, off, bt,
+                                                 prefix_len)
             h = h + shard(a_out, "data", None, None)
             m_out, _ = self._mlp(lp, cm.rms_norm(h, lp["mlp_norm"], c.norm_eps))
             h = h + shard(m_out, "data", None, None)
-            return h, {"k": k, "v": v}
+            return h, new_lcache
 
-        layer_caches = {k: v for k, v in cache.items() if k in ("k", "v")}
+        layer_caches = {k: v for k, v in cache.items() if k not in ("pos", "bt")}
         x, new_caches = jax.lax.scan(layer, x, (params["layers"], layer_caches))
         x = cm.rms_norm(x, params["final_norm"], c.norm_eps)
         table = params["embed"] if c.tie_embeddings else params["unembed"]

@@ -313,7 +313,8 @@ class ContinuousEngineBackend:
                  num_blocks: Optional[int] = None,
                  collect_outputs: bool = False,
                  s_cap: int = S_MAX,
-                 mesh=None):
+                 mesh=None,
+                 paged_fused=None):
         if engine.tcfg.family in ("encdec", "audio", "vlm"):
             # these families need per-request modality extras (src_embeds /
             # prefix_embeds) that the admission path does not plumb yet; see
@@ -330,6 +331,14 @@ class ContinuousEngineBackend:
             tparams = jax.device_put(tparams, rep)
             if dparams is not None:
                 dparams = jax.device_put(dparams, rep)
+        if paged_fused is not None:
+            # force the paged-attention kernel path (fused streaming kernel
+            # vs gather path, kernels/paged.py) BEFORE the pool and its
+            # jits exist, so every compiled step uses one path.  None
+            # deliberately leaves the engine's current routing untouched
+            # (an engine constructed with paged_fused=... keeps its choice;
+            # call engine.set_paged_fused(None) to restore auto routing)
+            engine.set_paged_fused(paged_fused)
         self.engine = engine
         self.tparams = tparams
         self.dparams = dparams
@@ -1014,7 +1023,8 @@ def serve_continuous_live(requests: Sequence[Request], engine, tparams,
                           backend: Optional[ContinuousEngineBackend] = None,
                           block_size: Optional[int] = None,
                           num_blocks: Optional[int] = None,
-                          mesh=None):
+                          mesh=None,
+                          paged_fused=None):
     """Serve a request trace on a LIVE SpecDecodeEngine with iteration-level
     continuous batching: requests join/leave at speculative-step granularity
     and the controller re-chooses s from live occupancy every step.
@@ -1035,6 +1045,15 @@ def serve_continuous_live(requests: Sequence[Request], engine, tparams,
     chunked prefill: prompts longer than the per-iteration token budget are
     admitted chunk-by-chunk, interleaved with the running batch's decode
     steps.
+
+    ``paged_fused`` forces the paged-attention kernel path for a
+    ``block_size`` run: ``True`` streams KV through the block tables with
+    the fused Pallas kernel (interpret mode off-TPU), ``False`` keeps the
+    materialized gather path, ``None`` (default) leaves the engine's
+    current routing untouched — auto (fused on TPU) unless the engine was
+    constructed with, or previously forced to, an explicit path.  Token
+    outputs and the StepTrace are identical either way
+    (tests/test_paged_fused_kernel.py asserts it).
 
     ``mesh`` runs the slot pool sharded over the mesh's data axes (SPMD
     serving step, replicated params, round-robin slot placement across the
@@ -1058,6 +1077,13 @@ def serve_continuous_live(requests: Sequence[Request], engine, tparams,
             "serve_continuous_live: `mesh` conflicts with the explicit "
             "`backend` (which was built with a different mesh, or none); "
             "construct the backend with mesh=... or omit one of the two")
+    if backend is not None and paged_fused is not None:
+        # the backend compiled its pool with a kernel path already; silently
+        # dropping the flag would let a caller believe it took effect
+        raise ValueError(
+            "serve_continuous_live: pass paged_fused to the "
+            "ContinuousEngineBackend constructor when supplying an explicit "
+            "backend (the kernel path is baked in at pool init)")
     if backend is None:
         warm = sorted(set(controller.lut.table.values()))
         backend = ContinuousEngineBackend(engine, tparams, dparams,
@@ -1065,7 +1091,8 @@ def serve_continuous_live(requests: Sequence[Request], engine, tparams,
                                           cache_len=cache_len, warm_s=warm,
                                           block_size=block_size,
                                           num_blocks=num_blocks,
-                                          s_cap=s_cap, mesh=mesh)
+                                          s_cap=s_cap, mesh=mesh,
+                                          paged_fused=paged_fused)
     for r in requests:
         if r.prompt_len + r.max_new + s_cap > backend.max_context:
             raise ValueError(

@@ -1,21 +1,28 @@
 """Tiered test runner: a fast gate for every PR, the full matrix for merges.
 
 Tiers:
-  fast  — the ``docs`` check, then ``pytest -m "not slow"``: everything
-          except the >5-minute model-consistency matrix and the subprocess
-          pjit dry-run.  This is the tier the continuous-batching scheduler
-          tests gate on (~5 min).
-  full  — the ``docs`` check, then the whole suite including ``slow``
-          (tier-1 verify, ROADMAP "Tier-1 verify" command).
-  docs  — documentation-hygiene gate only, no pytest: fails when README.md
-          or docs/ARCHITECTURE.md is missing, or when any module under
-          src/repro/serving/ lacks a module docstring (the serving layer is
-          the repo's public runtime surface; an undocumented module there
-          is a regression).
+  fast    — the ``docs`` check, then ``pytest -m "not slow"``: everything
+            except the >5-minute model-consistency matrix and the
+            subprocess pjit dry-run.  This is the tier the
+            continuous-batching scheduler tests gate on (~5 min).
+  full    — the ``docs`` check, then the whole suite including ``slow``
+            (tier-1 verify, ROADMAP "Tier-1 verify" command).
+  kernels — interpret-mode kernel parity tests only (tests/test_kernels.py
+            + tests/test_paged_fused_kernel.py): the Pallas kernel bodies
+            against the pure-jnp oracles and the fused paged kernel against
+            gather+verify.  A subset of ``fast`` for quick kernel
+            iteration; runs inside fast/full automatically (the files carry
+            no ``slow`` marker).
+  docs    — documentation-hygiene gate only, no pytest: fails when
+            README.md or docs/ARCHITECTURE.md is missing, or when any
+            module under src/repro/serving/ lacks a module docstring (the
+            serving layer is the repo's public runtime surface; an
+            undocumented module there is a regression).
 
 Usage:
   PYTHONPATH=src python tools/citier.py fast [extra pytest args...]
   PYTHONPATH=src python tools/citier.py full
+  PYTHONPATH=src python tools/citier.py kernels
   python tools/citier.py docs
 
 The runner sets PYTHONPATH itself, then sanity-checks that ``repro`` is
@@ -34,6 +41,10 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 TIERS = {
     "fast": ["-m", "not slow"],
     "full": [],
+    # kernel parity subset (also contained in fast/full): the Pallas kernel
+    # bodies (interpret mode) vs the jnp oracles, incl. the fused paged path
+    "kernels": [os.path.join("tests", "test_kernels.py"),
+                os.path.join("tests", "test_paged_fused_kernel.py")],
 }
 
 # pytest's "no tests were collected" exit code — a vacuous pass, not a pass
