@@ -13,7 +13,8 @@ import traceback
 
 from benchmarks import (fig1_grid, fig2_acceptance, fig3_tl_scaling,
                         fig4_uniform, fig5_dynamic, fig6_timeline,
-                        fig7_continuous, kernel_bench, roofline)
+                        fig7_continuous, kernel_bench, roofline,
+                        serving_bench)
 
 BENCHES = {
     "fig1_grid": fig1_grid.run,
@@ -25,6 +26,7 @@ BENCHES = {
     "fig7_continuous": fig7_continuous.run,
     "fig7_live": fig7_continuous.run_live,
     "kernels": kernel_bench.run,
+    "serving": serving_bench.run,
     "roofline": roofline.run,
 }
 

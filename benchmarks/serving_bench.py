@@ -1,0 +1,325 @@
+"""Standing serving benchmark: fig7-style request traces through the
+continuous-batching scheduler with the telemetry hub attached, on the sim
+and live backends.  Results land in results/BENCH_serving.json — the
+serving-layer counterpart of BENCH_kernels.json (ROADMAP item 5).
+
+Scenarios
+  sim_steady         uniform Poisson-ish traffic on the SimStepBackend with
+                     the analytical latency model and the adaptive LUT.
+                     Virtual clock => fully deterministic, so --check holds
+                     goodput/TTFT to ~1% of the committed baseline.
+  sim_paged_chunked  the same model behind a deliberately undersized paged
+                     block pool plus a chunked-admission budget: exercises
+                     preemption, chunk feeds, and the pool gauges.  Also
+                     deterministic.
+  live_smoke         the trained tiny pair (benchmarks/common.py) served by
+                     serve_continuous_live with a profiled LUT and an
+                     acceptance expectation calibrated from two quick
+                     generate() runs.  Wall-clock, so --check only applies
+                     loose factor bounds (and only with --live).
+
+Every scenario reports goodput (committed tokens / makespan), TTFT, ITL,
+time-weighted occupancy, iteration count, and the telemetry roll-up
+(counters, peaks, per-(s, batch) acceptance with observed-vs-predicted
+drift).  The payload also embeds a telemetry-parity self-check: the
+sim_steady trace must be identical with and without the hub attached.
+
+``--check`` is the CI gate: it re-runs the scenarios and exits nonzero when
+a deterministic sim metric regresses beyond tolerance against the committed
+results/BENCH_serving.json, when acceptance drift leaves its band, or when
+telemetry parity breaks.  Like kernel_bench, smoke modes never clobber the
+committed artifact.
+
+  PYTHONPATH=src python benchmarks/serving_bench.py              # full + live
+  PYTHONPATH=src python benchmarks/serving_bench.py --check --sim-only
+  PYTHONPATH=src python benchmarks/serving_bench.py --profile-dir /tmp/tb
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+import numpy as np
+
+from repro.core.adaptive import AdaptiveController, lut_from_model, profile_engine
+from repro.core.analytical import LatencyModel, fit_power_law
+from repro.serving.metrics import goodput, itl_summary, mean_occupancy, ttft_summary
+from repro.serving.scheduler import (ContinuousScheduler, PrefillBudgetAdmit,
+                                     SimStepBackend, serve_continuous_live)
+from repro.serving.server import serve_continuous
+from repro.serving.telemetry import Telemetry
+from repro.serving.traffic import TrafficPhase, make_requests, uniform_traffic
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+OUT_PATH = os.path.join(RESULTS, "BENCH_serving.json")
+
+VOCAB = 512
+SIM_BATCHES = (1, 2, 4, 8, 16)
+# sim scenarios run on a virtual clock and are bit-deterministic: 1% is pure
+# float headroom, any real scheduling change trips it
+SIM_RTOL = 0.01
+# live_smoke is wall-clock on whatever machine runs CI: factor bounds only
+LIVE_FACTOR = 2.5
+DRIFT_TOL = 0.25
+
+
+def sim_model() -> LatencyModel:
+    """The deterministic synthetic latency model the scheduler tests use."""
+    return LatencyModel(alpha={b: 1e-4 * b ** 0.8 for b in SIM_BATCHES},
+                        beta={b: 5e-3 for b in SIM_BATCHES},
+                        t_s={b: 2e-4 for b in SIM_BATCHES},
+                        c=0.9, gamma=0.548)
+
+
+def _metrics(res, tel: Optional[Telemetry] = None) -> Dict:
+    t, il = ttft_summary(res), itl_summary(res)
+    out = {
+        "goodput_tok_per_s": goodput(res),
+        "ttft_mean_s": t.mean, "ttft_p90_s": t.p90,
+        "itl_mean_s": il.mean,
+        "mean_occupancy": mean_occupancy(res),
+        "n_requests": len(res.requests),
+        "tokens": int(sum(r.n_generated for r in res.requests)),
+        "n_iterations": len(res.trace),
+    }
+    if tel is not None:
+        out["acceptance_drift"] = tel.acceptance_drift()
+        out["counters"] = dict(tel.counters)
+        out["peaks"] = dict(tel.peaks)
+        out["acceptance"] = tel.acceptance_table()
+    return out
+
+
+def bench_sim_steady() -> Dict:
+    m = sim_model()
+    lut = lut_from_model(m, s_max=8)
+    # offered load at ~3/4 of a b=8 batch's per-token service rate
+    interval = m.per_token_time(8, lut.lookup(8)) * 24 * 0.75
+    reqs = uniform_traffic(200, interval, 2.0, VOCAB, seed=11, max_new=24)
+    tel = Telemetry()
+    tel.attach_expected_acceptance(lambda s: m.l_of_s(s) / s)
+    res = serve_continuous(reqs, m, AdaptiveController(lut=lut), max_batch=8,
+                           seed=3, telemetry=tel)
+    return _metrics(res, tel)
+
+
+def bench_sim_paged_chunked() -> Dict:
+    m = sim_model()
+    ctrl = AdaptiveController(lut=lut_from_model(m, s_max=8))
+    reqs = make_requests(64, [TrafficPhase(0.02, 2.0, float("inf"))], VOCAB,
+                         seed=13, max_new=24)
+    rng = np.random.default_rng(5)
+    for j, r in enumerate(reqs):
+        r.max_new = int(rng.integers(12, 25))
+        if j % 3 == 0:
+            # long prompts force chunked admission under the token budget
+            L = int(rng.integers(40, 57))
+            r.tokens = rng.integers(0, VOCAB, (L,)).astype(np.int32)
+            r.prompt_len = L
+    tel = Telemetry()
+    tel.attach_expected_acceptance(lambda s: m.l_of_s(s) / s)
+    # undersized pool (8 slots x up to 12 blocks each, only 18 shared):
+    # guarantees preemption pressure so the bench exercises that counter
+    sched = ContinuousScheduler(
+        SimStepBackend(m, capacity=8, seed=2, block_size=8, num_blocks=18,
+                       max_context=96), ctrl,
+        policy=PrefillBudgetAdmit(token_budget=32, chunk=16), telemetry=tel)
+    res = sched.run(reqs)
+    res.trace = sched.trace
+    out = _metrics(res, tel)
+    out["n_preemptions"] = int(tel.counters.get("preempt", 0))
+    out["n_chunk_feeds"] = int(tel.counters.get("chunk_continue", 0))
+    return out
+
+
+def bench_live_smoke(profile_dir: Optional[str] = None) -> Dict:
+    from benchmarks.common import bench_prompts, get_trained_pair
+    engine, tparams, dparams, _ = get_trained_pair()
+    capacity, cache_len = 4, 192
+    pp, pl = bench_prompts(8, seed=5)
+    lut = profile_engine(engine, tparams, dparams, pp, pl,
+                         batch_sizes=(1, 2, capacity), s_values=range(0, 5),
+                         gen_tokens=8, cache_len=cache_len)
+    ctrl = AdaptiveController(lut=lut)
+    # calibrate the acceptance expectation l(s) ~= c * s**gamma from two
+    # quick fixed-s generates (attached to the telemetry hub directly — NOT
+    # via controller.model, which would also lift the controller's s cap)
+    l_obs = {}
+    for s in (2, 4):
+        _, stats, _ = engine.generate(tparams, dparams, pp[:4], pl[:4], s=s,
+                                      cache_len=cache_len, max_new=16,
+                                      collect_stats=True)
+        acc = np.concatenate([np.maximum(st.accepted, 0) for st in stats])
+        l_obs[s] = float(np.mean(acc))
+    c, gamma = fit_power_law(list(l_obs), list(l_obs.values()))
+    tel = Telemetry(profile_dir=profile_dir)
+    tel.attach_expected_acceptance(lambda s: min(c * s ** gamma / s, 1.0))
+    reqs = make_requests(48, [TrafficPhase(0.01, 1.0, float("inf"))], VOCAB,
+                         seed=21, max_new=24)
+    rng = np.random.default_rng(1)
+    for r in reqs:
+        r.max_new = int(rng.integers(8, 25))
+    res = serve_continuous_live(reqs, engine, tparams, dparams, ctrl,
+                                capacity=capacity, cache_len=cache_len,
+                                telemetry=tel)
+    out = _metrics(res, tel)
+    out["wall_clock"] = True
+    out["acceptance_fit"] = {"c": c, "gamma": gamma}
+    return out
+
+
+def telemetry_parity() -> Dict:
+    """The standing contract, checked on every bench run: the sim schedule
+    is identical with and without the telemetry hub attached."""
+    m = sim_model()
+    lut = lut_from_model(m, s_max=8)
+
+    def go(tel):
+        reqs = uniform_traffic(40, 0.02, 2.0, VOCAB, seed=17, max_new=16)
+        return serve_continuous(reqs, m, AdaptiveController(lut=lut),
+                                max_batch=8, seed=9, telemetry=tel)
+
+    r0, r1 = go(None), go(Telemetry())
+    fields = ("admitted", "occupancy", "committed", "preempted", "chunked")
+    same = all([getattr(t, f) for t in r0.trace]
+               == [getattr(t, f) for t in r1.trace] for f in fields)
+    same = same and bool(np.allclose(r0.latencies, r1.latencies))
+    return {"ok": same}
+
+
+def _compare(base: Dict, cur: Dict) -> List[str]:
+    """Regression comparison of the current scenarios against the committed
+    baseline: deterministic sim metrics within SIM_RTOL, live within factor
+    bounds, acceptance drift within its band."""
+    problems = []
+    for name in ("sim_steady", "sim_paged_chunked"):
+        b, c = base.get(name), cur.get(name)
+        if not b or not c:
+            problems.append(f"{name}: missing from "
+                            + ("baseline" if not b else "current run"))
+            continue
+        gp_rel = (c["goodput_tok_per_s"] - b["goodput_tok_per_s"]) \
+            / max(abs(b["goodput_tok_per_s"]), 1e-12)
+        if gp_rel < -SIM_RTOL:
+            problems.append(
+                f"{name}: goodput regressed {b['goodput_tok_per_s']:.4g} -> "
+                f"{c['goodput_tok_per_s']:.4g} tok/s ({gp_rel:+.1%})")
+        tt_rel = (c["ttft_mean_s"] - b["ttft_mean_s"]) \
+            / max(abs(b["ttft_mean_s"]), 1e-12)
+        if tt_rel > SIM_RTOL:
+            problems.append(
+                f"{name}: mean TTFT regressed {b['ttft_mean_s']:.4g} -> "
+                f"{c['ttft_mean_s']:.4g} s ({tt_rel:+.1%})")
+        drift = c.get("acceptance_drift")
+        if drift is not None and abs(drift) > DRIFT_TOL:
+            problems.append(f"{name}: acceptance drift {drift:+.3f} outside "
+                            f"+/-{DRIFT_TOL} — the LUT's l(s) model no "
+                            f"longer matches the observed process")
+    b, c = base.get("live_smoke"), cur.get("live_smoke")
+    if b and c:
+        if c["goodput_tok_per_s"] < b["goodput_tok_per_s"] / LIVE_FACTOR:
+            problems.append(
+                f"live_smoke: goodput collapsed "
+                f"{b['goodput_tok_per_s']:.3g} -> "
+                f"{c['goodput_tok_per_s']:.3g} tok/s (>{LIVE_FACTOR}x)")
+        if c["ttft_mean_s"] > b["ttft_mean_s"] * LIVE_FACTOR:
+            problems.append(
+                f"live_smoke: mean TTFT blew up {b['ttft_mean_s']:.3g} -> "
+                f"{c['ttft_mean_s']:.3g} s (>{LIVE_FACTOR}x)")
+    return problems
+
+
+def run(quick: bool = False, check: bool = False, sim_only: bool = False,
+        live: bool = False, profile_dir: Optional[str] = None) -> Dict:
+    import jax
+    scenarios: Dict[str, Dict] = {}
+    scenarios["sim_steady"] = bench_sim_steady()
+    scenarios["sim_paged_chunked"] = bench_sim_paged_chunked()
+    # live is wall-clock and needs the trained pair: run it on the full
+    # artifact pass or on explicit request, never in the default CI smoke
+    want_live = (not sim_only) and (live or not (check or quick))
+    if want_live:
+        scenarios["live_smoke"] = bench_live_smoke(profile_dir=profile_dir)
+
+    parity = telemetry_parity()
+    payload = {
+        "meta": {
+            "backend": jax.default_backend(),
+            "sim_rtol": SIM_RTOL, "live_factor": LIVE_FACTOR,
+            "drift_tol": DRIFT_TOL,
+            "note": ("sim scenarios run on a virtual clock (deterministic; "
+                     "--check holds them to sim_rtol); live_smoke is "
+                     "wall-clock on the CI machine (factor bounds only)"),
+        },
+        "scenarios": scenarios,
+        "telemetry_parity": parity,
+    }
+
+    problems: List[str] = []
+    if not parity["ok"]:
+        problems.append("telemetry parity BROKEN: the sim schedule differs "
+                        "with the hub attached — telemetry is no longer "
+                        "read-only")
+    if check:
+        if os.path.exists(OUT_PATH):
+            base = json.load(open(OUT_PATH)).get("scenarios", {})
+            problems += _compare(base, scenarios)
+        else:
+            problems.append(f"--check without a committed baseline "
+                            f"({os.path.relpath(OUT_PATH)} missing)")
+    payload["check"] = {"ok": not problems, "problems": problems}
+
+    # smoke modes never clobber the committed full artifact
+    os.makedirs(RESULTS, exist_ok=True)
+    if not (check or quick) or not os.path.exists(OUT_PATH):
+        with open(OUT_PATH, "w") as f:
+            json.dump(payload, f, indent=1, default=float)
+        print(f"wrote {os.path.relpath(OUT_PATH)} "
+              f"({len(scenarios)} scenarios)")
+    else:
+        print(f"kept existing {os.path.relpath(OUT_PATH)} "
+              f"(smoke mode, {len(scenarios)} scenarios measured)")
+    for name, s in scenarios.items():
+        drift = s.get("acceptance_drift")
+        print(f"  {name}: goodput {s['goodput_tok_per_s']:.4g} tok/s  "
+              f"ttft {s['ttft_mean_s']:.4g}s  itl {s['itl_mean_s']:.4g}s  "
+              f"occ {s['mean_occupancy']:.2f}  "
+              f"drift {'n/a' if drift is None else format(drift, '+.3f')}")
+    if problems:
+        for p in problems:
+            print(f"CHECK FAILED: {p}")
+    return payload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="sim scenarios only unless --live; never clobbers "
+                         "the committed artifact")
+    ap.add_argument("--check", action="store_true",
+                    help="CI gate: compare against the committed "
+                         "BENCH_serving.json, exit nonzero on regression")
+    ap.add_argument("--sim-only", action="store_true",
+                    help="skip the live engine scenario entirely")
+    ap.add_argument("--live", action="store_true",
+                    help="include live_smoke even under --quick/--check")
+    ap.add_argument("--profile-dir", default=None,
+                    help="write a jax profiler trace of the live scenario "
+                         "here (implies device phase annotations)")
+    args = ap.parse_args(argv)
+    payload = run(quick=args.quick, check=args.check, sim_only=args.sim_only,
+                  live=args.live, profile_dir=args.profile_dir)
+    if args.check and not payload["check"]["ok"]:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -72,6 +72,7 @@ single-device run (tests/test_sharded_serving.py verifies this under
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from functools import partial
@@ -96,6 +97,12 @@ Params = Any
 # also the hard ceiling on s: the step's `out` scatter silently drops
 # writes past the buffer, so SpecDecodeEngine.step validates s <= S_MAX.
 S_MAX = 8
+
+# shared no-op context for the `engine.annotate` guards below: when device
+# annotation is off, each jit dispatch enters this (reentrant, stateless)
+# instead of constructing a jax.profiler.TraceAnnotation — the off path
+# does no string formatting and allocates nothing
+_NULLCTX = contextlib.nullcontext()
 
 
 @dataclasses.dataclass
@@ -166,6 +173,13 @@ class SpecDecodeEngine:
         self.dtype = dtype
         self.sample = sample
         self.temperature = temperature
+        # opt-in device-side phase tracing (serving/telemetry.py): when
+        # True, every jit dispatch runs under a jax.profiler.TraceAnnotation
+        # scope so a profiler trace attributes device time per serving
+        # phase.  TraceAnnotation is a no-op outside an active trace; with
+        # the flag False the dispatch sites enter a shared nullcontext and
+        # never even format the annotation name.
+        self.annotate: bool = False
         # draft models are text-only: for VLM targets their positions run
         # without the modality prefix offset
         self.prefix_offset = target_cfg.prefix_len if target_cfg.family == "vlm" else 0
@@ -258,9 +272,11 @@ class SpecDecodeEngine:
         key = (B, P, cache_len)
         if key not in self._prefill_fns:
             self._prefill_fns[key] = self._build_prefill(B, P, cache_len)
-        tcache, dcache, seq_lens, last2 = self._prefill_fns[key](
-            tparams, dparams, jnp.asarray(tokens), jnp.asarray(prompt_lens),
-            target_extras or {})
+        with (jax.profiler.TraceAnnotation(f"repro/prefill[B={B},P={P}]")
+              if self.annotate else _NULLCTX):
+            tcache, dcache, seq_lens, last2 = self._prefill_fns[key](
+                tparams, dparams, jnp.asarray(tokens),
+                jnp.asarray(prompt_lens), target_extras or {})
         return DecodeState(
             tcache=tcache, dcache=dcache, seq_lens=seq_lens, last2=last2,
             out=jnp.zeros((B, self.max_new + S_MAX + 1), jnp.int32),
@@ -518,7 +534,10 @@ class SpecDecodeEngine:
                     state.out, state.n_generated, state.done)
             one = (single.tcache, single.dcache, single.seq_lens, single.last2,
                    single.out, single.n_generated, single.done)
-            return DecodeState(*self._inject_fn(full, one, jnp.int32(slot)))
+            with (jax.profiler.TraceAnnotation("repro/inject")
+                  if self.annotate else _NULLCTX):
+                return DecodeState(*self._inject_fn(full, one,
+                                                    jnp.int32(slot)))
         pk = state.paged
         scat_tbl = np.full((pk.max_blocks,), pk.num_blocks, np.int32)
         bt_row = np.full((pk.max_blocks,), -1, np.int32)
@@ -529,15 +548,18 @@ class SpecDecodeEngine:
             bt_row[:len(ids)] = ids
         if self._inject_paged_fn is None:
             self._inject_paged_fn = self._build_inject_paged()
-        tcache = self._inject_paged_fn(state.tcache, single.tcache,
-                                       jnp.int32(slot), jnp.asarray(scat_tbl),
-                                       jnp.asarray(bt_row))
-        full = (state.dcache, state.seq_lens, state.last2, state.out,
-                state.n_generated, state.done)
-        one = (single.dcache, single.seq_lens, single.last2, single.out,
-               single.n_generated, single.done)
-        dcache, seq_lens, last2, out, n_gen, done = \
-            self._inject_fn(full, one, jnp.int32(slot))
+        with (jax.profiler.TraceAnnotation("repro/inject")
+              if self.annotate else _NULLCTX):
+            tcache = self._inject_paged_fn(state.tcache, single.tcache,
+                                           jnp.int32(slot),
+                                           jnp.asarray(scat_tbl),
+                                           jnp.asarray(bt_row))
+            full = (state.dcache, state.seq_lens, state.last2, state.out,
+                    state.n_generated, state.done)
+            one = (single.dcache, single.seq_lens, single.last2, single.out,
+                   single.n_generated, single.done)
+            dcache, seq_lens, last2, out, n_gen, done = \
+                self._inject_fn(full, one, jnp.int32(slot))
         return DecodeState(tcache=tcache, dcache=dcache, seq_lens=seq_lens,
                            last2=last2, out=out, n_generated=n_gen, done=done,
                            paged=pk)
@@ -572,9 +594,11 @@ class SpecDecodeEngine:
                                       sh.tcache["bt"], sh.rep, sh.rep),
                         out_shardings=(sh.done, sh.tcache["pos"],
                                        sh.tcache["bt"]))
-            done, pos, bt = self._retire_paged_fn(
-                state.done, state.tcache["pos"], state.tcache["bt"],
-                jnp.int32(slot), jnp.asarray(pad))
+            with (jax.profiler.TraceAnnotation("repro/retire")
+                  if self.annotate else _NULLCTX):
+                done, pos, bt = self._retire_paged_fn(
+                    state.done, state.tcache["pos"], state.tcache["bt"],
+                    jnp.int32(slot), jnp.asarray(pad))
             return dataclasses.replace(
                 state, done=done, tcache=dict(state.tcache, pos=pos, bt=bt))
         if self._retire_fn is None:
@@ -583,8 +607,10 @@ class SpecDecodeEngine:
                 jax.jit(fn) if sh is None else
                 jax.jit(fn, in_shardings=(sh.done, sh.rep),
                         out_shardings=sh.done))
-        return dataclasses.replace(
-            state, done=self._retire_fn(state.done, jnp.int32(slot)))
+        with (jax.profiler.TraceAnnotation("repro/retire")
+              if self.annotate else _NULLCTX):
+            done = self._retire_fn(state.done, jnp.int32(slot))
+        return dataclasses.replace(state, done=done)
 
     # ------------------------------------------------------------------
     # chunked prefill into a slot (in-step chunked prefill; the scheduler
@@ -836,7 +862,9 @@ class SpecDecodeEngine:
                 jnp.int32(feed_total), jnp.int32(feed_total - 1))
         if paged:
             args = args + (jnp.asarray(bt_row),)
-        new_t, new_d = self._chunk_fns[key](*args)
+        with (jax.profiler.TraceAnnotation(f"repro/chunk[CB={CB}]")
+              if self.annotate else _NULLCTX):
+            new_t, new_d = self._chunk_fns[key](*args)
         if warm:
             # compile the commit path too, then discard everything
             if paged not in self._chunk_commit_fns:
@@ -868,15 +896,19 @@ class SpecDecodeEngine:
                      jnp.asarray(np.asarray(last2, np.int32)))
             if paged:
                 cargs = cargs + (state.tcache["bt"], jnp.asarray(bt_row))
-                seq_lens, l2, out, n_gen, done, bt = \
-                    self._chunk_commit_fns[paged](*cargs)
+                with (jax.profiler.TraceAnnotation("repro/chunk_commit")
+                      if self.annotate else _NULLCTX):
+                    seq_lens, l2, out, n_gen, done, bt = \
+                        self._chunk_commit_fns[paged](*cargs)
                 state = dataclasses.replace(
                     state, seq_lens=seq_lens, last2=l2, out=out,
                     n_generated=n_gen, done=done,
                     tcache=dict(state.tcache, bt=bt))
             else:
-                seq_lens, l2, out, n_gen, done = \
-                    self._chunk_commit_fns[paged](*cargs)
+                with (jax.profiler.TraceAnnotation("repro/chunk_commit")
+                      if self.annotate else _NULLCTX):
+                    seq_lens, l2, out, n_gen, done = \
+                        self._chunk_commit_fns[paged](*cargs)
                 state = dataclasses.replace(
                     state, seq_lens=seq_lens, last2=l2, out=out,
                     n_generated=n_gen, done=done)
@@ -957,8 +989,10 @@ class SpecDecodeEngine:
             if rng is None:
                 rng = jax.random.PRNGKey(int(np.asarray(state.n_generated).sum()))
             args = (*args, rng)
-        (tc, dc, seq_lens, last2, out, n_gen, done, a, n_commit) = \
-            self._step_fns[key](*args)
+        with (jax.profiler.TraceAnnotation(f"repro/step[B={B},s={s}]")
+              if self.annotate else _NULLCTX):
+            (tc, dc, seq_lens, last2, out, n_gen, done, a, n_commit) = \
+                self._step_fns[key](*args)
         new_state = DecodeState(tc, dc, seq_lens, last2, out, n_gen, done,
                                 paged=state.paged)
         stats = StepStats(accepted=np.asarray(a), committed=np.asarray(n_commit))

@@ -14,5 +14,6 @@ from repro.serving.server import (EngineBackend, ServeResult, SimBackend,
                                   serve, serve_continuous)
 from repro.serving.slots import (BlockPool, BlockPoolExhausted, PagedKVTables,
                                  SlotPool)
+from repro.serving.telemetry import PHASES, Telemetry
 from repro.serving.traffic import (TrafficPhase, alternating_traffic,
                                    make_requests, uniform_traffic)

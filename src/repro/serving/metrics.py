@@ -59,14 +59,17 @@ def timeline_groups(result: ServeResult, group: int = 40,
                     ) -> List[Tuple[float, float]]:
     """Fig. 6 view: (timestamp of first request in group, mean latency of the
     group) for consecutive groups of ``group`` requests in arrival order.
-    Unfinished/rejected requests are skipped (with a warning)."""
+    When the request count is not a multiple of ``group``, the tail
+    remainder is emitted as a final partial group (previously it was
+    silently dropped).  Unfinished/rejected requests are skipped (with a
+    warning)."""
     done, skipped = _finished(result)
     if skipped:
         warnings.warn(f"timeline_groups: skipping {skipped} unfinished/"
                       f"rejected requests")
     reqs = sorted(done, key=lambda r: r.arrival)
     out = []
-    for i in range(0, len(reqs) - group + 1, group):
+    for i in range(0, len(reqs), group):
         chunk = reqs[i:i + group]
         out.append((chunk[0].arrival, float(np.mean([r.latency for r in chunk]))))
     return out
@@ -114,9 +117,31 @@ def occupancy_timeline(result: ServeResult) -> List[Tuple[float, int]]:
 
 def mean_occupancy(result: ServeResult) -> float:
     """Time-weighted mean live batch size over the serving run."""
+    if not result.batches:
+        # previously the 1e-12 denominator guard silently returned ~0 here,
+        # which reads as "the pool sat empty" rather than "nothing ran"
+        raise ValueError("mean_occupancy: no executed batches to average "
+                         "over (empty ServeResult.batches)")
     num = sum(b.batch_size * b.duration for b in result.batches)
     den = sum(b.duration for b in result.batches)
-    return num / max(den, 1e-12)
+    if den <= 0.0:
+        raise ValueError("mean_occupancy: executed batches carry zero total "
+                         "duration")
+    return num / den
+
+
+def goodput(result: ServeResult) -> float:
+    """Committed tokens per second of makespan (first arrival to last
+    finish), counting finished requests only — the serving benchmark's
+    primary regression metric."""
+    done, _ = _finished(result)
+    if not done:
+        raise ValueError("goodput: no finished requests")
+    t0 = min(r.arrival for r in result.requests)
+    t1 = max(r.finish for r in done)
+    if t1 <= t0:
+        raise ValueError("goodput: zero makespan")
+    return sum(r.n_generated for r in done) / (t1 - t0)
 
 
 def admission_gaps(result: ServeResult) -> List[float]:

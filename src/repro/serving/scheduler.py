@@ -733,11 +733,27 @@ class ContinuousScheduler:
 
     def __init__(self, backend, controller: AdaptiveController,
                  policy: Optional[AdmissionPolicy] = None,
-                 observe: bool = False):
+                 observe: bool = False,
+                 telemetry=None):
         self.backend = backend
         self.controller = controller
         self.policy = policy or ImmediateAdmit()
         self.observe = observe
+        self.telemetry = telemetry
+        # zero-overhead-when-off: every hook in run() fires through _tel,
+        # which is None unless an *enabled* hub was supplied — a disabled
+        # (or absent) hub leaves the hot path with no telemetry branches,
+        # no perf_counter calls, and no event construction
+        self._tel = (telemetry if telemetry is not None
+                     and getattr(telemetry, "enabled", True) else None)
+        if (self._tel is not None
+                and getattr(self._tel, "expected_acceptance", None) is None
+                and getattr(controller, "model", None) is not None):
+            # the controller carries the analytical model: wire the
+            # acceptance observatory's drift baseline automatically
+            model = controller.model
+            self._tel.attach_expected_acceptance(
+                lambda s: model.l_of_s(s) / s)
         self.trace: List[StepTrace] = []
         # the controller's speculation ceiling, not the global S_MAX, is the
         # worst-case reservation unit for admission/overflow checks
@@ -798,6 +814,7 @@ class ContinuousScheduler:
                            - kv.allocated(sl))
             return tot
 
+        tel = self._tel
         clock, i, n_done, n = 0.0, 0, 0, len(pending)
         while n_done < n:
             while i < n and pending[i].arrival <= clock:
@@ -812,11 +829,15 @@ class ContinuousScheduler:
 
             def feed_chunk(req: Request, slot: int, m: int) -> None:
                 nonlocal clock
-                dt = self.backend.prefill_chunk(req, slot, req.prefill_pos, m)
+                start = req.prefill_pos
+                dt = self.backend.prefill_chunk(req, slot, start, m)
                 clock += dt
                 chunked.append((req.rid, m))
                 chunk_s.append(dt)
                 req.prefill_pos += m
+                if tel is not None:
+                    tel.span("chunk_continue", len(self.trace), dt,
+                             rid=req.rid, slot=slot, start=start, n=m)
 
             def claim_for(req: Request) -> int:
                 """Shared admission bookkeeping (both admission modes)."""
@@ -891,6 +912,10 @@ class ContinuousScheduler:
                         clock += p_dt
                         prefill_s.append(p_dt)
                         budget_left -= total_len
+                        if tel is not None:
+                            tel.span("prefill", len(self.trace), p_dt,
+                                     rid=req.rid, slot=slot,
+                                     tokens=total_len)
                     else:
                         # over the remaining budget: admit CHUNKED — never a
                         # whole-prompt burst (bounds this iteration's stall)
@@ -923,6 +948,15 @@ class ContinuousScheduler:
                     p_dt = self.backend.prefill(req, slot)
                     clock += p_dt
                     prefill_s.append(p_dt)
+                    if tel is not None:
+                        tel.span("prefill", len(self.trace), p_dt,
+                                 rid=req.rid, slot=slot,
+                                 tokens=req.prompt_len + req.n_generated)
+            if tel is not None and admitted:
+                tel.span("admit", len(self.trace),
+                         sum(dt for dt in prefill_s if dt > 0),
+                         rids=tuple(admitted),
+                         n_chunked=sum(1 for dt in prefill_s if dt < 0))
             if pool.occupancy == 0:
                 if not backlog and i < n:
                     clock = max(clock, pending[i].arrival)
@@ -958,6 +992,10 @@ class ContinuousScheduler:
                     req.prefill_pos = 0
                     backlog.insert(0, req)
                     preempted.append(req.rid)
+                    if tel is not None:
+                        tel.span("preempt", len(self.trace), 0.0,
+                                 rid=req.rid, slot=victim,
+                                 n_generated=req.n_generated)
             ds = decode_slots()
             b = len(ds)
             if b > 0:
@@ -967,6 +1005,11 @@ class ContinuousScheduler:
                     pool.request_at(sl).rid for sl in ds
                     if backend_done[sl]))
                 clock += dt
+                if tel is not None:
+                    tel.span("decode_verify", len(self.trace), dt,
+                             s=s, batch=b)
+                    t_commit0 = time.perf_counter()
+                n_done0 = n_done
                 toks = 0
                 raw: Dict[int, int] = {}
                 accepted_live: List[int] = []
@@ -989,6 +1032,16 @@ class ContinuousScheduler:
                         pool.retire(slot)
                         self.backend.retire(slot, req)
                         n_done += 1
+                        if tel is not None:
+                            tel.span("retire", len(self.trace), 0.0,
+                                     rid=req.rid, slot=slot,
+                                     n_generated=req.n_generated)
+                if tel is not None:
+                    tel.span("commit", len(self.trace),
+                             time.perf_counter() - t_commit0,
+                             tokens=toks, batch=b, retired=n_done - n_done0)
+                    tel.observe_step(s=s, batch=b, accepted=accepted_live,
+                                     duration=dt)
                 if self.observe and s > 0:
                     self.controller.observe(np.asarray(accepted_live), s)
                 batches.append(BatchRecord(
@@ -1012,6 +1065,16 @@ class ContinuousScheduler:
                 done_rids=done_rids, chunked=tuple(chunked),
                 chunk_s=tuple(chunk_s)))
             prev_done = set(done_rids)
+            if tel is not None:
+                g = dict(occupancy=pool.occupancy, decode_batch=b, s=s,
+                         prefilling=len(prefilling), backlog=len(backlog),
+                         free_slots=pool.free_count,
+                         capacity=self.backend.capacity)
+                if kv is not None:
+                    g.update(free_blocks=kv.free_blocks,
+                             used_blocks=kv.num_blocks - kv.free_blocks,
+                             fragmentation=kv.fragmentation)
+                tel.iteration(len(self.trace) - 1, clock, **g)
         return ServeResult(requests=list(pending), batches=batches)
 
 
@@ -1024,7 +1087,8 @@ def serve_continuous_live(requests: Sequence[Request], engine, tparams,
                           block_size: Optional[int] = None,
                           num_blocks: Optional[int] = None,
                           mesh=None,
-                          paged_fused=None):
+                          paged_fused=None,
+                          telemetry=None):
     """Serve a request trace on a LIVE SpecDecodeEngine with iteration-level
     continuous batching: requests join/leave at speculative-step granularity
     and the controller re-chooses s from live occupancy every step.
@@ -1062,6 +1126,14 @@ def serve_continuous_live(requests: Sequence[Request], engine, tparams,
     On CPU, force multiple host devices with
     ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before importing
     jax to try this without accelerators.
+
+    ``telemetry`` attaches a :class:`repro.serving.telemetry.Telemetry` hub:
+    phase spans, the (s, batch) acceptance observatory, and pool/scheduler
+    gauges, plus — when the hub was built with ``annotate_device`` or
+    ``profile_dir`` — per-phase ``jax.profiler.TraceAnnotation`` scopes on
+    the engine's jit dispatches (and a profiler trace around the run).
+    Telemetry only *reads* the pipeline: token outputs and the StepTrace
+    are identical with it on or off, and a disabled hub costs nothing.
     """
     for r in requests:
         if r.max_new > engine.max_new:
@@ -1100,7 +1172,19 @@ def serve_continuous_live(requests: Sequence[Request], engine, tparams,
                 f"max_new={r.max_new} + s_cap={s_cap} exceeds the "
                 f"per-request KV capacity {backend.max_context}; the KV "
                 f"ring would wrap and corrupt itself")
-    sched = ContinuousScheduler(backend, controller, policy, observe=observe)
-    result = sched.run(requests)
+    sched = ContinuousScheduler(backend, controller, policy, observe=observe,
+                                telemetry=telemetry)
+    tel = sched._tel
+    prev_annotate = getattr(engine, "annotate", False)
+    if tel is not None and tel.annotate_device:
+        engine.annotate = True
+    if tel is not None:
+        tel.start()
+    try:
+        result = sched.run(requests)
+    finally:
+        if tel is not None:
+            tel.stop()
+        engine.annotate = prev_annotate
     result.trace = sched.trace
     return result

@@ -161,7 +161,8 @@ class ServeResult:
 
 def serve_continuous(requests: Sequence[Request], model: LatencyModel,
                      controller: AdaptiveController, max_batch: int = 16,
-                     seed: int = 0, policy=None) -> ServeResult:
+                     seed: int = 0, policy=None,
+                     telemetry=None) -> ServeResult:
     """Iteration-level (Orca-style) continuous batching x speculation,
     simulated from a fitted latency model.
 
@@ -178,7 +179,8 @@ def serve_continuous(requests: Sequence[Request], model: LatencyModel,
     """
     from repro.serving.scheduler import ContinuousScheduler, SimStepBackend
     backend = SimStepBackend(model, capacity=max_batch, seed=seed)
-    sched = ContinuousScheduler(backend, controller, policy)
+    sched = ContinuousScheduler(backend, controller, policy,
+                                telemetry=telemetry)
     result = sched.run(requests)
     result.trace = sched.trace
     return result

@@ -75,6 +75,22 @@ class BlockPool:
     def used_count(self) -> int:
         return self.num_blocks - len(self._free)
 
+    @property
+    def fragmentation(self) -> float:
+        """Free-list fragmentation in [0, 1]: one minus the largest
+        contiguous free run over the total free count (0.0 when the free
+        list is empty or a single run).  Block tables make any free block
+        usable, so this is a telemetry gauge, not an allocator concern —
+        it tracks how shuffled the pool has become under churn."""
+        if not self._free:
+            return 0.0
+        # _free is kept sorted descending; walk runs of consecutive ids
+        best = run = 1
+        for prev, cur in zip(self._free, self._free[1:]):
+            run = run + 1 if prev == cur + 1 else 1
+            best = max(best, run)
+        return 1.0 - best / len(self._free)
+
 
 class PagedKVTables:
     """Per-slot block tables over a :class:`BlockPool`.
@@ -123,6 +139,11 @@ class PagedKVTables:
     @property
     def free_blocks(self) -> int:
         return self.pool.free_count
+
+    @property
+    def fragmentation(self) -> float:
+        """Free-list fragmentation gauge (see BlockPool.fragmentation)."""
+        return self.pool.fragmentation
 
     @property
     def logical_len(self) -> int:

@@ -1,0 +1,124 @@
+"""Direct unit coverage of serving/metrics.py on hand-built results:
+`timeline_groups` partial-tail emission, `mean_occupancy` empty-input
+errors, TTFT/ITL skip accounting, `admission_gaps` idle-pool semantics,
+`LatencySummary.of` error text, and the serving bench's `goodput`."""
+import numpy as np
+import pytest
+
+from repro.serving.metrics import (LatencySummary, admission_gaps, goodput,
+                                   itl_summary, mean_occupancy, summarize,
+                                   timeline_groups, ttft_summary)
+from repro.serving.request import BatchRecord, Request
+from repro.serving.scheduler import StepTrace
+from repro.serving.server import ServeResult
+
+
+def _req(rid, arrival=0.0, finish=None, first=None, n_gen=0, max_new=8):
+    r = Request(rid=rid, arrival=arrival,
+                tokens=np.arange(4, dtype=np.int32), prompt_len=4,
+                max_new=max_new)
+    r.finish = finish
+    r.first_token = first
+    r.n_generated = n_gen
+    return r
+
+
+def test_latency_summary_empty_names_metric_and_skips():
+    with pytest.raises(ValueError, match="no 'ttft' samples"):
+        LatencySummary.of([], name="ttft")
+    with pytest.raises(ValueError, match=r"3 unfinished/rejected"):
+        LatencySummary.of([], name="latency", n_skipped=3)
+
+
+def test_summarize_skips_unfinished_and_counts_them():
+    res = ServeResult(requests=[_req(0, finish=2.0), _req(1), _req(2)],
+                      batches=[])
+    s = summarize(res)
+    assert s.n == 1 and s.n_skipped == 2
+    assert s.mean == pytest.approx(2.0)
+
+
+def test_timeline_groups_emits_partial_tail():
+    # 5 finished requests at group=2: two full groups plus a partial tail
+    # of 1 (previously the tail was silently dropped)
+    reqs = [_req(i, arrival=float(i), finish=float(i) + 1.0 + (i % 2))
+            for i in range(5)]
+    res = ServeResult(requests=reqs, batches=[])
+    tl = timeline_groups(res, group=2)
+    assert len(tl) == 3
+    assert tl[2][0] == 4.0                 # the tail group's first arrival
+    assert tl[2][1] == pytest.approx(reqs[4].latency)
+    # fewer requests than one group: one partial group, not an empty list
+    tl1 = timeline_groups(res, group=40)
+    assert len(tl1) == 1 and tl1[0][0] == 0.0
+    # an exact multiple must not grow a phantom empty group
+    exact = ServeResult(requests=reqs[:4], batches=[])
+    assert len(timeline_groups(exact, group=2)) == 2
+
+
+def test_mean_occupancy_weights_by_duration_and_raises_when_empty():
+    recs = [BatchRecord(start=0.0, duration=3.0, batch_size=4, s_used=2,
+                        tokens_generated=10, n_steps=1),
+            BatchRecord(start=3.0, duration=1.0, batch_size=8, s_used=2,
+                        tokens_generated=10, n_steps=1)]
+    res = ServeResult(requests=[], batches=recs)
+    assert mean_occupancy(res) == pytest.approx((4 * 3 + 8 * 1) / 4)
+    with pytest.raises(ValueError, match="mean_occupancy"):
+        mean_occupancy(ServeResult(requests=[_req(0, finish=1.0)],
+                                   batches=[]))
+
+
+def test_ttft_itl_summaries_count_skips():
+    reqs = [_req(0, arrival=0.0, first=0.5, finish=2.0, n_gen=4),
+            _req(1, arrival=1.0),                        # never scheduled
+            _req(2, arrival=0.0, first=0.25, finish=1.0, n_gen=1)]  # no ITL
+    res = ServeResult(requests=reqs, batches=[])
+    t = ttft_summary(res)
+    assert t.n == 2 and t.n_skipped == 1
+    assert t.mean == pytest.approx((0.5 + 0.25) / 2)
+    i = itl_summary(res)
+    assert i.n == 1 and i.n_skipped == 2
+    assert i.mean == pytest.approx((2.0 - 0.5) / 3)
+    empty = ServeResult(requests=[_req(9)], batches=[])
+    with pytest.raises(ValueError, match="first-token"):
+        ttft_summary(empty)
+    with pytest.raises(ValueError, match="inter-token"):
+        itl_summary(empty)
+
+
+def _tr(clock, rids, admitted=(), duration=0.1, prefill_s=(),
+        chunked=(), chunk_s=()):
+    return StepTrace(clock=clock, occupancy=len(rids), s=2, rids=rids,
+                     committed={r: 1 for r in rids}, admitted=admitted,
+                     duration=duration, prefill_s=prefill_s,
+                     chunked=chunked, chunk_s=chunk_s)
+
+
+def test_admission_gaps_skips_idle_pool_first_admission():
+    trace = [
+        # admission into an idle pool: nobody running yet, no gap
+        _tr(0.0, (0,), admitted=(0,), prefill_s=(0.05,)),
+        # rid 0 is now decoding: this admission's prefill stalls it
+        _tr(0.2, (0, 1), admitted=(1,), prefill_s=(0.04,)),
+        # pure decode iteration: no admission work, no gap
+        _tr(0.4, (0, 1)),
+        # chunked admission (prefill_s = -1 sentinel): only the chunk
+        # seconds count as the stall work
+        _tr(0.6, (0, 1, 2), admitted=(2,), prefill_s=(-1.0,),
+            chunked=((2, 8),), chunk_s=(0.03,)),
+    ]
+    res = ServeResult(requests=[], batches=[], trace=trace)
+    gaps = admission_gaps(res)
+    assert gaps == [pytest.approx(0.1 + 0.04), pytest.approx(0.1 + 0.03)]
+    with pytest.raises(ValueError, match="StepTrace"):
+        admission_gaps(ServeResult(requests=[], batches=[]))
+
+
+def test_goodput_counts_committed_tokens_over_makespan():
+    reqs = [_req(0, arrival=0.0, finish=2.0, n_gen=8),
+            _req(1, arrival=1.0, finish=4.0, n_gen=4),
+            _req(2, arrival=1.0)]                     # unfinished: excluded
+    res = ServeResult(requests=reqs, batches=[])
+    assert goodput(res) == pytest.approx(12 / 4.0)
+    with pytest.raises(ValueError, match="goodput"):
+        goodput(ServeResult(requests=[_req(0)], batches=[]))

@@ -13,6 +13,12 @@ Tiers:
             gather+verify.  A subset of ``fast`` for quick kernel
             iteration; runs inside fast/full automatically (the files carry
             no ``slow`` marker).
+  obs     — observability subset: telemetry read-only-parity tests
+            (tests/test_telemetry.py) + the serving/metrics unit tests
+            (tests/test_metrics.py), then the serving-bench regression
+            smoke (``benchmarks/serving_bench.py --check --sim-only``)
+            against the committed results/BENCH_serving.json.  The bench
+            smoke also runs at the end of fast and full.
   docs    — documentation-hygiene gate only, no pytest: fails when
             README.md or docs/ARCHITECTURE.md is missing, or when any
             module under src/repro/serving/ lacks a module docstring (the
@@ -45,7 +51,16 @@ TIERS = {
     # bodies (interpret mode) vs the jnp oracles, incl. the fused paged path
     "kernels": [os.path.join("tests", "test_kernels.py"),
                 os.path.join("tests", "test_paged_fused_kernel.py")],
+    # observability subset: telemetry parity + metrics units (the serving
+    # bench smoke runs after pytest — see SERVING_SMOKE_TIERS)
+    "obs": [os.path.join("tests", "test_telemetry.py"),
+            os.path.join("tests", "test_metrics.py")],
 }
+
+# tiers that finish with the serving-bench regression smoke (sim scenarios
+# are deterministic and take seconds; exits nonzero on goodput/TTFT drift
+# against the committed results/BENCH_serving.json)
+SERVING_SMOKE_TIERS = ("fast", "full", "obs")
 
 # pytest's "no tests were collected" exit code — a vacuous pass, not a pass
 EXIT_NO_TESTS_COLLECTED = 5
@@ -131,6 +146,16 @@ def main(argv):
               "run as a failure (is PYTHONPATH missing src, or the tests "
               "directory empty?)", file=sys.stderr)
         return 2
+    if rc == 0 and tier in SERVING_SMOKE_TIERS:
+        smoke = [sys.executable,
+                 os.path.join("benchmarks", "serving_bench.py"),
+                 "--check", "--sim-only"]
+        print("$", " ".join(smoke), flush=True)
+        src = subprocess.call(smoke, cwd=ROOT, env=env)
+        if src:
+            print("citier: serving bench regression smoke FAILED "
+                  "(see problems above)", file=sys.stderr)
+            return src
     return rc
 
 
