@@ -1,3 +1,10 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""Core speculative-decoding engine: the paper's primary contribution.
+
+``spec_decode`` holds the batched draft-then-verify engine
+(``SpecDecodeEngine`` and the jitted ``make_spec_step`` body) with
+continuous-batching slot reuse and paged-KV support; ``analytical`` is
+the paper's throughput model (when does speculation beat plain batched
+decoding at a given batch size and acceptance rate); and ``adaptive``
+is the occupancy-aware controller that picks the speculation length
+``s`` per iteration from live batch feedback.
+"""

@@ -987,6 +987,7 @@ class SpecDecodeEngine:
                 state.last2, state.out, state.n_generated, state.done)
         if self.sample:
             if rng is None:
+                # lint: allow-host-sync(sample-mode fallback seed only; serving passes rng explicitly)
                 rng = jax.random.PRNGKey(int(np.asarray(state.n_generated).sum()))
             args = (*args, rng)
         with (jax.profiler.TraceAnnotation(f"repro/step[B={B},s={s}]")
@@ -995,6 +996,7 @@ class SpecDecodeEngine:
                 self._step_fns[key](*args)
         new_state = DecodeState(tc, dc, seq_lens, last2, out, n_gen, done,
                                 paged=state.paged)
+        # lint: allow-host-sync(step-boundary sync: commit counts drive host-side block accounting)
         stats = StepStats(accepted=np.asarray(a), committed=np.asarray(n_commit))
         if state.paged is not None and not warm:
             for slot in state.paged.active_slots():

@@ -1,3 +1,14 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the speculation hot spots, with jnp oracles.
+
+Each kernel module pairs a Pallas body with a pure-jnp reference in
+``ref.py`` that the interpret-mode parity tests (``citier kernels``)
+check against: ``spec_verify_attn`` (the batched s-token verify
+attention), ``paged_verify_attn`` (the fused variant that streams KV
+through the scalar-prefetched block table — no materialized gather),
+``flash_attn``, ``rmsnorm``, and ``ssd_chunk``.  ``ops.py`` is the
+dispatch layer (``kernel_mode``) that picks kernel vs reference.
+
+BlockSpec index maps in this package are pure block-address arithmetic
+over grid indices and scalar-prefetch refs — enforced by repro-lint's
+``pallas-index-map`` rule.
+"""

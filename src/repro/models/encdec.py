@@ -221,7 +221,7 @@ class EncDecLM:
         qk_pos = jnp.where(valid, pos, -1)
         L = cache["pos"].shape[1]
         rows = pos % L
-        pos_arr = cache["pos"].at[jnp.arange(B)[:, None], rows].set(qk_pos)
+        pos_arr = cache["pos"].at[jnp.arange(B)[:, None], rows].set(qk_pos, mode="drop")
 
         def layer(h, xs):
             lp, lk, lv, xk, xv = xs
@@ -230,8 +230,8 @@ class EncDecLM:
             k = cm.apply_rope(jnp.einsum("btd,dhk->bthk", hn, lp["self_wk"]), pos, c.attn.rope_theta)
             v = jnp.einsum("btd,dhk->bthk", hn, lp["self_wv"])
             bidx = jnp.arange(B)[:, None]
-            nk = lk.at[bidx, rows].set(k.astype(lk.dtype))
-            nv = lv.at[bidx, rows].set(v.astype(lv.dtype))
+            nk = lk.at[bidx, rows].set(k.astype(lk.dtype), mode="drop")
+            nv = lv.at[bidx, rows].set(v.astype(lv.dtype), mode="drop")
             o = cm.flash_attention_tri(q, k, v, qk_pos, qk_pos, window=c.attn.window)
             h = h + shard(jnp.einsum("bthk,hkd->btd", o, lp["self_wo"]), "data", None, None)
             hn = cm.rms_norm(h, lp["cross_norm"], c.norm_eps)
@@ -260,7 +260,7 @@ class EncDecLM:
         L = cache["pos"].shape[1]
         positions = (seq_lens - 1)[:, None] + jnp.arange(T, dtype=jnp.int32)[None]
         rows = positions % L
-        pos_arr = cache["pos"].at[jnp.arange(B)[:, None], rows].set(positions)
+        pos_arr = cache["pos"].at[jnp.arange(B)[:, None], rows].set(positions, mode="drop")
 
         def layer(h, xs):
             lp, lk, lv, xk, xv = xs
@@ -271,8 +271,8 @@ class EncDecLM:
                               positions, c.attn.rope_theta)
             v = jnp.einsum("btd,dhk->bthk", hn, lp["self_wv"])
             bidx = jnp.arange(B)[:, None]
-            nk = lk.at[bidx, rows].set(k.astype(lk.dtype))
-            nv = lv.at[bidx, rows].set(v.astype(lv.dtype))
+            nk = lk.at[bidx, rows].set(k.astype(lk.dtype), mode="drop")
+            nv = lv.at[bidx, rows].set(v.astype(lv.dtype), mode="drop")
             mask = cm.position_mask(positions, pos_arr, c.attn.window)
             o = cm.gqa_attention(q, nk, nv, mask)
             h = h + shard(jnp.einsum("bthk,hkd->btd", o, lp["self_wo"]), "data", None, None)

@@ -277,7 +277,7 @@ class RGLRUHybridLM:
         qk_pos = jnp.where(valid, positions, -1)
         L = cache["pos"].shape[1]
         rows = positions % L
-        pos_arr = cache["pos"].at[jnp.arange(B)[:, None], rows].set(qk_pos)
+        pos_arr = cache["pos"].at[jnp.arange(B)[:, None], rows].set(qk_pos, mode="drop")
         K = r.d_conv
         gather_idx = jnp.clip(prompt_lens[:, None] - (K - 1) + jnp.arange(K - 1)[None], 0, T - 1)
         conv_valid = (prompt_lens[:, None] - (K - 1) + jnp.arange(K - 1)[None]) >= 0
@@ -299,8 +299,8 @@ class RGLRUHybridLM:
             v = jnp.einsum("btd,dhk->bthk", hn, lp["wv"])
             o = cm.flash_attention_tri(q, k, v, qk_pos, qk_pos, window=r.window)
             bidx = jnp.arange(B)[:, None]
-            nk = lk.at[bidx, rows].set(k.astype(lk.dtype))
-            nv = lv.at[bidx, rows].set(v.astype(lv.dtype))
+            nk = lk.at[bidx, rows].set(k.astype(lk.dtype), mode="drop")
+            nv = lv.at[bidx, rows].set(v.astype(lv.dtype), mode="drop")
             h = h + shard(jnp.einsum("bthk,hkd->btd", o, lp["wo"]), "data", None, None)
             return h + self._mlp(lp, h), nk, nv
 
@@ -348,7 +348,7 @@ class RGLRUHybridLM:
         L = cache["pos"].shape[1]
         positions = (seq_lens - 1)[:, None] + jnp.arange(T, dtype=jnp.int32)[None]
         rows = positions % L
-        pos_arr = cache["pos"].at[jnp.arange(B)[:, None], rows].set(positions)
+        pos_arr = cache["pos"].at[jnp.arange(B)[:, None], rows].set(positions, mode="drop")
 
         nb, rpb = self.n_full, self.rec_per_block
         rec_groups = self._split(params["rec"], nb * rpb, rpb)
@@ -369,8 +369,8 @@ class RGLRUHybridLM:
             k = cm.apply_rope(jnp.einsum("btd,dhk->bthk", hn, lp["wk"]), positions, c.attn.rope_theta)
             v = jnp.einsum("btd,dhk->bthk", hn, lp["wv"])
             bidx = jnp.arange(B)[:, None]
-            nk = lk.at[bidx, rows].set(k.astype(lk.dtype))
-            nv = lv.at[bidx, rows].set(v.astype(lv.dtype))
+            nk = lk.at[bidx, rows].set(k.astype(lk.dtype), mode="drop")
+            nv = lv.at[bidx, rows].set(v.astype(lv.dtype), mode="drop")
             mask = cm.position_mask(positions, pos_arr, r.window)
             o = cm.gqa_attention(q, nk, nv, mask)
             h = h + shard(jnp.einsum("bthk,hkd->btd", o, lp["wo"]), "data", None, None)

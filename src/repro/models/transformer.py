@@ -430,7 +430,7 @@ class DecoderLM:
         valid = positions < total_lens[:, None]
         rows = positions % L
         pos_arr = cache["pos"].at[jnp.arange(B)[:, None], rows].set(
-            jnp.where(valid, positions, -1))
+            jnp.where(valid, positions, -1), mode="drop")
         prefix_len = c.prefix_len if (prefix_embeds is not None and c.bidirectional_prefix) else 0
 
         def layer(carry, xs):
@@ -481,7 +481,7 @@ class DecoderLM:
         valid = positions < total_lens[:, None]
         qk_pos = jnp.where(valid, positions, -1)  # padded rows never attended
         rows = positions % L
-        pos_arr = cache["pos"].at[jnp.arange(B)[:, None], rows].set(qk_pos)
+        pos_arr = cache["pos"].at[jnp.arange(B)[:, None], rows].set(qk_pos, mode="drop")
         prefix_len = c.prefix_len if (prefix_embeds is not None and c.bidirectional_prefix) else 0
 
         def layer(carry, xs):
@@ -502,8 +502,10 @@ class DecoderLM:
                 a_out = jnp.einsum("bthv,hvd->btd", o, lp["wo"])
                 bidx = jnp.arange(B)[:, None]
                 new_lcache = {
-                    "ckv": lcache["ckv"].at[bidx, rows].set(ckv_new.astype(lcache["ckv"].dtype)),
-                    "krope": lcache["krope"].at[bidx, rows].set(krope_new.astype(lcache["krope"].dtype)),
+                    "ckv": lcache["ckv"].at[bidx, rows].set(
+                        ckv_new.astype(lcache["ckv"].dtype), mode="drop"),
+                    "krope": lcache["krope"].at[bidx, rows].set(
+                        krope_new.astype(lcache["krope"].dtype), mode="drop"),
                 }
             else:
                 q, k_new, v_new = self._qkv_gqa(lp, hn, positions)
@@ -515,17 +517,19 @@ class DecoderLM:
                     kq, ks = _quant_rows(k_new)
                     vq, vs = _quant_rows(v_new)
                     new_lcache = {
-                        "k": lcache["k"].at[bidx, rows].set(kq),
-                        "v": lcache["v"].at[bidx, rows].set(vq),
+                        "k": lcache["k"].at[bidx, rows].set(kq, mode="drop"),
+                        "v": lcache["v"].at[bidx, rows].set(vq, mode="drop"),
                         "k_scale": lcache["k_scale"].at[bidx, rows].set(
-                            ks.astype(lcache["k_scale"].dtype)),
+                            ks.astype(lcache["k_scale"].dtype), mode="drop"),
                         "v_scale": lcache["v_scale"].at[bidx, rows].set(
-                            vs.astype(lcache["v_scale"].dtype)),
+                            vs.astype(lcache["v_scale"].dtype), mode="drop"),
                     }
                 else:
                     new_lcache = {
-                        "k": lcache["k"].at[bidx, rows].set(k_new.astype(lcache["k"].dtype)),
-                        "v": lcache["v"].at[bidx, rows].set(v_new.astype(lcache["v"].dtype)),
+                        "k": lcache["k"].at[bidx, rows].set(
+                            k_new.astype(lcache["k"].dtype), mode="drop"),
+                        "v": lcache["v"].at[bidx, rows].set(
+                            v_new.astype(lcache["v"].dtype), mode="drop"),
                     }
             h = h + shard(a_out, "data", None, None)
             m_out, _ = self._mlp(lp, cm.rms_norm(h, lp["mlp_norm"], c.norm_eps))
@@ -563,7 +567,7 @@ class DecoderLM:
         x = shard(x, "data", None, None)
         positions = (seq_lens - 1)[:, None] + jnp.arange(T, dtype=jnp.int32)[None]
         rows = positions % L
-        pos_arr = cache["pos"].at[jnp.arange(B)[:, None], rows].set(positions)
+        pos_arr = cache["pos"].at[jnp.arange(B)[:, None], rows].set(positions, mode="drop")
         prefix_len = c.prefix_len if c.bidirectional_prefix else 0
 
         def layer(carry, xs):

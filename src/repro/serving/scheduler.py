@@ -413,7 +413,7 @@ class ContinuousEngineBackend:
         self.state = self.engine.prefill_into(
             self.tparams, self.dparams, self.state, slot, toks,
             plen, self.cache_len)
-        np.asarray(self.state.seq_lens)          # block until ready
+        np.asarray(self.state.seq_lens)  # lint: allow-host-sync(deliberate fence: prefill wall-clock timing)
         return time.perf_counter() - t0
 
     def prefill_chunk(self, req: Request, slot: int, start: int,
@@ -445,7 +445,7 @@ class ContinuousEngineBackend:
         self.state = self.engine.prefill_chunk_into(
             self.tparams, self.dparams, self.state, slot, toks, start, n,
             total_len, last2=prompt[-2:] if final else None)
-        np.asarray(self.state.seq_lens)          # block until ready
+        np.asarray(self.state.seq_lens)  # lint: allow-host-sync(deliberate fence: chunk wall-clock timing)
         return time.perf_counter() - t0
 
     def step(self, s: int) -> Tuple[float, np.ndarray, np.ndarray]:
@@ -455,15 +455,16 @@ class ContinuousEngineBackend:
         t0 = time.perf_counter()
         self.state, st = self.engine.step(self.tparams, self.dparams,
                                           self.state, s)
-        committed = np.asarray(st.committed)     # forces sync
+        committed = np.asarray(st.committed)  # lint: allow-host-sync(step boundary: commit counts steer the scheduler)
         dt = time.perf_counter() - t0
+        # lint: allow-host-sync(step boundary: done flags steer retirement)
         return dt, committed, np.asarray(self.state.done)
 
     def preempt(self, slot: int, req: Request) -> None:
         """Evict ``req`` under memory pressure: stash its generated tokens,
         free the slot's KV blocks, and mark the row done."""
-        dev_n = int(np.asarray(self.state.n_generated)[slot])
-        fresh = np.asarray(self.state.out)[slot, :dev_n].astype(np.int32)
+        dev_n = int(np.asarray(self.state.n_generated)[slot])  # lint: allow-host-sync(preempt is off the steady path; must read victim count)
+        fresh = np.asarray(self.state.out)[slot, :dev_n].astype(np.int32)  # lint: allow-host-sync(victim tokens are stashed host-side)
         old = self._stash.get(req.rid)
         self._stash[req.rid] = (fresh if old is None
                                 else np.concatenate([old, fresh]))
@@ -1043,6 +1044,7 @@ class ContinuousScheduler:
                     tel.observe_step(s=s, batch=b, accepted=accepted_live,
                                      duration=dt)
                 if self.observe and s > 0:
+                    # lint: allow-host-sync(accepted_live is already a host list; no device transfer)
                     self.controller.observe(np.asarray(accepted_live), s)
                 batches.append(BatchRecord(
                     start=clock - dt, duration=dt, batch_size=b, s_used=s,

@@ -1,0 +1,434 @@
+"""repro-lint (tools/lint): per-rule fixtures — true positive, true
+negative, pragma suppression, stale-pragma detection — plus the CLI
+contract (exit codes, sorted/stable --json, baseline subtraction), the
+citier ``lint`` tier failing on an injected violation, and the standing
+gate that the repo's own tree is lint-clean.  All fast tier."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if ROOT not in sys.path:
+    sys.path.insert(0, ROOT)
+
+from tools.lint.cli import (EXIT_CLEAN, EXIT_FINDINGS, EXIT_NO_FILES,
+                            EXIT_USAGE, lint_paths, main)
+
+
+def write(tmp_path, rel, body):
+    path = tmp_path / rel
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(body))
+    return str(path)
+
+
+def findings_for(tmp_path, rel, body, rule=None):
+    write(tmp_path, rel, body)
+    found, n = lint_paths([str(tmp_path)])
+    assert n >= 1
+    return [f for f in found if rule is None or f.rule == rule]
+
+
+# ---------------------------------------------------------------- host-sync
+
+HOT_SYNCS = """\
+    import numpy as np
+    import jax
+
+    def kernel_wrapper(x):
+        n = x.item()
+        jax.device_get(x)
+        x.block_until_ready()
+        return np.asarray(x), n
+"""
+
+
+def test_host_sync_true_positive_kernels(tmp_path):
+    fs = findings_for(tmp_path, "kernels/wrap.py", HOT_SYNCS, "host-sync")
+    assert len(fs) == 4
+    assert all(f.severity == "error" for f in fs)
+    assert all(f.file.endswith("kernels/wrap.py") for f in fs)
+
+
+def test_host_sync_true_negative_outside_hot_zone(tmp_path):
+    # identical code in a non-hot file: the sim backend / bench layer may
+    # sync freely
+    assert findings_for(tmp_path, "serving/sim.py", HOT_SYNCS,
+                        "host-sync") == []
+
+
+def test_host_sync_hot_functions_only_in_engine_files(tmp_path):
+    body = """\
+        import numpy as np
+
+        class SpecDecodeEngine:
+            def step(self, state):
+                return np.asarray(state.done)
+
+            def build_report(self, state):
+                return np.asarray(state.done)
+    """
+    fs = findings_for(tmp_path, "core/spec_decode.py", body, "host-sync")
+    assert len(fs) == 1 and fs[0].line == 5
+
+
+def test_host_sync_int_on_traced_value(tmp_path):
+    body = """\
+        import jax.numpy as jnp
+
+        def helper(a, b):
+            total = jnp.dot(a, b).sum()
+            plain = len(b)
+            return int(total), int(plain)
+    """
+    fs = findings_for(tmp_path, "kernels/wrap.py", body, "host-sync")
+    assert len(fs) == 1
+    assert "`total`" in fs[0].message
+
+
+def test_host_sync_literal_conversion_is_warning(tmp_path):
+    body = """\
+        import numpy as np
+
+        def scale_table(x):
+            return np.asarray([1.0, 0.5, 0.25])
+    """
+    fs = findings_for(tmp_path, "kernels/wrap.py", body, "host-sync")
+    assert len(fs) == 1 and fs[0].severity == "warning"
+
+
+# ------------------------------------------------------------- jit-sharding
+
+def test_jit_sharding_true_positive(tmp_path):
+    body = """\
+        import jax
+
+        def build(fn):
+            return jax.jit(fn)
+    """
+    fs = findings_for(tmp_path, "core/engine.py", body, "jit-sharding")
+    assert len(fs) == 1 and fs[0].severity == "error"
+
+
+def test_jit_sharding_explicit_shardings_pass(tmp_path):
+    body = """\
+        import jax
+
+        def build(fn, sh):
+            return jax.jit(fn, in_shardings=sh, out_shardings=sh)
+    """
+    assert findings_for(tmp_path, "core/engine.py", body,
+                        "jit-sharding") == []
+
+
+def test_jit_sharding_half_sharded_flagged(tmp_path):
+    body = """\
+        import jax
+
+        def build(fn, sh):
+            return jax.jit(fn, in_shardings=sh)
+    """
+    fs = findings_for(tmp_path, "core/engine.py", body, "jit-sharding")
+    assert len(fs) == 1 and "out_shardings" in fs[0].message
+
+
+def test_jit_sharding_unsharded_branch_recognized(tmp_path):
+    body = """\
+        import jax
+
+        def build(fn, sh, cap):
+            if sh is None or cap != 8:
+                return jax.jit(fn)
+            f = jax.jit(fn) if sh is None else jax.jit(
+                fn, in_shardings=sh, out_shardings=sh)
+            return f
+    """
+    assert findings_for(tmp_path, "core/engine.py", body,
+                        "jit-sharding") == []
+
+
+def test_jit_sharding_out_of_scope_file(tmp_path):
+    body = """\
+        import jax
+
+        def build(fn):
+            return jax.jit(fn)
+    """
+    assert findings_for(tmp_path, "launch/train.py", body,
+                        "jit-sharding") == []
+
+
+# ------------------------------------------------------------- scatter-drop
+
+def test_scatter_drop_true_positive(tmp_path):
+    body = """\
+        def write(cache, rows, k):
+            return cache["k"].at[rows].set(k)
+    """
+    fs = findings_for(tmp_path, "models/m.py", body, "scatter-drop")
+    assert len(fs) == 1 and 'mode="drop"' in fs[0].message
+
+
+def test_scatter_drop_mode_drop_passes(tmp_path):
+    body = """\
+        def write(cache, rows, k, lk):
+            a = cache["k"].at[rows].set(k, mode="drop")
+            b = lk.at[rows].add(k, mode="drop")
+            return a, b
+    """
+    assert findings_for(tmp_path, "models/m.py", body, "scatter-drop") == []
+
+
+def test_scatter_drop_non_cache_array_ignored(tmp_path):
+    body = """\
+        def route(buf, idx, x):
+            return buf.at[idx].set(x)
+    """
+    assert findings_for(tmp_path, "models/moe.py", body,
+                        "scatter-drop") == []
+
+
+def test_scatter_drop_out_of_scope_dir(tmp_path):
+    body = """\
+        def write(cache, rows, k):
+            return cache["k"].at[rows].set(k)
+    """
+    assert findings_for(tmp_path, "training/opt.py", body,
+                        "scatter-drop") == []
+
+
+# ------------------------------------------------------- telemetry-readonly
+
+def test_telemetry_forbidden_import(tmp_path):
+    body = """\
+        from repro.serving.slots import BlockPool
+        import repro.core.spec_decode
+    """
+    fs = findings_for(tmp_path, "serving/telemetry.py", body,
+                      "telemetry-readonly")
+    assert len(fs) == 2
+
+
+def test_telemetry_mutation_call(tmp_path):
+    body = """\
+        def snoop(pool, slot):
+            pool.release(slot)
+            return pool.gauges()
+    """
+    fs = findings_for(tmp_path, "serving/telemetry.py", body,
+                      "telemetry-readonly")
+    assert len(fs) == 1 and ".release()" in fs[0].message
+
+
+def test_telemetry_reads_are_fine(tmp_path):
+    body = """\
+        import numpy as np
+
+        def observe(trace):
+            return float(np.mean([b.duration for b in trace]))
+    """
+    assert findings_for(tmp_path, "serving/telemetry.py", body,
+                        "telemetry-readonly") == []
+
+
+def test_telemetry_rule_only_binds_to_telemetry_module(tmp_path):
+    body = """\
+        def drive(pool, slot):
+            pool.release(slot)
+    """
+    assert findings_for(tmp_path, "serving/scheduler_helpers.py", body,
+                        "telemetry-readonly") == []
+
+
+# -------------------------------------------------------- pallas-index-map
+
+def test_pallas_index_map_captured_local_flagged(tmp_path):
+    body = """\
+        from jax.experimental import pallas as pl
+
+        def kernel(x, table):
+            spec = pl.BlockSpec((1, 128), lambda i, j: (table[i], j))
+            return spec
+    """
+    fs = findings_for(tmp_path, "kernels/k.py", body, "pallas-index-map")
+    assert len(fs) == 1 and "`table`" in fs[0].message
+
+
+def test_pallas_index_map_compute_flagged(tmp_path):
+    body = """\
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        def kernel(x):
+            spec = pl.BlockSpec((1, 128),
+                                lambda i, bt: (jnp.sum(bt[i]), 0))
+            return spec
+    """
+    fs = findings_for(tmp_path, "kernels/k.py", body, "pallas-index-map")
+    assert len(fs) == 1 and "jnp.sum" in fs[0].message
+
+
+def test_pallas_index_map_clamped_prefetch_passes(tmp_path):
+    # the shape PR 5's fused kernel uses: a named def over grid indices +
+    # the scalar-prefetched block table, clamped with jnp.maximum
+    body = """\
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        def kernel(x):
+            def _kv_map(b, j, bt):
+                return (jnp.maximum(bt[b, j], 0), 0, 0, 0)
+
+            specs = [pl.BlockSpec((1, 8, 1, 128), _kv_map),
+                     pl.BlockSpec((1, 8), lambda b, j, bt: (b, 0))]
+            return specs
+    """
+    assert findings_for(tmp_path, "kernels/k.py", body,
+                        "pallas-index-map") == []
+
+
+# ------------------------------------------------------------------ pragmas
+
+def test_pragma_suppresses_same_line(tmp_path):
+    body = """\
+        import numpy as np
+
+        def wrap(x):
+            return np.asarray(x)  # lint: allow-host-sync(test fence)
+    """
+    fs = findings_for(tmp_path, "kernels/w.py", body)
+    assert fs == []
+
+
+def test_pragma_standalone_suppresses_next_line(tmp_path):
+    body = """\
+        import numpy as np
+
+        def wrap(x):
+            # lint: allow-host-sync(test fence)
+            return np.asarray(x)
+    """
+    assert findings_for(tmp_path, "kernels/w.py", body) == []
+
+
+def test_stale_pragma_is_an_error(tmp_path):
+    body = """\
+        def wrap(x):
+            return x + 1  # lint: allow-host-sync(nothing to excuse)
+    """
+    fs = findings_for(tmp_path, "kernels/w.py", body)
+    assert len(fs) == 1
+    assert fs[0].rule == "stale-pragma" and fs[0].severity == "error"
+
+
+def test_pragma_without_reason_is_an_error(tmp_path):
+    body = """\
+        import numpy as np
+
+        def wrap(x):
+            return np.asarray(x)  # lint: allow-host-sync()
+    """
+    fs = findings_for(tmp_path, "kernels/w.py", body)
+    # the reasonless pragma suppresses nothing: original finding + error
+    rules = sorted(f.rule for f in fs)
+    assert rules == ["host-sync", "malformed-pragma"]
+
+
+def test_pragma_only_matches_its_rule(tmp_path):
+    body = """\
+        import numpy as np
+
+        def wrap(x):
+            return np.asarray(x)  # lint: allow-scatter-drop(wrong rule)
+    """
+    rules = sorted(f.rule for f in findings_for(tmp_path, "kernels/w.py",
+                                                body))
+    assert rules == ["host-sync", "stale-pragma"]
+
+
+# ---------------------------------------------------------------- CLI shape
+
+def test_exit_codes(tmp_path, capsys):
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    assert main([str(empty)]) == EXIT_NO_FILES
+    capsys.readouterr()
+    write(tmp_path, "clean/ok.py", "X = 1\n")
+    assert main([str(tmp_path / "clean")]) == EXIT_CLEAN
+    capsys.readouterr()
+    write(tmp_path, "models/bad.py",
+          "def w(cache, r, k):\n    return cache['k'].at[r].set(k)\n")
+    assert main([str(tmp_path / "models")]) == EXIT_FINDINGS
+    capsys.readouterr()
+    assert main([str(tmp_path / "missing")]) == EXIT_USAGE
+    assert main([]) == EXIT_USAGE
+
+
+def test_json_output_sorted_and_stable(tmp_path, capsys):
+    write(tmp_path, "models/bad.py",
+          "def w(cache, r, k):\n"
+          "    a = cache['v'].at[r].set(k)\n"
+          "    b = cache['k'].at[r].set(k)\n"
+          "    return a, b\n")
+    outs = []
+    for _ in range(2):
+        assert main([str(tmp_path), "--json"]) == EXIT_FINDINGS
+        outs.append(capsys.readouterr().out)
+    assert outs[0] == outs[1]
+    payload = json.loads(outs[0])
+    assert [f["line"] for f in payload] == [2, 3]
+    keys = set(payload[0])
+    assert keys == {"file", "line", "col", "rule", "severity", "message"}
+
+
+def test_baseline_subtracts_known_findings(tmp_path, capsys):
+    write(tmp_path, "models/bad.py",
+          "def w(cache, r, k):\n    return cache['k'].at[r].set(k)\n")
+    assert main([str(tmp_path), "--json"]) == EXIT_FINDINGS
+    baseline = tmp_path / "baseline.json"
+    baseline.write_text(capsys.readouterr().out)
+    assert main([str(tmp_path), "--baseline", str(baseline)]) == EXIT_CLEAN
+
+
+def test_syntax_error_is_a_finding(tmp_path):
+    write(tmp_path, "models/broken.py", "def w(:\n")
+    found, _ = lint_paths([str(tmp_path)])
+    assert [f.rule for f in found] == ["parse-error"]
+
+
+# ----------------------------------------------------------- standing gates
+
+def test_repo_tree_is_lint_clean():
+    """The acceptance gate: HEAD carries zero findings (fixes + justified
+    pragmas only)."""
+    findings, n_files = lint_paths([os.path.join(ROOT, "src")])
+    assert n_files > 40
+    assert findings == [], "\n".join(
+        f"{f.file}:{f.line}: {f.rule}: {f.message}" for f in findings)
+
+
+def test_committed_baseline_is_empty():
+    path = os.path.join(ROOT, "tools", "lint", "baseline.json")
+    assert json.load(open(path)) == []
+
+
+def test_citier_lint_tier_fails_on_injected_violation(tmp_path):
+    write(tmp_path, "models/bad.py",
+          "def w(cache, r, k):\n    return cache['k'].at[r].set(k)\n")
+    citier = os.path.join(ROOT, "tools", "citier.py")
+    bad = subprocess.run([sys.executable, citier, "lint", str(tmp_path)],
+                         capture_output=True, text=True)
+    assert bad.returncode == 1, bad.stdout + bad.stderr
+    assert "scatter-drop" in bad.stdout
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    vacuous = subprocess.run([sys.executable, citier, "lint", str(empty)],
+                             capture_output=True, text=True)
+    assert vacuous.returncode == 2  # zero files is loud, not green
+    good = subprocess.run([sys.executable, citier, "lint"],
+                          capture_output=True, text=True)
+    assert good.returncode == 0, good.stdout + good.stderr

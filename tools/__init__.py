@@ -1,0 +1,2 @@
+"""Developer tooling for the repro runtime: the tiered CI runner
+(``tools/citier.py``) and the repro-lint static analyzer (``tools.lint``)."""

@@ -21,15 +21,24 @@ Tiers:
             smoke also runs at the end of fast and full.
   docs    — documentation-hygiene gate only, no pytest: fails when
             README.md or docs/ARCHITECTURE.md is missing, or when any
-            module under src/repro/serving/ lacks a module docstring (the
-            serving layer is the repo's public runtime surface; an
-            undocumented module there is a regression).
+            module under src/repro/serving/, src/repro/core/ or
+            src/repro/kernels/ lacks a module docstring (the serving
+            layer is the repo's public runtime surface and core/kernels
+            carry the invariants; an undocumented module there is a
+            regression).
+  lint    — repro-lint static analysis only (``python -m tools.lint
+            src``): the AST invariant checker for the runtime's standing
+            contracts (docs/ARCHITECTURE.md "Enforced invariants").
+            Nonzero on findings; a run that collects zero files is
+            treated as a failure, same as pytest exit code 5.  Runs at
+            the head of fast and full.
 
 Usage:
   PYTHONPATH=src python tools/citier.py fast [extra pytest args...]
   PYTHONPATH=src python tools/citier.py full
   PYTHONPATH=src python tools/citier.py kernels
   python tools/citier.py docs
+  python tools/citier.py lint [lint targets/flags...]
 
 The runner sets PYTHONPATH itself, then sanity-checks that ``repro`` is
 actually importable with that environment and that pytest collected at
@@ -68,7 +77,12 @@ EXIT_NO_TESTS_COLLECTED = 5
 # files whose absence fails the docs gate
 REQUIRED_DOCS = ["README.md", os.path.join("docs", "ARCHITECTURE.md")]
 # every module here must carry a module docstring
-DOCSTRING_DIRS = [os.path.join("src", "repro", "serving")]
+DOCSTRING_DIRS = [os.path.join("src", "repro", "serving"),
+                  os.path.join("src", "repro", "core"),
+                  os.path.join("src", "repro", "kernels")]
+
+# tiers that open with the repro-lint invariant gate (cheap, pure-AST)
+LINT_TIERS = ("fast", "full")
 
 
 def docs_check() -> int:
@@ -97,6 +111,27 @@ def docs_check() -> int:
           f"({len(REQUIRED_DOCS)} required docs, module docstrings under "
           + ", ".join(DOCSTRING_DIRS) + ")")
     return 0
+
+
+def lint_check(extra=None) -> int:
+    """repro-lint gate (tier ``lint``; also opens the fast/full tiers).
+    Forwards extra CLI args so a fixture directory can be linted in place
+    of the default ``src`` target.  Returns 0 when clean; a zero-file run
+    is loud-failed like a zero-test pytest run."""
+    cmd = [sys.executable, "-m", "tools.lint",
+           *(extra if extra else ["src"])]
+    print("$", " ".join(cmd), flush=True)
+    rc = subprocess.call(cmd, cwd=ROOT)
+    if rc == EXIT_NO_TESTS_COLLECTED:
+        print("citier: repro-lint collected ZERO files — treating the "
+              "vacuous run as a failure (bad target path?)",
+              file=sys.stderr)
+        return 2
+    if rc:
+        print("citier: repro-lint FAILED — the tree violates a standing "
+              "contract (see findings above; fix it or add a justified "
+              "`# lint: allow-<rule>(reason)` pragma)", file=sys.stderr)
+    return rc
 
 
 def build_env() -> dict:
@@ -129,13 +164,19 @@ def main(argv):
     tier = argv[0] if argv else "fast"
     if tier == "docs":
         return docs_check()
+    if tier == "lint":
+        return lint_check(argv[1:])
     if tier not in TIERS:
         print(f"unknown tier {tier!r}; pick one of "
-              f"{sorted([*TIERS, 'docs'])}")
+              f"{sorted([*TIERS, 'docs', 'lint'])}")
         return 2
     rc = docs_check()
     if rc:
         return rc
+    if tier in LINT_TIERS:
+        rc = lint_check()
+        if rc:
+            return rc
     env = build_env()
     check_importable(env)
     cmd = [sys.executable, "-m", "pytest", "-q", *TIERS[tier], *argv[1:]]

@@ -1,0 +1,28 @@
+"""repro-lint: an AST invariant checker for the runtime's standing contracts.
+
+Six PRs of growth left the continuous-batching runtime resting on *prose*
+contracts — explicit shardings on every engine jit (PR 4), ``mode="drop"``
+on ragged-tail KV scatters (PR 3), a read-only telemetry layer (PR 6),
+scalar-prefetch-pure BlockSpec index maps in the fused paged kernel
+(PR 5), and a host-sync-free per-iteration hot path.  This package turns
+each of those into a machine-checked rule over the stdlib ``ast`` — no
+third-party dependencies, no imports of the code under analysis.
+
+Usage::
+
+    python -m tools.lint src              # human-readable findings
+    python -m tools.lint src --json       # sorted, timestamp-free JSON
+    python -m tools.lint src --baseline tools/lint/baseline.json
+
+Findings are suppressed line-by-line with a justified pragma::
+
+    x = np.asarray(dev)  # lint: allow-host-sync(deliberate timing fence)
+
+A pragma on its own line applies to the next line.  A pragma that
+suppresses nothing is *stale* and is itself an error, so suppressions
+cannot outlive the code they excuse.
+
+Exit codes: 0 clean, 1 findings, 2 usage error, 5 zero files collected
+(a vacuous run is a failure, mirroring ``tools/citier.py``).
+"""
+from tools.lint.cli import lint_paths, main  # noqa: F401

@@ -1,0 +1,6 @@
+"""Entry point so the analyzer runs as ``python -m tools.lint src``."""
+import sys
+
+from tools.lint.cli import main
+
+sys.exit(main(sys.argv[1:]))

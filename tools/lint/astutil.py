@@ -1,0 +1,131 @@
+"""Shared AST helpers: parent links, qualnames, import-alias resolution.
+
+Every rule works on the same annotated tree: ``attach_parents`` is run
+once per file by the CLI, and rules use these helpers instead of
+re-walking.  Names are resolved *lexically* — ``np.asarray`` becomes
+``numpy.asarray`` via the file's own import aliases, never by importing
+the module under analysis.
+"""
+from __future__ import annotations
+
+import ast
+import builtins
+from typing import Dict, Iterator, List, Optional, Set
+
+BUILTIN_NAMES = frozenset(dir(builtins))
+
+
+def attach_parents(tree: ast.AST) -> None:
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            child._lint_parent = node  # type: ignore[attr-defined]
+
+
+def parents(node: ast.AST) -> Iterator[ast.AST]:
+    """Ancestors from the immediate parent up to the Module."""
+    cur = getattr(node, "_lint_parent", None)
+    while cur is not None:
+        yield cur
+        cur = getattr(cur, "_lint_parent", None)
+
+
+def enclosing_functions(node: ast.AST) -> List[ast.AST]:
+    """FunctionDef/AsyncFunctionDef ancestors, innermost first."""
+    return [p for p in parents(node)
+            if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef))]
+
+
+def qualname(func: ast.AST) -> str:
+    """Dotted name of a function through its ClassDef/FunctionDef ancestors
+    (no ``<locals>`` markers): ``SpecDecodeEngine.step.body_fn``."""
+    names = [func.name]  # type: ignore[attr-defined]
+    for p in parents(func):
+        if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            names.append(p.name)
+    return ".".join(reversed(names))
+
+
+def module_aliases(tree: ast.AST) -> Dict[str, str]:
+    """Map local names to the dotted import path they denote.
+
+    ``import jax.numpy as jnp``                       -> jnp: jax.numpy
+    ``import numpy as np``                            -> np: numpy
+    ``import jax``                                    -> jax: jax
+    ``from jax.experimental import pallas as pl``     -> pl: jax.experimental.pallas
+    ``from jax import jit``                           -> jit: jax.jit
+    """
+    aliases: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.asname:
+                    aliases[a.asname] = a.name
+                else:
+                    aliases[a.name.split(".")[0]] = a.name.split(".")[0]
+        elif isinstance(node, ast.ImportFrom) and node.level == 0 and node.module:
+            for a in node.names:
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts = []
+    cur = node
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if isinstance(cur, ast.Name):
+        parts.append(cur.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def resolve(node: ast.AST, aliases: Dict[str, str]) -> Optional[str]:
+    """Dotted name with the leading segment expanded through the file's
+    import aliases: ``np.asarray`` -> ``numpy.asarray``."""
+    name = dotted(node)
+    if name is None:
+        return None
+    head, _, rest = name.partition(".")
+    base = aliases.get(head, head)
+    return f"{base}.{rest}" if rest else base
+
+
+def root_name(node: ast.AST) -> Optional[str]:
+    """Base Name id of an Attribute/Subscript chain (``x`` in ``x.a[i].b``)."""
+    cur = node
+    while isinstance(cur, (ast.Attribute, ast.Subscript)):
+        cur = cur.value
+    return cur.id if isinstance(cur, ast.Name) else None
+
+
+def chain_identifiers(node: ast.AST) -> Set[str]:
+    """All identifiers along an Attribute/Subscript chain, e.g.
+    ``self.kv_pool["k"]`` -> {self, kv_pool}."""
+    out: Set[str] = set()
+    cur = node
+    while True:
+        if isinstance(cur, ast.Attribute):
+            out.add(cur.attr)
+            cur = cur.value
+        elif isinstance(cur, ast.Subscript):
+            cur = cur.value
+        elif isinstance(cur, ast.Name):
+            out.add(cur.id)
+            return out
+        else:
+            return out
+
+
+def assigned_names(target: ast.AST) -> Iterator[str]:
+    """Simple Name ids bound by an assignment target (tuples unpacked)."""
+    if isinstance(target, ast.Name):
+        yield target.id
+    elif isinstance(target, (ast.Tuple, ast.List)):
+        for elt in target.elts:
+            yield from assigned_names(elt)
+
+
+def path_parts(relpath: str) -> tuple:
+    return tuple(p for p in relpath.replace("\\", "/").split("/") if p)

@@ -1,0 +1,151 @@
+"""File collection, rule orchestration, and the command-line interface.
+
+``lint_paths(targets)`` is the programmatic surface (used by the tests
+and by ``tools/citier.py``); ``main(argv)`` wraps it with argparse and
+the exit-code contract:
+
+* 0 — clean
+* 1 — findings (after pragma suppression and baseline subtraction)
+* 2 — usage error (unknown target, unreadable baseline)
+* 5 — zero Python files collected (a vacuous run is a failure, the same
+  convention ``tools/citier.py`` applies to pytest exit code 5)
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import json
+import os
+import sys
+from typing import List, Sequence, Tuple
+
+from tools.lint import astutil, pragmas, report
+from tools.lint.report import Finding
+from tools.lint.rules import ALL_RULES, RULE_IDS
+
+EXIT_CLEAN = 0
+EXIT_FINDINGS = 1
+EXIT_USAGE = 2
+EXIT_NO_FILES = 5
+
+SKIP_DIRS = {"__pycache__", ".git", ".pytest_cache", "build", "dist"}
+
+
+def collect_files(targets: Sequence[str]) -> List[str]:
+    """Expand files/directories into a sorted, de-duplicated list of .py
+    paths.  Nonexistent targets raise ValueError (a usage error, not an
+    empty run)."""
+    out = set()
+    for t in targets:
+        if os.path.isfile(t):
+            if t.endswith(".py"):
+                out.add(os.path.normpath(t))
+        elif os.path.isdir(t):
+            for dirpath, dirnames, filenames in os.walk(t):
+                dirnames[:] = sorted(d for d in dirnames
+                                     if d not in SKIP_DIRS)
+                for fn in sorted(filenames):
+                    if fn.endswith(".py"):
+                        out.add(os.path.normpath(os.path.join(dirpath, fn)))
+        else:
+            raise ValueError(f"no such file or directory: {t}")
+    return sorted(out)
+
+
+def lint_file(path: str, relpath: str) -> List[Finding]:
+    with open(path, encoding="utf-8") as f:
+        source = f.read()
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Finding(relpath, e.lineno or 0, (e.offset or 1) - 1,
+                        "parse-error", "error",
+                        f"unparseable: {e.msg}")]
+    astutil.attach_parents(tree)
+    found: List[Finding] = []
+    for rule in ALL_RULES:
+        found.extend(rule.check(tree, source, relpath))
+    prs = pragmas.collect(relpath, source)
+    kept, problems = pragmas.apply(found, prs)
+    return kept + problems
+
+
+def lint_paths(targets: Sequence[str]) -> Tuple[List[Finding], int]:
+    """Lint every .py file under targets.  Returns (sorted findings,
+    number of files examined)."""
+    files = collect_files(targets)
+    findings: List[Finding] = []
+    for path in files:
+        rel = path.replace(os.sep, "/")
+        findings.extend(lint_file(path, rel))
+    return report.sort_findings(findings), len(files)
+
+
+def _apply_baseline(findings: List[Finding],
+                    baseline_path: str) -> List[Finding]:
+    """Subtract baselined findings (matched on file/rule/message so line
+    drift does not resurrect them).  The committed baseline is empty;
+    this exists so a future grandfathering step diffs cleanly."""
+    with open(baseline_path, encoding="utf-8") as f:
+        entries = json.load(f)
+    allowed = {}
+    for e in entries:
+        key = (e["file"], e["rule"], e["message"])
+        allowed[key] = allowed.get(key, 0) + 1
+    kept = []
+    for f_ in findings:
+        key = (f_.file, f_.rule, f_.message)
+        if allowed.get(key, 0) > 0:
+            allowed[key] -= 1
+        else:
+            kept.append(f_)
+    return kept
+
+
+def main(argv: Sequence[str] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.lint",
+        description="repro-lint: AST invariant checker for the runtime's "
+                    f"standing contracts (rules: {', '.join(RULE_IDS)})")
+    parser.add_argument("targets", nargs="*",
+                        help="files or directories to lint (e.g. src)")
+    parser.add_argument("--json", action="store_true", dest="as_json",
+                        help="emit sorted JSON findings (baseline format)")
+    parser.add_argument("--baseline", metavar="PATH",
+                        help="JSON findings file to subtract (the committed "
+                             "baseline is empty)")
+    args = parser.parse_args(argv)
+
+    if not args.targets:
+        print("repro-lint: no targets given (try: python -m tools.lint src)",
+              file=sys.stderr)
+        return EXIT_USAGE
+    try:
+        findings, n_files = lint_paths(args.targets)
+    except ValueError as e:
+        print(f"repro-lint: {e}", file=sys.stderr)
+        return EXIT_USAGE
+    if n_files == 0:
+        print("repro-lint: zero Python files collected — refusing to report "
+              "a vacuous pass", file=sys.stderr)
+        return EXIT_NO_FILES
+    if args.baseline:
+        try:
+            findings = _apply_baseline(findings, args.baseline)
+        except (OSError, ValueError, KeyError) as e:
+            print(f"repro-lint: cannot apply baseline {args.baseline}: {e}",
+                  file=sys.stderr)
+            return EXIT_USAGE
+
+    if args.as_json:
+        sys.stdout.write(report.render_json(findings))
+    else:
+        body = report.render_human(findings)
+        if body:
+            print(body)
+        print(report.summarize(findings, n_files))
+    return EXIT_FINDINGS if findings else EXIT_CLEAN
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,92 @@
+"""Suppression pragmas: ``# lint: allow-<rule>(reason)``.
+
+A pragma binds to the findings of its rule on a single line:
+
+* on a code line, it suppresses that line's findings;
+* on a line of its own, it suppresses the *next* line's findings (for
+  statements too long to carry a trailing comment).
+
+Two failure modes are themselves findings, so suppressions stay honest:
+
+* a pragma with an empty reason is ``malformed-pragma`` (and suppresses
+  nothing — the reason is the point);
+* a pragma whose rule produced no finding on its target line is
+  ``stale-pragma`` — the violation it excused is gone, delete it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Iterable, List, Tuple
+
+from tools.lint.report import Finding
+
+PRAGMA_RE = re.compile(r"#\s*lint:\s*allow-([A-Za-z0-9_-]+)\(([^()]*)\)")
+
+
+@dataclasses.dataclass
+class Pragma:
+    file: str
+    line: int          # line the pragma comment sits on (1-based)
+    rule: str
+    reason: str
+    target_line: int   # line whose findings it suppresses
+    used: int = 0      # findings suppressed (stale when 0)
+
+    @property
+    def valid(self) -> bool:
+        return bool(self.reason.strip())
+
+
+def collect(relpath: str, source: str) -> List[Pragma]:
+    """Scan source lines for pragmas.  Standalone comment lines target the
+    following line; trailing comments target their own line."""
+    out = []
+    for lineno, text in enumerate(source.splitlines(), start=1):
+        for m in PRAGMA_RE.finditer(text):
+            before = text[:m.start()].strip()
+            standalone = before == "" or before.startswith("#")
+            target = lineno + 1 if standalone else lineno
+            out.append(Pragma(file=relpath, line=lineno, rule=m.group(1),
+                              reason=m.group(2), target_line=target))
+    return out
+
+
+def apply(findings: Iterable[Finding],
+          pragmas: List[Pragma]) -> Tuple[List[Finding], List[Finding]]:
+    """Split findings into (kept, pragma-problems).
+
+    Kept findings are the ones no valid pragma covers.  Pragma problems
+    are malformed (no reason) and stale (suppressed nothing) pragmas,
+    both errors.
+    """
+    by_target = {}
+    for p in pragmas:
+        if p.valid:
+            by_target.setdefault((p.file, p.target_line, p.rule), []).append(p)
+
+    kept = []
+    for f in findings:
+        covering = by_target.get((f.file, f.line, f.rule))
+        if covering:
+            for p in covering:
+                p.used += 1
+        else:
+            kept.append(f)
+
+    problems = []
+    for p in pragmas:
+        if not p.valid:
+            problems.append(Finding(
+                file=p.file, line=p.line, col=0, rule="malformed-pragma",
+                severity="error",
+                message=(f"pragma allow-{p.rule} has no reason — write "
+                         f"`# lint: allow-{p.rule}(why this is safe)`")))
+        elif p.used == 0:
+            problems.append(Finding(
+                file=p.file, line=p.line, col=0, rule="stale-pragma",
+                severity="error",
+                message=(f"pragma allow-{p.rule} suppresses nothing on line "
+                         f"{p.target_line} — stale pragmas are errors; "
+                         f"delete it")))
+    return kept, problems

@@ -1,0 +1,57 @@
+"""Finding record and deterministic rendering (human + JSON).
+
+Output is sorted by (file, line, col, rule, message) and carries no
+timestamps or absolute paths, so ``--json`` runs diff cleanly against the
+committed baseline and against each other across machines.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Iterable, List
+
+SEVERITIES = ("error", "warning")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a file:line:col location."""
+
+    file: str       # path with forward slashes, as passed on the CLI
+    line: int       # 1-based
+    col: int        # 0-based (ast convention)
+    rule: str       # rule id, e.g. "host-sync"
+    severity: str   # "error" | "warning"
+    message: str
+
+    def sort_key(self):
+        return (self.file, self.line, self.col, self.rule, self.message)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def sort_findings(findings: Iterable[Finding]) -> List[Finding]:
+    return sorted(findings, key=Finding.sort_key)
+
+
+def render_human(findings: Iterable[Finding]) -> str:
+    lines = [f"{f.file}:{f.line}:{f.col}: [{f.severity}] {f.rule}: {f.message}"
+             for f in sort_findings(findings)]
+    return "\n".join(lines)
+
+
+def render_json(findings: Iterable[Finding]) -> str:
+    """A sorted JSON array of finding objects — the baseline file format."""
+    payload = [f.to_dict() for f in sort_findings(findings)]
+    return json.dumps(payload, indent=2, sort_keys=True) + "\n"
+
+
+def summarize(findings: Iterable[Finding], n_files: int) -> str:
+    fs = list(findings)
+    errors = sum(1 for f in fs if f.severity == "error")
+    warnings = len(fs) - errors
+    if not fs:
+        return f"repro-lint: {n_files} files, clean"
+    return (f"repro-lint: {n_files} files, {len(fs)} findings "
+            f"({errors} errors, {warnings} warnings)")

@@ -1,0 +1,22 @@
+"""Rule registry: one module per rule family, each exposing
+
+* ``RULE`` — the rule id used in findings and ``allow-<rule>`` pragmas,
+* ``check(tree, source, relpath)`` — returns a list of Findings; the rule
+  itself decides applicability from ``relpath`` (so test fixtures in a
+  tmpdir exercise the same path-scoping as the real tree).
+
+The tree passed to ``check`` already has parent links attached
+(``astutil.attach_parents``).
+"""
+from tools.lint.rules import (host_sync, jit_shardings, pallas_purity,
+                              scatter_mode, telemetry_readonly)
+
+ALL_RULES = [
+    host_sync,
+    jit_shardings,
+    scatter_mode,
+    telemetry_readonly,
+    pallas_purity,
+]
+
+RULE_IDS = tuple(m.RULE for m in ALL_RULES)

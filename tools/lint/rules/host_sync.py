@@ -1,0 +1,166 @@
+"""host-sync: no device→host round-trips on the per-iteration hot path.
+
+Every ``.item()``, ``np.asarray``, ``jax.device_get`` or
+``.block_until_ready()`` inside the decode loop stalls the accelerator
+pipeline for a full transfer latency — per *iteration*, which at s=4
+speculation means several times per generated token.  The hot zones are:
+
+* ``core/spec_decode.py`` — ``SpecDecodeEngine.step`` / ``retire_slot``
+  and the jitted ``make_spec_step`` body;
+* ``serving/scheduler.py`` — the live backend's ``prefill`` /
+  ``prefill_chunk`` / ``step`` / ``preempt`` and the scheduler ``run``
+  loop (the ``SimStepBackend`` is pure host code and exempt);
+* everything under ``kernels/`` (kernel wrappers run inside jit traces,
+  where a host sync is either a tracer error waiting to happen or a
+  silent recompile trigger).
+
+Deliberate step-boundary syncs (timing fences, commit-count reads that
+drive host block accounting) carry ``# lint: allow-host-sync(reason)``.
+
+``np.asarray``/``np.array`` over a literal list/tuple is downgraded to a
+*warning*: it never blocks on a device transfer, but it does allocate
+per iteration.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set
+
+from tools.lint import astutil
+from tools.lint.report import Finding
+
+RULE = "host-sync"
+
+# file-suffix -> hot function qualnames (nested defs inherit hotness)
+HOT_QUALNAMES = {
+    ("core", "spec_decode.py"): (
+        "SpecDecodeEngine.step",
+        "SpecDecodeEngine.retire_slot",
+        "make_spec_step",
+    ),
+    ("serving", "scheduler.py"): (
+        "ContinuousEngineBackend.prefill",
+        "ContinuousEngineBackend.prefill_chunk",
+        "ContinuousEngineBackend.step",
+        "ContinuousEngineBackend.preempt",
+        "ContinuousScheduler.run",
+    ),
+}
+
+SYNC_FUNCS = {"jax.device_get"}
+NUMPY_CONVERTERS = {"numpy.asarray", "numpy.array"}
+JAX_MODULES = ("jax", "jax.numpy")
+
+
+def _hot_zone(relpath: str):
+    """(kind, qualnames): kind is 'all' for kernels/, 'named' for the two
+    engine files, None when the rule does not apply to this file."""
+    parts = astutil.path_parts(relpath)
+    if "kernels" in parts:
+        return "all", ()
+    for suffix, quals in HOT_QUALNAMES.items():
+        if parts[-len(suffix):] == suffix:
+            return "named", quals
+    return None, ()
+
+
+def _is_hot(call: ast.AST, kind: str, quals) -> bool:
+    funcs = astutil.enclosing_functions(call)
+    if not funcs:
+        return False  # module-level code runs once at import, not per step
+    if kind == "all":
+        return True
+    for fn in funcs:
+        q = astutil.qualname(fn)
+        if any(q == h or q.startswith(h + ".") for h in quals):
+            return True
+    return False
+
+
+def _traced_names(funcs, aliases) -> Set[str]:
+    """Names assigned (anywhere in the enclosing function chain) from an
+    expression that touches jax/jnp — a cheap lexical stand-in for 'this
+    local is a device value'."""
+    traced: Set[str] = set()
+    seen: Set[int] = set()
+    for fn in funcs:
+        if id(fn) in seen:
+            continue
+        seen.add(id(fn))
+        for node in ast.walk(fn):
+            if not isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                continue
+            value = node.value
+            if value is None:
+                continue
+            jaxy = False
+            for sub in ast.walk(value):
+                if isinstance(sub, ast.Name) and \
+                        aliases.get(sub.id) in JAX_MODULES:
+                    jaxy = True
+                    break
+            if not jaxy:
+                continue
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for t in targets:
+                traced.update(astutil.assigned_names(t))
+    return traced
+
+
+def check(tree: ast.AST, source: str, relpath: str) -> List[Finding]:
+    kind, quals = _hot_zone(relpath)
+    if kind is None:
+        return []
+    aliases = astutil.module_aliases(tree)
+    traced_cache: Dict[int, Set[str]] = {}
+    findings: List[Finding] = []
+
+    def emit(node, message, severity="error"):
+        findings.append(Finding(relpath, node.lineno, node.col_offset,
+                                RULE, severity, message))
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call) or not _is_hot(node, kind, quals):
+            continue
+        func = node.func
+
+        if isinstance(func, ast.Attribute):
+            if func.attr == "item" and not node.args and not node.keywords:
+                emit(node, ".item() forces a device→host sync inside a "
+                           "per-iteration hot path")
+                continue
+            if func.attr == "block_until_ready":
+                emit(node, ".block_until_ready() stalls the dispatch "
+                           "pipeline inside a per-iteration hot path")
+                continue
+
+        resolved = astutil.resolve(func, aliases)
+        if resolved in SYNC_FUNCS:
+            emit(node, f"{resolved}() copies device memory to host inside "
+                       "a per-iteration hot path")
+            continue
+        if resolved in NUMPY_CONVERTERS:
+            arg = node.args[0] if node.args else None
+            if isinstance(arg, (ast.List, ast.Tuple, ast.Constant, ast.Dict)):
+                emit(node, f"{resolved}() over a literal allocates host "
+                           "memory every iteration (no device sync, but "
+                           "hoist it out of the loop)", severity="warning")
+            else:
+                emit(node, f"{resolved}() on a (potential) device value "
+                           "blocks on the transfer inside a per-iteration "
+                           "hot path")
+            continue
+        if isinstance(func, ast.Name) and func.id in ("int", "float", "bool") \
+                and len(node.args) == 1 and not node.keywords:
+            root = astutil.root_name(node.args[0])
+            if root is not None:
+                funcs = astutil.enclosing_functions(node)
+                key = id(funcs[0])
+                if key not in traced_cache:
+                    traced_cache[key] = _traced_names(funcs, aliases)
+                if root in traced_cache[key]:
+                    emit(node, f"{func.id}() on traced value `{root}` "
+                               "forces a device→host sync inside a "
+                               "per-iteration hot path")
+    return findings

@@ -1,0 +1,102 @@
+"""jit-sharding: engine jits must be explicitly sharded (PR 4's contract).
+
+Every ``jax.jit`` in engine code (``core/`` and ``launch/specs.py``) must
+either pass *both* ``in_shardings`` and ``out_shardings``, or sit in a
+recognized unsharded branch — the body of an ``if sh is None:`` (or the
+else of ``... is not None``), including the conditional-expression form
+``jax.jit(fn) if sh is None else jax.jit(fn, in_shardings=...)``.
+
+A bare ``jax.jit`` outside such a branch compiles with whatever sharding
+GSPMD infers, which on the production mesh silently replicates the KV
+pool — exactly the regression PR 4's prose contract exists to prevent.
+The training driver (``launch/train.py``) is out of scope: its jits are
+single-host ``donate_argnums`` steps, not the serving engine.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from tools.lint import astutil
+from tools.lint.report import Finding
+
+RULE = "jit-sharding"
+
+JIT_NAMES = {"jax.jit"}
+SHARDING_KWARGS = {"in_shardings", "out_shardings"}
+
+
+def _applies(relpath: str) -> bool:
+    parts = astutil.path_parts(relpath)
+    return "core" in parts or parts[-2:] == ("launch", "specs.py")
+
+
+def _none_test_kinds(test: ast.AST) -> Set[str]:
+    """{'is_none', 'is_not_none'} memberships found anywhere in a test
+    expression (covers ``sh is None or B != cap`` BoolOps)."""
+    kinds: Set[str] = set()
+    for node in ast.walk(test):
+        if not isinstance(node, ast.Compare):
+            continue
+        for op, comparator in zip(node.ops, node.comparators):
+            is_none_const = (isinstance(comparator, ast.Constant)
+                             and comparator.value is None)
+            if not is_none_const:
+                continue
+            if isinstance(op, ast.Is):
+                kinds.add("is_none")
+            elif isinstance(op, ast.IsNot):
+                kinds.add("is_not_none")
+    return kinds
+
+
+def _in_unsharded_branch(call: ast.Call) -> bool:
+    """True when the bare jit sits in the unsharded side of a None-check:
+    the body of ``if sh is None`` / else of ``if sh is not None`` (both
+    statement If and conditional-expression IfExp forms)."""
+    child: ast.AST = call
+    for parent in astutil.parents(call):
+        if isinstance(parent, ast.If):
+            in_body = any(child is stmt for stmt in parent.body)
+            in_orelse = any(child is stmt for stmt in parent.orelse)
+            kinds = _none_test_kinds(parent.test)
+            if (in_body and "is_none" in kinds) or \
+                    (in_orelse and "is_not_none" in kinds):
+                return True
+        elif isinstance(parent, ast.IfExp):
+            kinds = _none_test_kinds(parent.test)
+            if (child is parent.body and "is_none" in kinds) or \
+                    (child is parent.orelse and "is_not_none" in kinds):
+                return True
+        child = parent
+    return False
+
+
+def check(tree: ast.AST, source: str, relpath: str) -> List[Finding]:
+    if not _applies(relpath):
+        return []
+    aliases = astutil.module_aliases(tree)
+    findings: List[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if astutil.resolve(node.func, aliases) not in JIT_NAMES:
+            continue
+        present = {kw.arg for kw in node.keywords} & SHARDING_KWARGS
+        if present == SHARDING_KWARGS:
+            continue
+        if present:
+            missing = (SHARDING_KWARGS - present).pop()
+            findings.append(Finding(
+                relpath, node.lineno, node.col_offset, RULE, "error",
+                f"jax.jit passes {present.pop()} but not {missing} — "
+                "engine jits shard both sides explicitly"))
+            continue
+        if _in_unsharded_branch(node):
+            continue
+        findings.append(Finding(
+            relpath, node.lineno, node.col_offset, RULE, "error",
+            "bare jax.jit in engine code: pass explicit in_shardings/"
+            "out_shardings, or guard the unsharded fallback with an "
+            "`... is None` branch"))
+    return findings

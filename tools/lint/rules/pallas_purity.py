@@ -1,0 +1,169 @@
+"""pallas-index-map: BlockSpec index maps are pure address arithmetic.
+
+PR 5's fused paged-attention kernel streams KV through the block table
+*inside* the kernel by scalar-prefetching the table and letting each
+BlockSpec index map pick the next block: the index map runs on the
+scalar core ahead of the DMA engine, so it may touch only its own
+parameters (grid indices + scalar-prefetch refs) and closed-form scalar
+math.  A captured tracer silently becomes a constant at trace time; a
+``jnp`` reduction inside the map runs per grid step on the scalar core.
+Both break the prefetch pipeline the fused kernel depends on.
+
+The rule inspects every ``pl.BlockSpec(...)`` in ``kernels/`` (lambda or
+locally-defined function) and flags (a) free variables that are not
+module-level names/imports/builtins — i.e. values captured from the
+enclosing function scope — and (b) calls outside a small scalar-safe
+allowlist (``jnp.maximum``-style clamps and ``pl.cdiv``-style helpers).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from tools.lint import astutil
+from tools.lint.report import Finding
+
+RULE = "pallas-index-map"
+
+ALLOWED_CALLS = {
+    "jax.numpy.maximum", "jax.numpy.minimum", "jax.numpy.clip",
+    "jax.numpy.where", "jax.numpy.mod", "jax.numpy.floor_divide",
+    "jax.experimental.pallas.cdiv", "jax.experimental.pallas.ds",
+    "jax.experimental.pallas.multiple_of",
+}
+ALLOWED_BUILTIN_CALLS = {"min", "max", "int", "divmod"}
+ALLOWED_METHODS = {"astype"}
+
+
+def _applies(relpath: str) -> bool:
+    return "kernels" in astutil.path_parts(relpath)
+
+
+def _module_scope_names(tree: ast.Module) -> Set[str]:
+    """Names bound at module level: imports, defs, constants.  These are
+    static at trace time, so an index map may read them."""
+    names: Set[str] = set()
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            names.add(node.name)
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                names.update(astutil.assigned_names(t))
+        elif isinstance(node, ast.AnnAssign) and isinstance(node.target,
+                                                            ast.Name):
+            names.add(node.target.id)
+        elif isinstance(node, ast.Import):
+            for a in node.names:
+                names.add(a.asname or a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom):
+            for a in node.names:
+                names.add(a.asname or a.name)
+    return names
+
+
+def _local_binds(fn: ast.AST) -> Set[str]:
+    """Names bound inside the index map itself: params, local assigns,
+    comprehension targets."""
+    binds: Set[str] = set()
+    args = fn.args
+    for a in [*args.posonlyargs, *args.args, *args.kwonlyargs]:
+        binds.add(a.arg)
+    if args.vararg:
+        binds.add(args.vararg.arg)
+    if args.kwarg:
+        binds.add(args.kwarg.arg)
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for t in targets:
+                binds.update(astutil.assigned_names(t))
+        elif isinstance(node, ast.comprehension):
+            binds.update(astutil.assigned_names(node.target))
+    return binds
+
+
+def _index_map_expr(call: ast.Call) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == "index_map":
+            return kw.value
+    if len(call.args) >= 2:
+        return call.args[1]
+    return None
+
+
+def _check_map(fn: ast.AST, module_names: Set[str], aliases: Dict[str, str],
+               relpath: str, findings: List[Finding]) -> None:
+    binds = _local_binds(fn)
+    body = fn.body if isinstance(fn, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)) else [fn.body]
+    for stmt in body:
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+                name = node.id
+                if name in binds or name in module_names \
+                        or name in astutil.BUILTIN_NAMES:
+                    continue
+                findings.append(Finding(
+                    relpath, node.lineno, node.col_offset, RULE, "error",
+                    f"BlockSpec index map reads `{name}` from the enclosing "
+                    "function scope — index maps may close over grid "
+                    "indices and scalar-prefetch refs only"))
+            elif isinstance(node, ast.Call):
+                func = node.func
+                if isinstance(func, ast.Name):
+                    if func.id in ALLOWED_BUILTIN_CALLS or func.id in binds:
+                        continue
+                    resolved = aliases.get(func.id, func.id)
+                    if resolved in ALLOWED_CALLS:
+                        continue
+                    display = func.id
+                elif isinstance(func, ast.Attribute):
+                    resolved = astutil.resolve(func, aliases)
+                    if resolved in ALLOWED_CALLS:
+                        continue
+                    if func.attr in ALLOWED_METHODS:
+                        continue
+                    display = astutil.dotted(func) or func.attr
+                else:
+                    display = "<expr>"
+                findings.append(Finding(
+                    relpath, node.lineno, node.col_offset, RULE, "error",
+                    f"`{display}(...)` inside a BlockSpec index map — index "
+                    "maps must be pure block-address arithmetic (allowed: "
+                    "clamps like jnp.maximum/minimum/clip and pl.cdiv/ds)"))
+
+
+def check(tree: ast.AST, source: str, relpath: str) -> List[Finding]:
+    if not _applies(relpath):
+        return []
+    aliases = astutil.module_aliases(tree)
+    module_names = _module_scope_names(tree)
+    # locally-defined functions, for resolving named index maps
+    local_defs: Dict[str, List[ast.FunctionDef]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            local_defs.setdefault(node.name, []).append(node)
+
+    findings: List[Finding] = []
+    checked: Set[int] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = astutil.dotted(node.func)
+        if not (name == "BlockSpec" or (name and name.endswith(".BlockSpec"))):
+            continue
+        expr = _index_map_expr(node)
+        if expr is None:
+            continue
+        if isinstance(expr, ast.Lambda):
+            _check_map(expr, module_names, aliases, relpath, findings)
+        elif isinstance(expr, ast.Name):
+            for fn in local_defs.get(expr.id, []):
+                if id(fn) not in checked:
+                    checked.add(id(fn))
+                    _check_map(fn, module_names, aliases, relpath, findings)
+        # anything else (e.g. functools.partial) is opaque; stay silent
+        # rather than guess — the fixture tests pin the supported shapes
+    return findings

@@ -1,0 +1,84 @@
+"""scatter-drop: ragged-tail KV scatters must say ``mode="drop"``.
+
+PR 3's invariant: chunked prefill and speculative commit write *ragged*
+token tails into the KV cache — every ``.at[...].set/.add`` into a
+KV-cache/pool array masks its out-of-range rows by scattering them to a
+sentinel index, and ``mode="drop"`` is what makes that sentinel a no-op
+instead of an out-of-bounds clamp that corrupts row 0 / row L-1.  The
+rule requires the mode to be *explicit* on every cache write in
+``models/`` and ``kernels/`` — including the in-bounds ring-buffer
+writes, where it is a semantic no-op but keeps the contract visible.
+
+A write is "cache-like" when it subscripts a known KV leaf key
+(``cache["k"]`` …), when any identifier on the chain contains ``cache``
+or ``pool``, or when it targets the scan-carried KV leaf names
+(``lk``/``lv``/``nk``/``nv``) used by the recurrent models.  Expert-
+routing buffers in ``moe.py`` match none of these and stay out of scope.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import List
+
+from tools.lint import astutil
+from tools.lint.report import Finding
+
+RULE = "scatter-drop"
+
+KV_KEYS = {"k", "v", "pos", "bt", "k_scale", "v_scale", "ckv", "krope",
+           "xk", "xv"}
+CACHE_NAME_RE = re.compile(r"cache|pool", re.IGNORECASE)
+KV_LEAF_NAMES = {"lk", "lv", "nk", "nv"}
+SCATTER_METHODS = {"set", "add"}
+
+
+def _applies(relpath: str) -> bool:
+    parts = astutil.path_parts(relpath)
+    return "models" in parts or "kernels" in parts
+
+
+def _cache_like(target: ast.AST) -> bool:
+    if isinstance(target, ast.Subscript):
+        sl = target.slice
+        if isinstance(sl, ast.Constant) and isinstance(sl.value, str) \
+                and sl.value in KV_KEYS:
+            return True
+    if isinstance(target, ast.Name) and target.id in KV_LEAF_NAMES:
+        return True
+    return any(CACHE_NAME_RE.search(ident)
+               for ident in astutil.chain_identifiers(target))
+
+
+def _mode_is_drop(call: ast.Call) -> bool:
+    for kw in call.keywords:
+        if kw.arg == "mode":
+            return (isinstance(kw.value, ast.Constant)
+                    and kw.value.value == "drop")
+    return False
+
+
+def check(tree: ast.AST, source: str, relpath: str) -> List[Finding]:
+    if not _applies(relpath):
+        return []
+    findings: List[Finding] = []
+    for node in ast.walk(tree):
+        # match  <target>.at[<idx>].set(...) / .add(...)
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in SCATTER_METHODS
+                and isinstance(node.func.value, ast.Subscript)
+                and isinstance(node.func.value.value, ast.Attribute)
+                and node.func.value.value.attr == "at"):
+            continue
+        target = node.func.value.value.value
+        if not _cache_like(target):
+            continue
+        if _mode_is_drop(node):
+            continue
+        findings.append(Finding(
+            relpath, node.lineno, node.col_offset, RULE, "error",
+            f".at[...].{node.func.attr}() into a KV-cache/pool array "
+            'without mode="drop" — ragged-tail scatters clamp out-of-'
+            "bounds rows into live cache slots unless dropped"))
+    return findings

@@ -1,0 +1,85 @@
+"""telemetry-readonly: the observer may not touch the pipeline (PR 6).
+
+``serving/telemetry.py``'s standing contract is that attaching or
+detaching the hub never changes scheduler decisions, pool state, or
+model outputs — the parity tests prove it at runtime, this rule enforces
+it structurally: telemetry may not *import* engine/model/kernel modules
+(so it cannot construct or reach into them) and may not *call* the
+pool/engine mutation API surface by name on any object it is handed.
+
+numpy, json, sys and lazy ``import jax`` (for ``jax.profiler`` trace
+spans) are fine: they read, they never steer.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.lint import astutil
+from tools.lint.report import Finding
+
+RULE = "telemetry-readonly"
+
+FORBIDDEN_IMPORT_PREFIXES = (
+    "repro.core",
+    "repro.models",
+    "repro.kernels",
+    "repro.launch",
+    "repro.training",
+    "repro.serving.scheduler",
+    "repro.serving.slots",
+    "repro.serving.server",
+)
+# sibling modules reachable by relative import (from . import slots)
+FORBIDDEN_SIBLINGS = {"scheduler", "slots", "server", "spec_decode"}
+
+# the engine/pool mutation API surface, by method name
+MUTATORS = {
+    "prefill", "prefill_chunk", "prefill_into", "prefill_chunk_into",
+    "step", "retire", "retire_slot", "preempt", "run",
+    "claim", "release", "consume", "ensure", "commit",
+    "init_slots", "set_paged_fused", "mark_pending", "clear_pending",
+    "free_blocks", "grow",
+}
+
+
+def _applies(relpath: str) -> bool:
+    parts = astutil.path_parts(relpath)
+    return parts[-2:] == ("serving", "telemetry.py")
+
+
+def check(tree: ast.AST, source: str, relpath: str) -> List[Finding]:
+    if not _applies(relpath):
+        return []
+    findings: List[Finding] = []
+
+    def emit(node, message):
+        findings.append(Finding(relpath, node.lineno, node.col_offset,
+                                RULE, "error", message))
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name.startswith(FORBIDDEN_IMPORT_PREFIXES):
+                    emit(node, f"telemetry imports `{a.name}` — the "
+                               "observer must not reach the engine/pool "
+                               "layer (read-only contract)")
+        elif isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            if node.level == 0 and mod.startswith(FORBIDDEN_IMPORT_PREFIXES):
+                emit(node, f"telemetry imports from `{mod}` — the observer "
+                           "must not reach the engine/pool layer "
+                           "(read-only contract)")
+            elif node.level > 0:
+                names = {mod.split(".")[0]} | {a.name for a in node.names}
+                hit = sorted(names & FORBIDDEN_SIBLINGS)
+                if hit:
+                    emit(node, f"telemetry imports sibling module "
+                               f"`{hit[0]}` — the observer must not reach "
+                               "the engine/pool layer (read-only contract)")
+        elif isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute):
+            if node.func.attr in MUTATORS:
+                emit(node, f"telemetry calls mutation API `.{node.func.attr}"
+                           "()` — the observer reads spans and gauges, it "
+                           "never steers the pipeline")
+    return findings
