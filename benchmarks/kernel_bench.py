@@ -39,6 +39,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import sys
 import time
 from typing import Dict, List, Optional, Tuple
 
@@ -46,7 +47,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:           # `python benchmarks/kernel_bench.py`
+    sys.path.insert(0, _ROOT)       # puts benchmarks/ first, not the root
+
 from repro.kernels.paged import gather_verify_attn, paged_verify_attn
+from tools.graphlint.passes.materialize import find_gathered_views
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
 OUT_PATH = os.path.join(RESULTS, "BENCH_kernels.json")
@@ -99,15 +105,14 @@ def best_us(fn, args, repeats: int = 7, inner: int = 10) -> float:
 
 def materializes_view(fn, args, B: int, MAXB: int, bs: int) -> bool:
     """True iff the traced computation builds a [.., MAXB*bs, ..] logical
-    view (the gathered copy the fused kernel exists to eliminate)."""
-    L = MAXB * bs
+    view (the gathered copy the fused kernel exists to eliminate).
+
+    Detection lives in tools/graphlint (the engine-level
+    no-materialization pass uses the same ``find_gathered_views`` over
+    every registered step/chunk jit); here the bare kernel call is the
+    whole trace, so no trailing-dims narrowing is needed."""
     jaxpr = jax.make_jaxpr(fn)(*args)
-    for eqn in jaxpr.jaxpr.eqns:
-        for av in eqn.outvars:
-            sh = tuple(getattr(av.aval, "shape", ()))
-            if len(sh) >= 2 and L in sh[:2]:
-                return True
-    return False
+    return bool(find_gathered_views(jaxpr.jaxpr, MAXB * bs))
 
 
 def temp_bytes(fn, args) -> Optional[int]:

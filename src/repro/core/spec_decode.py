@@ -75,7 +75,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import time
-from functools import partial
+from functools import partial, wraps
 from typing import Any, Dict, Optional, TYPE_CHECKING, Tuple
 
 import jax
@@ -150,13 +150,64 @@ class PoolShardings:
         return self.dcache if self.dcache is not None else self.rep
 
 
+@dataclasses.dataclass
+class JitEntry:
+    """One live engine jit, registered for graph-lint (tools/graphlint).
+
+    Every jit the engine builds goes through
+    :meth:`SpecDecodeEngine._register_jit`, which records the compiled
+    function together with its standing contracts — which argnums carry KV
+    pool / cache leaves and must be donated (``kv_args``), the declared
+    output shardings of a sharded pool, whether the paged fused path may
+    legally materialize a gathered-KV view — plus a trace counter and the
+    arg/out ShapeDtypeStructs captured at trace time, so graph-lint can
+    re-lower exactly the jits the dispatch loop runs instead of a drifting
+    hand-maintained list.
+    """
+    name: str                      # jit family: step / prefill / inject / ...
+    key: Tuple                     # engine cache key, e.g. (B, s) for step
+    hot: bool                      # dispatched inside the serving iteration
+    kv_args: Tuple[int, ...]       # argnums that carry pool/cache leaves
+    donate: Tuple[int, ...]        # argnums actually passed to donate_argnums
+    sharded: bool                  # built with explicit in/out shardings
+    out_shardings: Any             # declared out_shardings tree (or None)
+    paged_rows: Optional[int]      # paged pool logical_len (gather-view rows)
+    paged_fused: Any               # tcfg.paged_fused at build time
+    src_file: str                  # def site of the traced fn
+    src_line: int
+    fn: Any = None                 # the jax.jit-wrapped callable
+    n_traces: int = 0              # incremented on every (re)trace
+    arg_specs: Any = None          # ShapeDtypeStruct tree of the last trace
+    out_specs: Any = None
+
+
+def _trace_spec(x):
+    """ShapeDtypeStruct of a leaf seen during tracing (tracers carry avals)."""
+    aval = getattr(x, "aval", None)
+    if aval is not None:
+        return jax.ShapeDtypeStruct(aval.shape, aval.dtype)
+    return jax.ShapeDtypeStruct(jnp.shape(x), jnp.result_type(x))
+
+
+def _copy_arrays(tree):
+    """Deep-copy every jax.Array leaf of ``tree`` (sharding-preserving).
+
+    Warm (compile-only) dispatches discard their results; with buffer
+    donation the call would otherwise invalidate the *live* pool buffers it
+    was handed, so warm paths feed the jits disposable copies instead.
+    """
+    return jax.tree.map(
+        lambda x: jnp.copy(x) if isinstance(x, jax.Array) else x, tree)
+
+
 class SpecDecodeEngine:
     """Target + draft pair with adaptive-ready batched speculative stepping."""
 
     def __init__(self, target_cfg: ModelConfig, draft_cfg: Optional[ModelConfig],
                  max_new: int = 128, eos_id: int = -1, dtype=jnp.float32,
                  sample: bool = False, temperature: float = 1.0,
-                 paged_fused: Optional[bool] = None):
+                 paged_fused: Optional[bool] = None,
+                 donate: bool = True):
         if paged_fused is not None:
             # route the paged-pool attention (kernels/paged.py): None = auto
             # (fused on TPU, gather reference on CPU), True = force the
@@ -173,6 +224,15 @@ class SpecDecodeEngine:
         self.dtype = dtype
         self.sample = sample
         self.temperature = temperature
+        # buffer donation for the KV pool / cache leaves of every state-
+        # threading jit (step / inject / retire / chunk): each dispatch
+        # reuses its input pool buffers for the outputs instead of double-
+        # buffering the multi-GB pool.  donate=False keeps the old copying
+        # semantics — callers that re-step a *stale* DecodeState (the input
+        # buffers of a previous step) need it, since donation deletes those
+        # buffers.  graph-lint's donation pass is the standing proof that
+        # the default stays on and actually aliases in the lowered HLO.
+        self.donate = donate
         # opt-in device-side phase tracing (serving/telemetry.py): when
         # True, every jit dispatch runs under a jax.profiler.TraceAnnotation
         # scope so a profiler trace attributes device time per serving
@@ -192,6 +252,11 @@ class SpecDecodeEngine:
         self._chunk_fns: Dict[Tuple, Any] = {}
         self._chunk_begin_fns: Dict[bool, Any] = {}
         self._chunk_commit_fns: Dict[bool, Any] = {}
+        # graph-lint jit registry: one JitEntry per live compiled function,
+        # keyed (name, key).  Populated by _register_jit as the caches above
+        # fill; cleared with them so the registry never outlives a sharding
+        # or kernel-routing change.
+        self.jit_registry: Dict[Tuple[str, Tuple], JitEntry] = {}
         # sharded-serving state, set by init_slots(mesh=...): the mesh, the
         # pool's NamedSharding trees, the capacity they were built for, and
         # how many data shards the capacity axis splits into
@@ -234,6 +299,49 @@ class SpecDecodeEngine:
         self._chunk_fns.clear()
         self._chunk_begin_fns.clear()
         self._chunk_commit_fns.clear()
+        self.jit_registry.clear()
+
+    def _register_jit(self, name: str, key: Tuple, fn, *, hot: bool,
+                      kv_args: Tuple[int, ...] = (),
+                      in_shardings=None, out_shardings=None,
+                      paged_rows: Optional[int] = None):
+        """jax.jit ``fn`` with the engine's standing contracts attached.
+
+        ``kv_args`` are the argnums carrying KV pool / cache leaves: they
+        become ``donate_argnums`` (unless the engine was built with
+        ``donate=False``) and are recorded on the :class:`JitEntry` either
+        way, so graph-lint can flag an engine whose pool leaves stopped
+        being donated.  The wrapper body only runs while jax traces, so the
+        per-entry trace counter and arg/out spec capture cost nothing on
+        the cached dispatch path.
+        """
+        donate = tuple(kv_args) if self.donate else ()
+        code = fn.__code__
+        entry = JitEntry(
+            name=name, key=tuple(key), hot=hot, kv_args=tuple(kv_args),
+            donate=donate, sharded=in_shardings is not None,
+            out_shardings=out_shardings, paged_rows=paged_rows,
+            paged_fused=self.tcfg.paged_fused,
+            src_file=code.co_filename, src_line=code.co_firstlineno)
+
+        @wraps(fn)
+        def counted(*args, **kwargs):
+            entry.n_traces += 1
+            entry.arg_specs = jax.tree.map(_trace_spec, args)
+            out = fn(*args, **kwargs)
+            entry.out_specs = jax.tree.map(_trace_spec, out)
+            return out
+
+        kw: Dict[str, Any] = {}
+        if in_shardings is not None:
+            kw["in_shardings"] = in_shardings
+            kw["out_shardings"] = out_shardings
+        if donate:
+            kw["donate_argnums"] = donate
+        # lint: allow-jit-sharding(shardings thread through **kw; every builder call site picks them under its own `sh is None` branch)
+        entry.fn = jax.jit(counted, **kw)
+        self.jit_registry[(name, tuple(key))] = entry
+        return entry.fn
 
     # ------------------------------------------------------------------
     # prefill
@@ -258,12 +366,15 @@ class SpecDecodeEngine:
 
         sh = self._shardings
         if sh is None:
-            return jax.jit(fn)
+            return self._register_jit("prefill", (B, P, cache_len), fn,
+                                      hot=False)
         # sharded pool: the B=1 admission prefill runs explicitly REPLICATED
         # across the mesh (B=1 cannot shard the batch axis) so its outputs
         # can be scattered into any slot of any data shard without an
         # implicit-replication round-trip
-        return jax.jit(fn, in_shardings=(sh.rep,) * 5, out_shardings=sh.rep)
+        return self._register_jit("prefill", (B, P, cache_len), fn, hot=False,
+                                  in_shardings=(sh.rep,) * 5,
+                                  out_shardings=sh.rep)
 
     def prefill(self, tparams, dparams, tokens: jax.Array, prompt_lens: jax.Array,
                 cache_len: int, target_extras: Optional[Dict] = None) -> DecodeState:
@@ -455,15 +566,18 @@ class SpecDecodeEngine:
 
         sh = self._shardings
         if sh is None:
-            return jax.jit(fn)
+            return self._register_jit("inject", (paged_pool,), fn, hot=True,
+                                      kv_args=(0,))
         if paged_pool:
             full_sh = (sh.dc, sh.seq_lens, sh.last2, sh.out,
                        sh.n_generated, sh.done)
         else:
             full_sh = (sh.tcache, sh.dc, sh.seq_lens, sh.last2, sh.out,
                        sh.n_generated, sh.done)
-        return jax.jit(fn, in_shardings=(full_sh, sh.rep, sh.rep),
-                       out_shardings=full_sh)
+        return self._register_jit("inject", (paged_pool,), fn, hot=True,
+                                  kv_args=(0,),
+                                  in_shardings=(full_sh, sh.rep, sh.rep),
+                                  out_shardings=full_sh)
 
     def _build_inject_paged(self):
         """Scatter a B=1 contiguous prefill into the paged pool block-wise.
@@ -495,10 +609,13 @@ class SpecDecodeEngine:
 
         sh = self._shardings
         if sh is None:
-            return jax.jit(fn)
-        return jax.jit(fn, in_shardings=(sh.tcache, sh.rep, sh.rep, sh.rep,
-                                         sh.rep),
-                       out_shardings=sh.tcache)
+            return self._register_jit("inject_paged", (), fn, hot=True,
+                                      kv_args=(0,))
+        return self._register_jit("inject_paged", (), fn, hot=True,
+                                  kv_args=(0,),
+                                  in_shardings=(sh.tcache, sh.rep, sh.rep,
+                                                sh.rep, sh.rep),
+                                  out_shardings=sh.tcache)
 
     def prefill_into(self, tparams, dparams, state: DecodeState, slot: int,
                      tokens, prompt_len: int, cache_len: int,
@@ -527,6 +644,10 @@ class SpecDecodeEngine:
         if self._inject_fn is None:
             self._inject_fn = self._build_inject(
                 paged_pool=state.paged is not None)
+        if warm:
+            # donation shield: the discarded warm dispatch must not consume
+            # the live pool's buffers
+            state = self._warm_shield(state)
         if state.paged is None:
             if capacity == 1:
                 return single
@@ -586,10 +707,11 @@ class SpecDecodeEngine:
                             pos.at[freed].set(-1, mode="drop"),
                             bt.at[slot].set(-1))
                 if sh is None:
-                    self._retire_paged_fn = jax.jit(fn)
+                    self._retire_paged_fn = self._register_jit(
+                        "retire_paged", (), fn, hot=True, kv_args=(0, 1, 2))
                 else:
-                    self._retire_paged_fn = jax.jit(
-                        fn,
+                    self._retire_paged_fn = self._register_jit(
+                        "retire_paged", (), fn, hot=True, kv_args=(0, 1, 2),
                         in_shardings=(sh.done, sh.tcache["pos"],
                                       sh.tcache["bt"], sh.rep, sh.rep),
                         out_shardings=(sh.done, sh.tcache["pos"],
@@ -604,9 +726,11 @@ class SpecDecodeEngine:
         if self._retire_fn is None:
             fn = lambda done, slot: done.at[slot].set(True)
             self._retire_fn = (
-                jax.jit(fn) if sh is None else
-                jax.jit(fn, in_shardings=(sh.done, sh.rep),
-                        out_shardings=sh.done))
+                self._register_jit("retire", (), fn, hot=True, kv_args=(0,))
+                if sh is None else
+                self._register_jit("retire", (), fn, hot=True, kv_args=(0,),
+                                   in_shardings=(sh.done, sh.rep),
+                                   out_shardings=sh.done))
         with (jax.profiler.TraceAnnotation("repro/retire")
               if self.annotate else _NULLCTX):
             done = self._retire_fn(state.done, jnp.int32(slot))
@@ -631,16 +755,24 @@ class SpecDecodeEngine:
             new_dpos = None if dpos is None else dpos.at[slot].set(-1)
             return new_tpos, new_dpos, seq_lens.at[slot].set(plen)
 
+        # paged pools return tpos untouched and the caller keeps using the
+        # *input* pos buffer — donating arg 0 there would delete a buffer
+        # that stays live, so only the contiguous path donates it
+        kv = (1, 2) if paged else (0, 1, 2)
         sh = self._shardings
         if sh is None:
-            return jax.jit(fn)
+            return self._register_jit("chunk_begin", (paged,), fn, hot=True,
+                                      kv_args=kv)
         tpos_sh = sh.tcache["pos"]
         dpos_sh = (sh.dcache["pos"]
                    if isinstance(sh.dcache, dict) and "pos" in sh.dcache
                    else sh.rep)
-        return jax.jit(fn, in_shardings=(tpos_sh, dpos_sh, sh.seq_lens,
-                                         sh.rep, sh.rep),
-                       out_shardings=(tpos_sh, dpos_sh, sh.seq_lens))
+        return self._register_jit("chunk_begin", (paged,), fn, hot=True,
+                                  kv_args=kv,
+                                  in_shardings=(tpos_sh, dpos_sh, sh.seq_lens,
+                                                sh.rep, sh.rep),
+                                  out_shardings=(tpos_sh, dpos_sh,
+                                                 sh.seq_lens))
 
     def _build_chunk_commit(self, paged: bool):
         """Last-chunk commit: the slot becomes a live decode row — exactly
@@ -657,19 +789,23 @@ class SpecDecodeEngine:
                 res = res + (bt.at[slot].set(bt_row),)
             return res
 
+        kv = (0, 1, 2, 3, 4) + ((8,) if paged else ())
         sh = self._shardings
         if sh is None:
-            return jax.jit(fn)
+            return self._register_jit("chunk_commit", (paged,), fn, hot=True,
+                                      kv_args=kv)
         in_sh = [sh.seq_lens, sh.last2, sh.out, sh.n_generated, sh.done,
                  sh.rep, sh.rep, sh.rep]
         out_sh = [sh.seq_lens, sh.last2, sh.out, sh.n_generated, sh.done]
         if paged:
             in_sh += [sh.tcache["bt"], sh.rep]
             out_sh += [sh.tcache["bt"]]
-        return jax.jit(fn, in_shardings=tuple(in_sh),
-                       out_shardings=tuple(out_sh))
+        return self._register_jit("chunk_commit", (paged,), fn, hot=True,
+                                  kv_args=kv,
+                                  in_shardings=tuple(in_sh),
+                                  out_shardings=tuple(out_sh))
 
-    def _build_chunk(self, CB: int, paged: bool, t_single, d_single):
+    def _build_chunk(self, key: Tuple, t_single, d_single):
         """One bucketed chunk forward for one slot.
 
         Contiguous pool: the slot's B=1 caches are sliced out, extended by
@@ -685,6 +821,7 @@ class SpecDecodeEngine:
         is ever attendable — the same argument the contiguous path relies
         on.
         """
+        CB, paged, capacity, L = key
         tgt, drf = self.target, self.draft
 
         def take(full, single, slot):
@@ -734,15 +871,19 @@ class SpecDecodeEngine:
                 new_d = put(dcache, d1n, d_single, slot)
             return new_t, new_d
 
+        rows = L if paged else None
         sh = self._shardings
         if sh is None:
-            return jax.jit(fn)
+            return self._register_jit("chunk", key, fn, hot=True,
+                                      kv_args=(2, 3), paged_rows=rows)
         in_sh = [sh.rep, sh.rep, sh.tcache, sh.dc, sh.rep, sh.rep, sh.rep,
                  sh.rep, sh.rep]
         if paged:
             in_sh.append(sh.rep)              # bt_row (host-built, per chunk)
-        return jax.jit(fn, in_shardings=tuple(in_sh),
-                       out_shardings=(sh.tcache, sh.dc))
+        return self._register_jit("chunk", key, fn, hot=True,
+                                  kv_args=(2, 3), paged_rows=rows,
+                                  in_shardings=tuple(in_sh),
+                                  out_shardings=(sh.tcache, sh.dc))
 
     def prefill_chunk_into(self, tparams, dparams, state: DecodeState,
                            slot: int, tokens, start: int, n: int,
@@ -811,6 +952,10 @@ class SpecDecodeEngine:
         pk = state.paged
         paged = pk is not None
         capacity = int(state.seq_lens.shape[0])
+        if warm:
+            # donation shield: warm begin/chunk/commit dispatches discard
+            # their results and must not consume the live pool's buffers
+            state = self._warm_shield(state)
 
         # ---- first chunk: wipe stale rows, park seq_lens ----
         if start == 0 or warm:
@@ -822,13 +967,15 @@ class SpecDecodeEngine:
             tpos, dpos_new, seq_lens = self._chunk_begin_fns[paged](
                 state.tcache["pos"], dpos, state.seq_lens, jnp.int32(slot),
                 jnp.int32(total_len))
-            if not warm:
-                tcache = (state.tcache if paged
-                          else dict(state.tcache, pos=tpos))
-                dcache = (dict(state.dcache, pos=dpos_new)
-                          if dpos is not None else state.dcache)
-                state = dataclasses.replace(state, tcache=tcache,
-                                            dcache=dcache, seq_lens=seq_lens)
+            # rebind even when warm: begin just consumed (donated) the
+            # shielded copy's pos/seq_lens buffers, so the warm chunk and
+            # commit dispatches below must see the outputs, not the inputs
+            tcache = (state.tcache if paged
+                      else dict(state.tcache, pos=tpos))
+            dcache = (dict(state.dcache, pos=dpos_new)
+                      if dpos is not None else state.dcache)
+            state = dataclasses.replace(state, tcache=tcache,
+                                        dcache=dcache, seq_lens=seq_lens)
 
         # ---- host block accounting + this chunk's block table ----
         bt_row = None
@@ -855,8 +1002,7 @@ class SpecDecodeEngine:
                     lambda: self._init_caches(1, L))
                 t_single = None if paged else t_tmpl
                 d_single = d_tmpl
-            self._chunk_fns[key] = self._build_chunk(CB, paged, t_single,
-                                                     d_single)
+            self._chunk_fns[key] = self._build_chunk(key, t_single, d_single)
         args = (tparams, dparams, state.tcache, state.dcache,
                 jnp.int32(slot), jnp.asarray(tokens), jnp.int32(start),
                 jnp.int32(feed_total), jnp.int32(feed_total - 1))
@@ -873,9 +1019,13 @@ class SpecDecodeEngine:
                      state.n_generated, state.done, jnp.int32(slot),
                      jnp.int32(total_len), jnp.zeros((2,), jnp.int32))
             if paged:
-                cargs = cargs + (state.tcache["bt"], jnp.asarray(bt_row))
+                # the warm chunk dispatch above consumed state.tcache, so
+                # the block table must come from its output
+                cargs = cargs + (new_t["bt"], jnp.asarray(bt_row))
             self._chunk_commit_fns[paged](*cargs)
-            return state
+            # hand back only live buffers (the chunk consumed state.tcache/
+            # dcache); warm callers discard this anyway
+            return dataclasses.replace(state, tcache=new_t, dcache=new_d)
         state = dataclasses.replace(state, tcache=new_t, dcache=new_d)
 
         # ---- final chunk: the slot becomes a live decode row ----
@@ -917,16 +1067,43 @@ class SpecDecodeEngine:
     # ------------------------------------------------------------------
     # one speculative step
 
-    def _build_step(self, B: int, s: int):
+    def _warm_shield(self, state: DecodeState) -> DecodeState:
+        """Disposable copy of a DecodeState's device leaves.
+
+        Warm (compile-only) dispatches discard their results; with pool
+        donation on, handing them the live state would delete the very
+        buffers the next real step needs.  ``donate=False`` engines keep the
+        zero-copy warm path.
+        """
+        if not self.donate:
+            return state
+        return dataclasses.replace(
+            state,
+            tcache=_copy_arrays(state.tcache),
+            dcache=_copy_arrays(state.dcache),
+            seq_lens=_copy_arrays(state.seq_lens),
+            last2=_copy_arrays(state.last2),
+            out=_copy_arrays(state.out),
+            n_generated=_copy_arrays(state.n_generated),
+            done=_copy_arrays(state.done))
+
+    def _build_step(self, B: int, s: int, paged_rows: Optional[int] = None):
         fn = make_spec_step(
             self.target, self.draft, B, s, eos_id=self.eos_id,
             max_new=self.max_new, prefix_offset=self.prefix_offset,
             sample=self.sample, temperature=self.temperature)
+        # donate every DecodeState leaf the step threads through — except
+        # the target cache of recurrent families, whose checkpoint-selecting
+        # commit makes buffer reuse shape-incompatible (launch/specs.py
+        # makes the same call for the decode plans)
+        kv = (tuple(range(3, 9)) if self.tcfg.family in ("ssm", "hybrid")
+              else tuple(range(2, 9)))
         sh = self._shardings
         if sh is None or B != self._shard_capacity:
             # no mesh, or a non-pool batch size (generate()/warmup paths):
             # plain single-placement jit
-            return jax.jit(fn)
+            return self._register_jit("step", (B, s), fn, hot=True,
+                                      kv_args=kv, paged_rows=paged_rows)
         # sharded pool: the serving step is one explicit SPMD program —
         # params replicated, every pool-shaped leaf sharded on its capacity
         # (or block) axis on both sides, per-slot stats sharded like seq_lens
@@ -936,7 +1113,10 @@ class SpecDecodeEngine:
             in_sh.append(sh.rep)
         out_sh = (sh.tcache, sh.dc, sh.seq_lens, sh.last2, sh.out,
                   sh.n_generated, sh.done, sh.seq_lens, sh.seq_lens)
-        return jax.jit(fn, in_shardings=tuple(in_sh), out_shardings=out_sh)
+        return self._register_jit("step", (B, s), fn, hot=True,
+                                  kv_args=kv, paged_rows=paged_rows,
+                                  in_shardings=tuple(in_sh),
+                                  out_shardings=out_sh)
 
 
 
@@ -982,7 +1162,11 @@ class SpecDecodeEngine:
         B = state.seq_lens.shape[0]
         key = (B, s)
         if key not in self._step_fns:
-            self._step_fns[key] = self._build_step(B, s)
+            self._step_fns[key] = self._build_step(
+                B, s, paged_rows=(state.paged.logical_len
+                                  if state.paged is not None else None))
+        if warm:
+            state = self._warm_shield(state)
         args = (tparams, dparams, state.tcache, state.dcache, state.seq_lens,
                 state.last2, state.out, state.n_generated, state.done)
         if self.sample:
@@ -1039,7 +1223,9 @@ class SpecDecodeEngine:
             lens = np.full((b,), prompt_len, np.int32)
             state = self.prefill(tparams, dparams, tokens, lens, cache_len)
             for s in s_values:
-                self.step(tparams, dparams, state, s)
+                # warm=True: compile-only, and the donation shield keeps the
+                # discarded dispatch from consuming `state` for the next s
+                self.step(tparams, dparams, state, s, warm=True)
 
 
 def make_spec_step(tgt, drf, B: int, s: int, *, eos_id: int = -1,

@@ -1,0 +1,195 @@
+"""KV pool/cache buffer donation (``SpecDecodeEngine(donate=...)``).
+
+Donation must be a pure aliasing optimization: a full continuous-serving
+replay with ``donate=True`` (the default) must be token- and
+StepTrace-identical to ``donate=False`` — contiguous, paged, and chunked
+admission, plus a sharded 2-device run in a subprocess (forced host
+devices must precede jax init).  The semantic edge is pinned directly:
+after a real step the *input* pool buffers are deleted under donation
+(re-stepping a stale DecodeState is a loud error, not a silent
+corruption) and stay alive without it.  graph-lint's donation pass covers
+the other half of the contract — that the lowering actually aliases.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry as R
+from repro.core.adaptive import AdaptiveController, SpeculationLUT
+from repro.core.spec_decode import SpecDecodeEngine
+from repro.serving.request import Request
+from repro.serving.scheduler import (ContinuousEngineBackend,
+                                     PrefillBudgetAdmit,
+                                     serve_continuous_live)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.fixture(scope="module")
+def pair():
+    tcfg = R.get_smoke_config("yi-9b")
+    d = R.get_draft_config("yi-9b")
+    dcfg = dataclasses.replace(
+        d, n_layers=1, d_model=64, d_ff=128, vocab_size=tcfg.vocab_size,
+        dtype="float32",
+        attn=dataclasses.replace(d.attn, n_heads=2, n_kv_heads=2,
+                                 head_dim=32))
+    eng = SpecDecodeEngine(tcfg, dcfg, max_new=10)
+    tp = eng.target.init(jax.random.PRNGKey(0))
+    dp = eng.draft.init(jax.random.PRNGKey(1))
+    return tcfg, dcfg, tp, dp
+
+
+def _reqs(tcfg, n=5):
+    rng = np.random.default_rng(23)
+    reqs = []
+    for rid in range(n):
+        L = int(rng.integers(5, 12))
+        toks = rng.integers(0, tcfg.vocab_size, (L,)).astype(np.int32)
+        reqs.append(Request(rid=rid, arrival=0.0, tokens=toks, prompt_len=L,
+                            max_new=int(rng.integers(4, 9))))
+    return reqs
+
+
+def _serve(pair, donate, mode):
+    tcfg, dcfg, tp, dp = pair
+    eng = SpecDecodeEngine(tcfg, dcfg, max_new=10, donate=donate)
+    bkw = dict(capacity=3, cache_len=32, warm_s=[2, 3], collect_outputs=True)
+    policy = None
+    if mode in ("paged", "chunked"):
+        bkw["block_size"] = 8
+    if mode == "chunked":
+        policy = PrefillBudgetAdmit(token_budget=6)
+    be = ContinuousEngineBackend(eng, tp, dp, **bkw)
+    ctrl = AdaptiveController(lut=SpeculationLUT({1: 3, 2: 2, 4: 2}))
+    res = serve_continuous_live(_reqs(tcfg), eng, tp, dp, ctrl,
+                                backend=be, policy=policy)
+    return res, be
+
+
+@pytest.mark.parametrize("mode", ["contiguous", "paged", "chunked"])
+def test_donation_token_and_trace_parity(pair, mode):
+    (r0, b0) = _serve(pair, donate=False, mode=mode)
+    (r1, b1) = _serve(pair, donate=True, mode=mode)
+    t0, t1 = r0.trace, r1.trace
+    assert [t.admitted for t in t0] == [t.admitted for t in t1]
+    assert [t.occupancy for t in t0] == [t.occupancy for t in t1]
+    assert [t.committed for t in t0] == [t.committed for t in t1]
+    assert [t.preempted for t in t0] == [t.preempted for t in t1]
+    assert [t.done_rids for t in t0] == [t.done_rids for t in t1]
+    assert [t.chunked for t in t0] == [t.chunked for t in t1]
+    if mode == "chunked":
+        assert sum(len(t.chunked) for t in t0) > 0
+    assert set(b0.outputs) == set(b1.outputs) and len(b0.outputs) == 5
+    for rid in b0.outputs:
+        np.testing.assert_array_equal(b0.outputs[rid], b1.outputs[rid],
+                                      err_msg=f"{mode} rid {rid}")
+
+
+def _prefilled_state(pair, donate):
+    tcfg, dcfg, tp, dp = pair
+    eng = SpecDecodeEngine(tcfg, dcfg, max_new=10, donate=donate)
+    state = eng.init_slots(2, 32, block_size=8)
+    toks = np.arange(7, dtype=np.int32) % tcfg.vocab_size
+    state = eng.prefill_into(tp, dp, state, 0, toks, len(toks), 32)
+    return eng, tp, dp, state
+
+
+def _pool_leaf(state):
+    """A KV block-pool leaf of the paged target cache (float k/v arrays;
+    the int32 bt/pos tables are rebuilt host-side by the step's block
+    bookkeeping, so only the KV pool proper proves the donation)."""
+    import jax.numpy as jnp
+    return next(x for x in jax.tree.leaves(state.tcache)
+                if isinstance(x, jax.Array)
+                and jnp.issubdtype(x.dtype, jnp.floating))
+
+
+def test_donated_input_pool_is_deleted_after_step(pair):
+    eng, tp, dp, state = _prefilled_state(pair, donate=True)
+    new_state, _ = eng.step(tp, dp, state, 2)
+    # the stale input pool was donated into the step: touching it is loud
+    with pytest.raises((RuntimeError, ValueError)):
+        np.asarray(_pool_leaf(state))
+    np.asarray(_pool_leaf(new_state))      # the live pool reads fine
+
+
+def test_donate_false_keeps_stale_state_readable(pair):
+    eng, tp, dp, state = _prefilled_state(pair, donate=False)
+    eng.step(tp, dp, state, 2)
+    np.asarray(_pool_leaf(state))          # no donation: still alive
+    # re-stepping the same stale state is the documented donate=False use
+    eng.step(tp, dp, state, 2)
+
+
+SHARDED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=2 "
+                           + os.environ.get("XLA_FLAGS", ""))
+import dataclasses, json
+import jax, numpy as np
+from repro.configs import registry as R
+from repro.core.adaptive import AdaptiveController, SpeculationLUT
+from repro.core.spec_decode import SpecDecodeEngine
+from repro.launch.mesh import make_serving_mesh
+from repro.serving.request import Request
+from repro.serving.scheduler import (ContinuousEngineBackend,
+                                     serve_continuous_live)
+
+assert jax.device_count() == 2, jax.devices()
+tcfg = R.get_smoke_config("yi-9b")
+d = R.get_draft_config("yi-9b")
+dcfg = dataclasses.replace(
+    d, n_layers=1, d_model=64, d_ff=128, vocab_size=tcfg.vocab_size,
+    dtype="float32",
+    attn=dataclasses.replace(d.attn, n_heads=2, n_kv_heads=2, head_dim=32))
+eng0 = SpecDecodeEngine(tcfg, dcfg, max_new=10)
+tp = eng0.target.init(jax.random.PRNGKey(0))
+dp = eng0.draft.init(jax.random.PRNGKey(1))
+
+def reqs():
+    rng = np.random.default_rng(23)
+    out = []
+    for rid in range(5):
+        L = int(rng.integers(5, 12))
+        toks = rng.integers(0, tcfg.vocab_size, (L,)).astype(np.int32)
+        out.append(Request(rid=rid, arrival=0.0, tokens=toks, prompt_len=L,
+                           max_new=int(rng.integers(4, 9))))
+    return out
+
+def run(donate):
+    eng = SpecDecodeEngine(tcfg, dcfg, max_new=10, donate=donate)
+    be = ContinuousEngineBackend(eng, tp, dp, capacity=4, cache_len=32,
+                                 warm_s=[2, 3], collect_outputs=True,
+                                 mesh=make_serving_mesh(2))
+    ctrl = AdaptiveController(lut=SpeculationLUT({1: 3, 2: 2, 4: 2}))
+    res = serve_continuous_live(reqs(), eng, tp, dp, ctrl, backend=be)
+    return res, be
+
+(r0, b0), (r1, b1) = run(False), run(True)
+t0, t1 = r0.trace, r1.trace
+assert [t.admitted for t in t0] == [t.admitted for t in t1]
+assert [t.committed for t in t0] == [t.committed for t in t1]
+assert [t.done_rids for t in t0] == [t.done_rids for t in t1]
+assert set(b0.outputs) == set(b1.outputs)
+for rid in b0.outputs:
+    np.testing.assert_array_equal(b0.outputs[rid], b1.outputs[rid])
+assert b1.n_shards == 2
+print(json.dumps({"iters": len(t1), "outputs": len(b1.outputs)}))
+"""
+
+
+def test_donation_sharded_parity_two_devices():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)           # the script forces its own devices
+    proc = subprocess.run([sys.executable, "-c", SHARDED_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert out["iters"] > 0 and out["outputs"] == 5

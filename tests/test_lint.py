@@ -90,6 +90,40 @@ def test_host_sync_int_on_traced_value(tmp_path):
     assert "`total`" in fs[0].message
 
 
+def test_host_sync_tolist_in_hot_zone(tmp_path):
+    body = """\
+        import jax.numpy as jnp
+
+        def kernel_wrapper(x):
+            rows = x.tolist()
+            keep = x.tolist(0)      # not the 0-arg array method
+            return rows, keep
+    """
+    fs = findings_for(tmp_path, "kernels/wrap.py", body, "host-sync")
+    assert len(fs) == 1 and fs[0].line == 4
+    assert ".tolist()" in fs[0].message
+
+
+def test_host_sync_numpy_scalar_cast_on_traced_value(tmp_path):
+    body = """\
+        import numpy as np
+        import jax.numpy as jnp
+
+        def helper(a, b):
+            total = jnp.dot(a, b).sum()
+            plain = len(b)
+            lit = np.float32(0.5)
+            return np.float32(total), np.float64(total), np.float64(plain), lit
+    """
+    fs = findings_for(tmp_path, "kernels/wrap.py", body, "host-sync")
+    # only the two casts of the traced local fire — the plain-int cast and
+    # the literal are fine
+    assert len(fs) == 2
+    assert all("`total`" in f.message for f in fs)
+    assert {m for f in fs for m in ("np.float32", "np.float64")
+            if m in f.message} == {"np.float32", "np.float64"}
+
+
 def test_host_sync_literal_conversion_is_warning(tmp_path):
     body = """\
         import numpy as np

@@ -32,6 +32,16 @@ Tiers:
             Nonzero on findings; a run that collects zero files is
             treated as a failure, same as pytest exit code 5.  Runs at
             the head of fast and full.
+  graph   — graph-lint compiled-artifact checks (``python -m
+            tools.graphlint``): replays a tiny serving trace through the
+            real engine and checks every registered jit's jaxpr/HLO —
+            transfer-free hot paths, no gathered-KV materialization on
+            the fused paged path, KV pool donation actually aliased in
+            the lowering, sharding conformance, and a retrace guard
+            (docs/ARCHITECTURE.md "Compiled-graph contracts").  A run
+            that collects zero jits exits 5 and is loud-failed like a
+            zero-test pytest run.  Runs at the head of fast and full,
+            after lint.
 
 Usage:
   PYTHONPATH=src python tools/citier.py fast [extra pytest args...]
@@ -39,6 +49,7 @@ Usage:
   PYTHONPATH=src python tools/citier.py kernels
   python tools/citier.py docs
   python tools/citier.py lint [lint targets/flags...]
+  python tools/citier.py graph [graphlint flags...]
 
 The runner sets PYTHONPATH itself, then sanity-checks that ``repro`` is
 actually importable with that environment and that pytest collected at
@@ -83,6 +94,10 @@ DOCSTRING_DIRS = [os.path.join("src", "repro", "serving"),
 
 # tiers that open with the repro-lint invariant gate (cheap, pure-AST)
 LINT_TIERS = ("fast", "full")
+
+# tiers that then run the graph-lint compiled-artifact gate (a few minutes:
+# it traces, lowers and replays the engine's actual jits)
+GRAPH_TIERS = ("fast", "full")
 
 
 def docs_check() -> int:
@@ -134,6 +149,27 @@ def lint_check(extra=None) -> int:
     return rc
 
 
+def graph_check(extra=None) -> int:
+    """graph-lint gate (tier ``graph``; also runs inside fast/full after
+    lint).  Forwards extra CLI args (e.g. ``--json``, ``--inject`` for the
+    loudness self-test).  A zero-jit collection (exit 5) is a vacuous run
+    and fails loudly."""
+    cmd = [sys.executable, "-m", "tools.graphlint", *(extra or [])]
+    print("$", " ".join(cmd), flush=True)
+    rc = subprocess.call(cmd, cwd=ROOT)
+    if rc == EXIT_NO_TESTS_COLLECTED:
+        print("citier: graph-lint collected ZERO jits — the serving replay "
+              "registered nothing; treating the vacuous run as a failure",
+              file=sys.stderr)
+        return 2
+    if rc:
+        print("citier: graph-lint FAILED — a compiled engine jit violates "
+              "a standing contract (see findings above; fix it or add a "
+              "justified `# graphlint: allow-<pass>(reason)` pragma)",
+              file=sys.stderr)
+    return rc
+
+
 def build_env() -> dict:
     """os.environ with ROOT/src prepended to PYTHONPATH, validated loudly."""
     src = os.path.join(ROOT, "src")
@@ -166,15 +202,21 @@ def main(argv):
         return docs_check()
     if tier == "lint":
         return lint_check(argv[1:])
+    if tier == "graph":
+        return graph_check(argv[1:])
     if tier not in TIERS:
         print(f"unknown tier {tier!r}; pick one of "
-              f"{sorted([*TIERS, 'docs', 'lint'])}")
+              f"{sorted([*TIERS, 'docs', 'graph', 'lint'])}")
         return 2
     rc = docs_check()
     if rc:
         return rc
     if tier in LINT_TIERS:
         rc = lint_check()
+        if rc:
+            return rc
+    if tier in GRAPH_TIERS:
+        rc = graph_check()
         if rc:
             return rc
     env = build_env()

@@ -1,0 +1,36 @@
+"""graph-lint: jaxpr/HLO-level contract checking for every engine jit.
+
+repro-lint (tools/lint) enforces the runtime's standing contracts at the
+*source* level; graph-lint enforces them on the *compiled artifact*.  It
+drives a tiny but complete serving replay through the real
+:class:`~repro.core.spec_decode.SpecDecodeEngine` (paged pool, fused
+kernel, chunked admission, adaptive-s sweep, retirement — plus a sharded
+contiguous pool), harvests the engine's jit registry
+(``SpecDecodeEngine.jit_registry``, populated by ``_register_jit`` for
+every compiled function the dispatch loop can ever run), and then checks
+each entry's jaxpr / lowered StableHLO / compiled executable:
+
+* ``transfer-free`` — no host callback / infeed / outfeed primitive inside
+  any per-iteration jit;
+* ``no-materialization`` — the fused paged path never produces a
+  ``[B, MAXB*bs, KVH, hd]`` gathered-KV-shaped intermediate (the PR 5
+  kernel proof, generalized from ``benchmarks/kernel_bench.py`` to every
+  registered step/chunk jit, with a gather-path probe that keeps the
+  check non-vacuous);
+* ``donation`` — the KV pool / cache leaves of the state-threading jits
+  are donated and actually input-output aliased in the lowered HLO
+  (``tf.aliasing_output``), so the multi-GB pool is never double-buffered;
+* ``sharding-conformance`` — every jit of a sharded engine was built with
+  explicit shardings and its *compiled* output shardings match the
+  declared :class:`~repro.core.spec_decode.PoolShardings`;
+* ``retrace`` — replaying the same trace twice, every jit compiles exactly
+  once per distinct (name, key) and the second run compiles nothing.
+
+CLI mirrors repro-lint: ``python -m tools.graphlint`` (human output) or
+``--json`` (sorted, diffable); exit 0 clean / 1 findings / 2 usage /
+5 zero jits collected (a vacuous run is a failure).  Findings anchor to
+the jitted function's ``def`` site, so line-scoped
+``# graphlint: allow-<pass>(reason)`` pragmas — same grammar and
+stale/malformed policing as repro-lint's — can suppress them.
+``tools/citier.py graph`` is the CI gate (head of fast/full).
+"""

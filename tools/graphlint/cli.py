@@ -1,0 +1,197 @@
+"""graph-lint CLI.  See the package docstring for what the passes check.
+
+  python -m tools.graphlint [--json] [--no-sharded] [--inject MODE]
+
+Exit codes match repro-lint: 0 clean, 1 findings, 2 usage error, 5 zero
+jits collected (a vacuous run must fail loudly, not pass silently).
+
+``--inject`` plants a deliberate violation so CI can prove the gate
+actually trips (tools/citier.py's loudness test):
+
+* ``no-donation`` — build the replay engine with ``donate=False``;
+* ``retrace``     — drop every compiled cache between the two replays;
+* ``no-jits``     — skip collection entirely (must exit 5).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+
+EXIT_CLEAN = 0
+EXIT_FINDINGS = 1
+EXIT_USAGE = 2
+EXIT_NO_JITS = 5
+
+ROOT = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+# graph-lint shares repro-lint's pragma grammar under its own marker:
+#   # graphlint: allow-<pass>(reason)
+PRAGMA_RE = re.compile(r"#\s*graphlint:\s*allow-([A-Za-z0-9_-]+)\(([^()]*)\)")
+
+
+def _setup_env() -> None:
+    """Force 2 host devices (for the sharded collection) — must happen
+    before jax is imported anywhere in this process — and make both the
+    repo root (tools.*) and src/ (repro.*) importable regardless of how
+    the CLI was launched."""
+    if "jax" not in sys.modules:
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                flags + " --xla_force_host_platform_device_count=2").strip()
+    for p in (ROOT, os.path.join(ROOT, "src")):
+        if p not in sys.path:
+            sys.path.insert(0, p)
+
+
+def _relpath(path: str) -> str:
+    try:
+        rel = os.path.relpath(path, ROOT)
+    except ValueError:
+        return path
+    return rel if not rel.startswith("..") else path
+
+
+def run_passes(replays, probe, findings):
+    """Trace/lower each collected entry once, then feed every pass.  The
+    jaxpr/HLO snapshots are taken *after* the retrace counts were recorded
+    (each .trace()/.lower() call re-traces and would corrupt them)."""
+    from tools.graphlint.passes import (donation, materialize, retrace,
+                                        sharding, transfer_free)
+
+    # retrace first: counters are already final, no artifacts needed
+    for col in replays:
+        findings.extend(retrace.check(col.entries, col.run1, col.run2))
+
+    def jaxprs_of(col):
+        out = {}
+        for e in col.entries:
+            if e.arg_specs is None:
+                continue
+            try:
+                out[(e.name, e.key)] = e.fn.trace(*e.arg_specs).jaxpr
+            except Exception:
+                pass  # spec-only retrace can fail for host-hybrid args
+        return out
+
+    all_cols = list(replays) + ([probe] if probe else [])
+    jaxprs = {id(c): jaxprs_of(c) for c in all_cols}
+
+    for col in all_cols:
+        findings.extend(transfer_free.check(col.entries, jaxprs[id(col)]))
+
+    fused = next((c for c in replays if c.label == "paged-fused"), None)
+    if fused is not None:
+        findings.extend(materialize.check(
+            fused.entries, jaxprs[id(fused)], fused.kv_trailing,
+            guard_entries=(probe.entries if probe else ()),
+            guard_jaxprs=(jaxprs[id(probe)] if probe else None)))
+
+    for col in all_cols:
+        lowered = {}
+        for e in col.entries:
+            if e.name not in donation.DONATING_NAMES or e.arg_specs is None:
+                continue
+            try:
+                lowered[(e.name, e.key)] = e.fn.lower(*e.arg_specs).as_text()
+            except Exception:
+                pass
+        findings.extend(donation.check(col.entries, lowered))
+
+    for col in replays:
+        if col.label != "sharded":
+            continue
+        compiled = {}
+        for e in col.entries:
+            if e.arg_specs is None:
+                continue
+            try:
+                compiled[(e.name, e.key)] = (
+                    e.fn.lower(*e.arg_specs).compile().output_shardings)
+            except Exception:
+                pass
+        findings.extend(sharding.check(col.entries, compiled))
+
+
+def apply_pragmas(findings):
+    """Rebase findings onto repo-relative paths, then run them through the
+    shared pragma machinery (collect with the graph-lint marker) over each
+    source file an entry anchors to."""
+    from tools.lint import pragmas as P
+    from tools.lint.report import Finding
+
+    rebased = [Finding(file=_relpath(f.file), line=f.line, col=f.col,
+                       rule=f.rule, severity=f.severity, message=f.message)
+               for f in findings]
+    prags = []
+    for rel in sorted({f.file for f in rebased}):
+        full = os.path.join(ROOT, rel)
+        if not os.path.isfile(full):
+            continue
+        with open(full, encoding="utf-8") as fh:
+            prags.extend(P.collect(rel, fh.read(), pattern=PRAGMA_RE))
+    kept, problems = P.apply(rebased, prags)
+    return kept + problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.graphlint",
+        description="jaxpr/HLO-level contract checks over the engine's "
+                    "registered jits")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable findings (sorted, diffable)")
+    ap.add_argument("--no-sharded", action="store_true",
+                    help="skip the sharded collection (saves ~half the "
+                         "runtime; sharding-conformance does not run)")
+    ap.add_argument("--inject", choices=["no-donation", "retrace", "no-jits"],
+                    help="plant a deliberate violation (CI loudness test)")
+    try:
+        args = ap.parse_args(argv)
+    except SystemExit as e:
+        return EXIT_USAGE if e.code not in (0, None) else 0
+
+    _setup_env()
+    from tools.graphlint import driver
+    from tools.lint.report import render_human, render_json, sort_findings
+
+    replays, probe = [], None
+    if args.inject != "no-jits":
+        replays.append(driver.collect_fused(
+            donate=args.inject != "no-donation",
+            inject_retrace=args.inject == "retrace"))
+        probe = driver.collect_gather_probe()
+        if not args.no_sharded:
+            sharded = driver.collect_sharded()
+            if sharded is not None:
+                replays.append(sharded)
+
+    entries = [e for c in replays for e in c.entries]
+    n_jits = len(entries)
+    if n_jits == 0:
+        print("graph-lint: no jits collected — the serving replay "
+              "registered nothing; the run is vacuous", file=sys.stderr)
+        return EXIT_NO_JITS
+
+    findings = []
+    run_passes(replays, probe, findings)
+    findings = sort_findings(apply_pragmas(findings))
+
+    if args.json:
+        print(render_json(findings))
+    else:
+        if findings:
+            print(render_human(findings))
+        labels = ", ".join(c.label for c in replays)
+        if findings:
+            errs = sum(1 for f in findings if f.severity == "error")
+            print(f"graph-lint: {n_jits} jits ({labels}), "
+                  f"{len(findings)} findings ({errs} errors)")
+        else:
+            print(f"graph-lint: {n_jits} jits ({labels}), clean")
+
+    if any(f.severity == "error" for f in findings):
+        return EXIT_FINDINGS
+    return EXIT_CLEAN

@@ -1,0 +1,189 @@
+"""graph-lint collection driver: run the real engine, harvest its jits.
+
+graph-lint does not construct jits by hand — that list would drift the
+first time the engine grew a new dispatch path.  Instead it replays a
+tiny but complete serving trace through ``serve_continuous_live`` and
+reads back :attr:`SpecDecodeEngine.jit_registry`, so the checked set is
+*exactly* the set of compiled functions the dispatch loop ran.  Three
+collections:
+
+* ``paged-fused`` — the main replay: paged pool, fused kernel forced,
+  chunked admission (budget below the longest prompts), adaptive-s sweep
+  (LUT spanning s=2..3 over occupancy), retirement, run twice with
+  identical requests against the same backend for the retrace pass;
+* ``gather-probe`` — one real step on a ``paged_fused=False`` engine:
+  the known-materializing path that keeps the no-materialization
+  detector honest;
+* ``sharded`` — the contiguous replay on a 2-device host mesh (run
+  twice, same backend), feeding the sharding-conformance pass.  Only
+  collected when >= 2 devices are visible: the CLI forces
+  ``--xla_force_host_platform_device_count=2`` before importing jax,
+  in-process callers (tests) may skip it.
+
+The model pair is the yi-9b smoke target (KVH=2, hd=32) with a draft
+whose KV geometry deliberately differs (KVH=1, hd=16): the draft's
+contiguous ring cache legitimately carries ``logical_len`` rows, so the
+no-materialization trailing-dims filter must be able to tell the two
+apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs import registry as R
+from repro.core.adaptive import AdaptiveController, SpeculationLUT
+from repro.core.spec_decode import JitEntry, SpecDecodeEngine
+from repro.serving.request import Request
+from repro.serving.scheduler import (ContinuousEngineBackend,
+                                     PrefillBudgetAdmit,
+                                     serve_continuous_live)
+
+Key = Tuple[str, Tuple]
+
+CAPACITY = 3
+CACHE_LEN = 32
+BLOCK_SIZE = 8
+MAX_NEW = 10
+CHUNK_BUDGET = 6          # below the longest prompts => chunked admission
+SHARD_CAPACITY = 4        # must split evenly over the 2-device mesh
+
+
+@dataclasses.dataclass
+class Collection:
+    """One driven engine plus everything the passes need from it."""
+    label: str
+    engine: Any
+    entries: List[JitEntry]
+    run1: Dict[Key, int]            # n_traces per entry after replay 1
+    run2: Dict[Key, int]            # additional traces from replay 2
+    kv_trailing: Tuple[int, int]    # target (n_kv_heads, head_dim)
+
+
+def configs():
+    """Tiny target/draft pair with *distinct* KV geometries (see module
+    docstring)."""
+    tcfg = R.get_smoke_config("yi-9b")
+    d = R.get_draft_config("yi-9b")
+    dcfg = dataclasses.replace(
+        d, n_layers=1, d_model=32, d_ff=64, vocab_size=tcfg.vocab_size,
+        dtype="float32",
+        attn=dataclasses.replace(d.attn, n_heads=2, n_kv_heads=1,
+                                 head_dim=16))
+    return tcfg, dcfg
+
+
+_PARAMS: Optional[Tuple[Any, Any]] = None
+
+
+def params(tcfg, dcfg):
+    global _PARAMS
+    if _PARAMS is None:
+        eng = SpecDecodeEngine(tcfg, dcfg, max_new=MAX_NEW)
+        _PARAMS = (eng.target.init(jax.random.PRNGKey(0)),
+                   eng.draft.init(jax.random.PRNGKey(1)))
+    return _PARAMS
+
+
+def requests(tcfg, n=5) -> List[Request]:
+    """Deterministic replay trace: prompt lengths straddle CHUNK_BUDGET so
+    some admissions chunk and some do not; arrivals are all zero so the
+    composition is structural, not wall-clock dependent."""
+    rng = np.random.default_rng(11)
+    reqs = []
+    for rid in range(n):
+        L = int(rng.integers(5, 12))
+        toks = rng.integers(0, tcfg.vocab_size, (L,)).astype(np.int32)
+        reqs.append(Request(rid=rid, arrival=0.0, tokens=toks, prompt_len=L,
+                            max_new=int(rng.integers(4, 9))))
+    return reqs
+
+
+def _ctrl() -> AdaptiveController:
+    # s varies with batch bucket => the replay sweeps multiple (B, s) steps
+    return AdaptiveController(lut=SpeculationLUT({1: 3, 2: 2, 4: 2}))
+
+
+def _snap(eng) -> Dict[Key, int]:
+    return {k: e.n_traces for k, e in eng.jit_registry.items()}
+
+
+def _delta(eng, base: Dict[Key, int]) -> Dict[Key, int]:
+    return {k: e.n_traces - base.get(k, 0)
+            for k, e in eng.jit_registry.items()}
+
+
+def _trailing(tcfg) -> Tuple[int, int]:
+    return (tcfg.attn.n_kv_heads, tcfg.attn.head_dim)
+
+
+def _replay_twice(label, tcfg, eng, be, policy, inject_retrace) -> Collection:
+    """Serve the same trace twice against one live backend.  Requests are
+    rebuilt per run (serving mutates them); the engine's jit caches and
+    registry persist across runs, so run 2 must be a cache hit end to end
+    — that delta is the retrace pass's input."""
+    tp, dp = params(*configs())
+    serve_continuous_live(requests(tcfg), eng, tp, dp, _ctrl(),
+                          backend=be, policy=policy)
+    run1 = _snap(eng)
+    if inject_retrace:
+        # deliberate violation for --inject retrace / the CI loudness test:
+        # dropping the compiled caches makes replay 2 re-trace everything
+        for e in eng.jit_registry.values():
+            e.fn.clear_cache()
+    serve_continuous_live(requests(tcfg), eng, tp, dp, _ctrl(),
+                          backend=be, policy=policy)
+    return Collection(label=label, engine=eng,
+                      entries=list(eng.jit_registry.values()),
+                      run1=run1, run2=_delta(eng, run1),
+                      kv_trailing=_trailing(tcfg))
+
+
+def collect_fused(donate: bool = True,
+                  inject_retrace: bool = False) -> Collection:
+    """Main replay: paged pool + fused kernel + chunked admission."""
+    tcfg, dcfg = configs()
+    tp, dp = params(tcfg, dcfg)
+    eng = SpecDecodeEngine(tcfg, dcfg, max_new=MAX_NEW, donate=donate)
+    be = ContinuousEngineBackend(eng, tp, dp, capacity=CAPACITY,
+                                 cache_len=CACHE_LEN, warm_s=[2, 3],
+                                 block_size=BLOCK_SIZE, paged_fused=True)
+    return _replay_twice("paged-fused", tcfg, eng, be,
+                         PrefillBudgetAdmit(token_budget=CHUNK_BUDGET),
+                         inject_retrace)
+
+
+def collect_gather_probe() -> Collection:
+    """One real admit + step on the gather path (``paged_fused=False``):
+    its step jit is the known-materializing control for the
+    no-materialization vacuousness guard."""
+    tcfg, dcfg = configs()
+    tp, dp = params(tcfg, dcfg)
+    eng = SpecDecodeEngine(tcfg, dcfg, max_new=MAX_NEW, paged_fused=False)
+    state = eng.init_slots(CAPACITY, CACHE_LEN, block_size=BLOCK_SIZE)
+    toks = np.arange(6, dtype=np.int32) % tcfg.vocab_size
+    state = eng.prefill_into(tp, dp, state, 0, toks, len(toks), CACHE_LEN)
+    state, _ = eng.step(tp, dp, state, 3)
+    return Collection(label="gather-probe", engine=eng,
+                      entries=list(eng.jit_registry.values()),
+                      run1=_snap(eng), run2={},
+                      kv_trailing=_trailing(tcfg))
+
+
+def collect_sharded(inject_retrace: bool = False) -> Optional[Collection]:
+    """Contiguous replay on a 2-device host mesh, for the
+    sharding-conformance pass.  Returns None when fewer than 2 devices are
+    visible (the CLI env guarantees 2; in-process callers may not)."""
+    if len(jax.devices()) < 2:
+        return None
+    from repro.launch.mesh import make_serving_mesh
+    tcfg, dcfg = configs()
+    tp, dp = params(tcfg, dcfg)
+    eng = SpecDecodeEngine(tcfg, dcfg, max_new=MAX_NEW)
+    be = ContinuousEngineBackend(eng, tp, dp, capacity=SHARD_CAPACITY,
+                                 cache_len=CACHE_LEN, warm_s=[2, 3],
+                                 mesh=make_serving_mesh(2))
+    return _replay_twice("sharded", tcfg, eng, be, None, inject_retrace)

@@ -1,0 +1,56 @@
+"""graph-lint passes: each module exposes ``PASS`` (id) and ``check(...)``.
+
+A pass receives :class:`~repro.core.spec_decode.JitEntry` objects (plus
+whatever pre-computed snapshots it needs) and returns
+:class:`tools.lint.report.Finding`s anchored at the jitted function's
+``def`` site — the one source location a compiled-graph property can be
+traced back to, and the anchor line-scoped
+``# graphlint: allow-<pass>(reason)`` pragmas attach to.
+
+``iter_eqns`` is the shared jaxpr walker: it yields every equation in a
+jaxpr *including* those inside sub-jaxpr params (pjit bodies, scan/cond
+branches, custom_vjp calls), because the properties we check are
+whole-program — a host callback buried two closed_call levels deep is
+just as much a violation as one at top level.
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+PASS_IDS = (
+    "transfer-free",
+    "no-materialization",
+    "donation",
+    "sharding-conformance",
+    "retrace",
+)
+
+
+def iter_eqns(jaxpr, skip_inside=()) -> Iterator:
+    """Yield every eqn in ``jaxpr`` and, recursively, in any jaxpr-valued
+    param of those eqns (closed or open).
+
+    ``skip_inside`` names primitives whose params are *not* descended into
+    (the eqn itself is still yielded).  The no-materialization pass skips
+    ``pallas_call`` bodies this way: a Pallas kernel's jaxpr operates on
+    per-block Refs whose shapes are tile sizes, not allocations — the
+    logical-view rows count appearing there would be a false positive, and
+    a kernel physically cannot materialize an HBM-resident view anyway."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        if eqn.primitive.name in skip_inside:
+            continue
+        for val in eqn.params.values():
+            for sub in _subjaxprs(val):
+                yield from iter_eqns(sub, skip_inside)
+
+
+def _subjaxprs(val):
+    inner = getattr(val, "jaxpr", None)
+    if inner is not None:                      # ClosedJaxpr
+        yield inner
+    elif hasattr(val, "eqns"):                 # bare Jaxpr
+        yield val
+    elif isinstance(val, (tuple, list)):
+        for v in val:
+            yield from _subjaxprs(v)

@@ -1,0 +1,78 @@
+"""donation: KV pool / cache leaves are donated and actually aliased.
+
+The paged pool and contiguous caches are the engine's only multi-GB
+buffers; every state-threading jit (step, inject, retire, chunk) rewrites
+them in place *semantically*, so without ``donate_argnums`` XLA double-
+buffers the pool on every dispatch.  This pass checks, per registered jit
+of a donating family:
+
+1. the registry's contract holds — ``kv_args`` is non-empty (a donating
+   family registered without declared KV argnums is a refactor that lost
+   the annotation);
+2. the engine actually donated them — ``donate == kv_args`` (an engine
+   built with ``donate=False`` serving production traffic fails here);
+3. the lowering agrees — the StableHLO carries at least one
+   ``tf.aliasing_output`` attribute per flat leaf of the donated args
+   (donation that XLA silently declines — dtype/layout mismatch between
+   an input leaf and every output — double-buffers anyway, with no
+   warning on this jax version; the attribute count is the proof).
+"""
+from __future__ import annotations
+
+from typing import List
+
+from tools.lint.report import Finding
+
+PASS = "donation"
+
+# jit families that thread pool/cache state and must donate it.  prefill
+# is absent by design: it *creates* the per-request caches from nothing
+# and chunk_begin's paged variant returns its tpos input untouched (the
+# caller keeps the input buffer), so its kv_args already exclude it.
+DONATING_NAMES = (
+    "step", "inject", "inject_paged", "retire", "retire_paged",
+    "chunk", "chunk_begin", "chunk_commit",
+)
+
+ALIAS_ATTR = "tf.aliasing_output"
+
+
+def check(entries, lowered_texts) -> List[Finding]:
+    """``lowered_texts`` maps ``(name, key)`` to the entry's lowered
+    StableHLO text (``entry.fn.lower(*entry.arg_specs).as_text()``,
+    produced once by the CLI)."""
+    import jax
+
+    findings: List[Finding] = []
+
+    def emit(entry, message):
+        findings.append(Finding(
+            file=entry.src_file, line=entry.src_line, col=0,
+            rule=PASS, severity="error",
+            message=f"jit {entry.name}{entry.key}: {message}"))
+
+    for entry in entries:
+        if entry.name not in DONATING_NAMES:
+            continue
+        if not entry.kv_args:
+            emit(entry, "state-threading jit registered without kv_args — "
+                        "the KV argnum annotation was lost")
+            continue
+        if tuple(entry.donate) != tuple(entry.kv_args):
+            emit(entry, f"KV pool/cache args {tuple(entry.kv_args)} are not "
+                        f"donated (donate_argnums={tuple(entry.donate)}) — "
+                        "every dispatch double-buffers the pool")
+            continue
+        text = lowered_texts.get((entry.name, entry.key))
+        if text is None or entry.arg_specs is None:
+            continue
+        expected = sum(len(jax.tree.leaves(entry.arg_specs[i]))
+                       for i in entry.donate if i < len(entry.arg_specs))
+        if expected == 0:
+            continue  # donated args traced as empty pytrees: nothing to alias
+        got = text.count(ALIAS_ATTR)
+        if got < expected:
+            emit(entry, f"donated {expected} KV leaves but lowered HLO "
+                        f"aliases only {got} ({ALIAS_ATTR}) — XLA declined "
+                        "the donation, the pool is double-buffered")
+    return findings

@@ -1,0 +1,108 @@
+"""no-materialization: the fused paged path never gathers the KV view.
+
+The PR 5 fused kernel exists to keep the paged pool's KV out of a
+materialized ``[B, logical_len, KVH, hd]`` contiguous copy (2 such copies
+per layer per verify step on the gather path).  ``benchmarks/kernel_bench.py``
+proves that for the bare kernel call; this pass proves it for every
+*registered engine jit* the dispatch loop actually runs — the kernel being
+clean is worthless if the step function wrapping it regrows a gather.
+
+``find_gathered_views`` is the shared detector (kernel_bench imports it):
+an output aval whose leading two dims contain the logical row count is the
+gathered view.  The engine-level check narrows with ``trailing`` — the
+target's ``(KVH, hd)`` — because a full step also runs the *draft* model,
+whose contiguous ring cache legitimately carries ``logical_len`` rows with
+its own (different) head geometry.
+
+The check is self-guarding against vacuousness: a gather-path probe
+(``paged_fused=False``) must trip the same detector, or the pass fails —
+if the detector ever goes blind, it says so instead of passing silently.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+from tools.graphlint.passes import iter_eqns
+from tools.lint.report import Finding
+
+PASS = "no-materialization"
+
+# jit families whose traces embed the paged-attention call
+CHECKED_NAMES = ("step", "chunk")
+
+
+def find_gathered_views(jaxpr, rows: int,
+                        trailing: Optional[Sequence[int]] = None
+                        ) -> List[Tuple[int, ...]]:
+    """Output-aval shapes that look like the materialized logical view:
+    ``rows`` (= logical_len = max_blocks * block_size) in the leading two
+    dims, and — when ``trailing`` is given — the last dims equal to it
+    (the KV head geometry).  ``trailing=None`` is kernel_bench's original,
+    stricter-context check (bare kernel call, no draft model in trace)."""
+    hits: List[Tuple[int, ...]] = []
+    for eqn in iter_eqns(jaxpr, skip_inside=("pallas_call",)):
+        for av in eqn.outvars:
+            sh = tuple(getattr(av.aval, "shape", ()))
+            if len(sh) < 2 or rows not in sh[:2]:
+                continue
+            if trailing is not None:
+                t = tuple(trailing)
+                if len(sh) < 2 + len(t) or sh[-len(t):] != t:
+                    continue
+            hits.append(sh)
+    return hits
+
+
+def _checked(entry) -> bool:
+    return (entry.name in CHECKED_NAMES
+            and entry.paged_rows is not None
+            and entry.paged_fused is True)
+
+
+def check(entries, jaxprs, trailing,
+          guard_entries=(), guard_jaxprs=None) -> List[Finding]:
+    """``entries``/``jaxprs``: the fused-path collection and its pre-traced
+    ClosedJaxprs keyed ``(name, key)``.  ``guard_entries``/``guard_jaxprs``:
+    same, from the gather-path probe engine — at least one must trip the
+    detector or the whole pass is declared vacuous."""
+    findings: List[Finding] = []
+    checked_any = False
+    for entry in entries:
+        if not _checked(entry):
+            continue
+        closed = jaxprs.get((entry.name, entry.key))
+        if closed is None:
+            continue
+        checked_any = True
+        hits = find_gathered_views(closed.jaxpr, entry.paged_rows, trailing)
+        if hits:
+            findings.append(Finding(
+                file=entry.src_file, line=entry.src_line, col=0,
+                rule=PASS, severity="error",
+                message=(f"jit {entry.name}{entry.key}: fused paged path "
+                         f"materializes a gathered KV view "
+                         f"{sorted(set(hits))[0]} "
+                         f"(logical_len={entry.paged_rows} rows x KV "
+                         f"geometry {tuple(trailing)})")))
+
+    guard_tripped = False
+    guard_src = None
+    for entry in guard_entries:
+        closed = (guard_jaxprs or {}).get((entry.name, entry.key))
+        if closed is None or entry.paged_rows is None:
+            continue
+        guard_src = guard_src or (entry.src_file, entry.src_line)
+        if find_gathered_views(closed.jaxpr, entry.paged_rows, trailing):
+            guard_tripped = True
+            break
+    if checked_any and guard_entries and not guard_tripped:
+        if guard_src is None:   # no probe entry even had a jaxpr: anchor
+            e0 = next(e for e in entries if _checked(e))
+            guard_src = (e0.src_file, e0.src_line)
+        findings.append(Finding(
+            file=guard_src[0], line=guard_src[1], col=0,
+            rule=PASS, severity="error",
+            message=("gather-path probe no longer materializes a KV view — "
+                     "the no-materialization detector is vacuous (did the "
+                     "view shape or KV geometry change?)")))
+    return findings

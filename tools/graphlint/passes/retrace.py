@@ -1,0 +1,54 @@
+"""retrace: every jit compiles exactly once per (name, key), ever.
+
+The engine's whole dispatch design — shape buckets, pow2 prompt padding,
+the warm list, static (B, s) step keys — exists so the serving loop never
+pays a trace mid-flight.  A silent retrace (weak-type flip-flop, a Python
+scalar that should be a jnp array, a tuple that should be static) costs
+hundreds of ms per occurrence and is invisible to tests that only check
+tokens.  The registry's trace counter (incremented inside the traced
+body, so it costs nothing on cached dispatch) makes it checkable:
+
+* after one full serving replay, every registered entry must have traced
+  exactly once — more means something retraced mid-run, zero would mean
+  the registry recorded a jit that never ran (impossible by construction,
+  but checked anyway);
+* after a second *identical* replay against the same engine, the delta
+  must be zero for every entry — the replay is a cache hit end to end.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from tools.lint.report import Finding
+
+PASS = "retrace"
+
+Key = Tuple[str, Tuple]
+
+
+def check(entries, run1: Dict[Key, int], run2: Dict[Key, int]) -> List[Finding]:
+    """``run1``: n_traces per entry key after the first replay.  ``run2``:
+    *additional* traces accumulated by the second, identical replay."""
+    findings: List[Finding] = []
+
+    def emit(entry, message):
+        findings.append(Finding(
+            file=entry.src_file, line=entry.src_line, col=0,
+            rule=PASS, severity="error",
+            message=f"jit {entry.name}{entry.key}: {message}"))
+
+    for entry in entries:
+        key = (entry.name, entry.key)
+        n1 = run1.get(key)
+        if n1 is None:
+            continue  # entry born after the snapshot (e.g. probe-only jits)
+        if n1 != 1:
+            emit(entry, f"traced {n1}x during a single serving replay — "
+                        "expected exactly once per (name, key); something "
+                        "recompiles mid-flight")
+            continue
+        n2 = run2.get(key, 0)
+        if n2 != 0:
+            emit(entry, f"retraced {n2}x on an identical second replay — "
+                        "the compilation cache misses on repeat traffic")
+    return findings

@@ -1,0 +1,96 @@
+"""sharding-conformance: compiled output shardings match the declaration.
+
+A sharded pool (init_slots with a mesh) declares NamedShardings for every
+pool leaf (:class:`~repro.core.spec_decode.PoolShardings`) and threads
+them into each jit as in/out_shardings.  Two drifts this pass catches:
+
+* a builder call site that stops passing shardings — the jit still runs
+  (GSPMD infers something) but the pool silently de-shards or gathers on
+  dispatch boundaries (``sharded=False`` on an entry of a sharded engine);
+* a declared sharding the *compiled* executable does not honor — compare
+  ``compiled.output_shardings`` leaf-by-leaf against the declared tree
+  via ``Sharding.is_equivalent_to`` (spec-level equality, robust to
+  mesh-object identity).
+
+Declarations are pytree prefixes (jax.jit semantics): a single sharding
+or ``None`` broadcasts over the corresponding output subtree; ``None``
+leaves declare nothing and are skipped.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Tuple
+
+from tools.lint.report import Finding
+
+PASS = "sharding-conformance"
+
+
+def _is_sharding(x) -> bool:
+    import jax
+    return isinstance(x, jax.sharding.Sharding)
+
+
+def broadcast_decl(decl, out_spec) -> List[Tuple[Any, Any]]:
+    """Flatten a (possibly prefix) declaration tree against the output
+    spec tree into ``[(decl_leaf_or_None, out_leaf), ...]`` pairs, in the
+    same order jax flattens the outputs."""
+    import jax
+
+    if decl is None or _is_sharding(decl):
+        return [(decl, leaf) for leaf in jax.tree.leaves(out_spec)]
+    if isinstance(decl, dict) and isinstance(out_spec, dict):
+        pairs = []
+        for k in sorted(out_spec):
+            pairs.extend(broadcast_decl(decl.get(k), out_spec[k]))
+        return pairs
+    if isinstance(decl, (tuple, list)) and isinstance(out_spec, (tuple, list)) \
+            and len(decl) == len(out_spec):
+        pairs = []
+        for d, o in zip(decl, out_spec):
+            pairs.extend(broadcast_decl(d, o))
+        return pairs
+    # structure mismatch: jax.jit would have rejected it at trace time, so
+    # reaching here means the spec capture drifted — declare nothing rather
+    # than misalign the zip
+    return [(None, leaf) for leaf in jax.tree.leaves(out_spec)]
+
+
+def check(entries, compiled_shardings) -> List[Finding]:
+    """``entries``: registry entries of a *sharded* engine.
+    ``compiled_shardings`` maps ``(name, key)`` to
+    ``entry.fn.lower(*entry.arg_specs).compile().output_shardings``."""
+    import jax
+
+    findings: List[Finding] = []
+
+    def emit(entry, message):
+        findings.append(Finding(
+            file=entry.src_file, line=entry.src_line, col=0,
+            rule=PASS, severity="error",
+            message=f"jit {entry.name}{entry.key}: {message}"))
+
+    for entry in entries:
+        if not entry.sharded:
+            emit(entry, "built without explicit shardings on a sharded "
+                        "engine — GSPMD is inferring the pool layout")
+            continue
+        got_tree = compiled_shardings.get((entry.name, entry.key))
+        if got_tree is None or entry.out_specs is None:
+            continue
+        got = jax.tree.leaves(got_tree, is_leaf=_is_sharding)
+        pairs = broadcast_decl(entry.out_shardings, entry.out_specs)
+        out_leaves = jax.tree.leaves(entry.out_specs)
+        if len(got) != len(pairs):
+            emit(entry, f"compiled executable has {len(got)} output "
+                        f"shardings but the trace captured {len(pairs)} "
+                        "output leaves — spec capture drifted")
+            continue
+        for i, ((decl, spec), actual) in enumerate(zip(pairs, got)):
+            if decl is None:
+                continue
+            ndim = len(getattr(spec, "shape", out_leaves[i].shape))
+            if not actual.is_equivalent_to(decl, ndim):
+                emit(entry, f"output leaf {i} compiled with sharding "
+                            f"{actual} but PoolShardings declares {decl}")
+                break
+    return findings

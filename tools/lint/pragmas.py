@@ -38,12 +38,19 @@ class Pragma:
         return bool(self.reason.strip())
 
 
-def collect(relpath: str, source: str) -> List[Pragma]:
+def collect(relpath: str, source: str,
+            pattern: "re.Pattern" = PRAGMA_RE) -> List[Pragma]:
     """Scan source lines for pragmas.  Standalone comment lines target the
-    following line; trailing comments target their own line."""
+    following line; trailing comments target their own line.
+
+    ``pattern`` swaps the pragma marker: graph-lint (tools/graphlint)
+    reuses this collector with ``# graphlint: allow-<pass>(reason)`` so the
+    two subsystems share one suppression grammar (group 1 = rule/pass id,
+    group 2 = mandatory reason).
+    """
     out = []
     for lineno, text in enumerate(source.splitlines(), start=1):
-        for m in PRAGMA_RE.finditer(text):
+        for m in pattern.finditer(text):
             before = text[:m.start()].strip()
             standalone = before == "" or before.startswith("#")
             target = lineno + 1 if standalone else lineno

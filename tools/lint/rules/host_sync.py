@@ -1,9 +1,11 @@
 """host-sync: no device→host round-trips on the per-iteration hot path.
 
-Every ``.item()``, ``np.asarray``, ``jax.device_get`` or
-``.block_until_ready()`` inside the decode loop stalls the accelerator
-pipeline for a full transfer latency — per *iteration*, which at s=4
-speculation means several times per generated token.  The hot zones are:
+Every ``.item()``, ``.tolist()``, ``np.asarray``, ``jax.device_get``,
+``.block_until_ready()`` — or an ``int()``/``float()``/``bool()``/
+``np.float32()``/``np.float64()`` cast of a traced local — inside the
+decode loop stalls the accelerator pipeline for a full transfer latency —
+per *iteration*, which at s=4 speculation means several times per
+generated token.  The hot zones are:
 
 * ``core/spec_decode.py`` — ``SpecDecodeEngine.step`` / ``retire_slot``
   and the jitted ``make_spec_step`` body;
@@ -49,6 +51,9 @@ HOT_QUALNAMES = {
 
 SYNC_FUNCS = {"jax.device_get"}
 NUMPY_CONVERTERS = {"numpy.asarray", "numpy.array"}
+# numpy scalar constructors: np.float32(x) on a device value pulls x to
+# host exactly like float(x) — the dtype wrapper hides the sync
+NUMPY_SCALAR_CASTS = {"numpy.float32", "numpy.float64"}
 JAX_MODULES = ("jax", "jax.numpy")
 
 
@@ -120,6 +125,19 @@ def check(tree: ast.AST, source: str, relpath: str) -> List[Finding]:
         findings.append(Finding(relpath, node.lineno, node.col_offset,
                                 RULE, severity, message))
 
+    def traced_local(call) -> str:
+        """The root name of the call's single argument, when that name is
+        assigned from a jax-touching expression in the enclosing function
+        chain (else None)."""
+        root = astutil.root_name(call.args[0])
+        if root is None:
+            return None
+        funcs = astutil.enclosing_functions(call)
+        key = id(funcs[0])
+        if key not in traced_cache:
+            traced_cache[key] = _traced_names(funcs, aliases)
+        return root if root in traced_cache[key] else None
+
     for node in ast.walk(tree):
         if not isinstance(node, ast.Call) or not _is_hot(node, kind, quals):
             continue
@@ -129,6 +147,11 @@ def check(tree: ast.AST, source: str, relpath: str) -> List[Finding]:
             if func.attr == "item" and not node.args and not node.keywords:
                 emit(node, ".item() forces a device→host sync inside a "
                            "per-iteration hot path")
+                continue
+            if func.attr == "tolist" and not node.args and not node.keywords:
+                emit(node, ".tolist() materializes the whole array on host "
+                           "(a device→host sync) inside a per-iteration "
+                           "hot path")
                 continue
             if func.attr == "block_until_ready":
                 emit(node, ".block_until_ready() stalls the dispatch "
@@ -151,16 +174,20 @@ def check(tree: ast.AST, source: str, relpath: str) -> List[Finding]:
                            "blocks on the transfer inside a per-iteration "
                            "hot path")
             continue
+        if resolved in NUMPY_SCALAR_CASTS and len(node.args) == 1 \
+                and not node.keywords:
+            root = traced_local(node)
+            if root is not None:
+                short = "np." + resolved.split(".", 1)[1]
+                emit(node, f"{short}() on traced value `{root}` pulls it "
+                           "to host (a device→host sync) inside a "
+                           "per-iteration hot path")
+            continue
         if isinstance(func, ast.Name) and func.id in ("int", "float", "bool") \
                 and len(node.args) == 1 and not node.keywords:
-            root = astutil.root_name(node.args[0])
+            root = traced_local(node)
             if root is not None:
-                funcs = astutil.enclosing_functions(node)
-                key = id(funcs[0])
-                if key not in traced_cache:
-                    traced_cache[key] = _traced_names(funcs, aliases)
-                if root in traced_cache[key]:
-                    emit(node, f"{func.id}() on traced value `{root}` "
-                               "forces a device→host sync inside a "
-                               "per-iteration hot path")
+                emit(node, f"{func.id}() on traced value `{root}` "
+                           "forces a device→host sync inside a "
+                           "per-iteration hot path")
     return findings
