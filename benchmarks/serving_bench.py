@@ -12,6 +12,13 @@ Scenarios
                      block pool plus a chunked-admission budget: exercises
                      preemption, chunk feeds, and the pool gauges.  Also
                      deterministic.
+  sim_templated      templated traffic (4 system prompts shared by many
+                     requests) through the paged pool with the prefix cache
+                     on, against an identical cache-off run.  The sim
+                     backend charges a per-token prefill cost, so the
+                     cache's admission savings surface as a TTFT win;
+                     --check gates hit-rate > 0 and cached TTFT strictly
+                     below the cold run's.  Deterministic.
   live_smoke         the trained tiny pair (benchmarks/common.py) served by
                      serve_continuous_live with a profiled LUT and an
                      acceptance expectation calibrated from two quick
@@ -51,6 +58,7 @@ import numpy as np
 from repro.core.adaptive import AdaptiveController, lut_from_model, profile_engine
 from repro.core.analytical import LatencyModel, fit_power_law
 from repro.serving.metrics import goodput, itl_summary, mean_occupancy, ttft_summary
+from repro.serving.request import Request
 from repro.serving.scheduler import (ContinuousScheduler, PrefillBudgetAdmit,
                                      SimStepBackend, serve_continuous_live)
 from repro.serving.server import serve_continuous
@@ -139,6 +147,56 @@ def bench_sim_paged_chunked() -> Dict:
     return out
 
 
+def bench_sim_templated() -> Dict:
+    """Templated traffic through the prefix cache vs an identical cold run.
+
+    Four 32-token system prompts fan out over 48 requests (unique tails),
+    served twice with the same geometry and budget — prefix_cache on and
+    off.  The sim backend charges ``prefill_token_cost`` per fed row, so
+    skipping the cached prefix both shortens the prefill span and frees
+    admission budget; the reported TTFT win is the paper-level payoff the
+    --check gate holds on to (along with hit-rate > 0)."""
+    m = sim_model()
+
+    def reqs():
+        rng = np.random.default_rng(23)
+        sys_prompts = [rng.integers(0, VOCAB, (32,)).astype(np.int32)
+                       for _ in range(4)]
+        out = []
+        for i in range(48):
+            tail = rng.integers(0, VOCAB,
+                                (int(rng.integers(4, 12)),)).astype(np.int32)
+            toks = np.concatenate([sys_prompts[i % 4], tail])
+            out.append(Request(rid=i, arrival=0.01 * i, tokens=toks,
+                               prompt_len=len(toks),
+                               max_new=int(rng.integers(8, 17))))
+        return out
+
+    def go(cache: bool):
+        tel = Telemetry()
+        be = SimStepBackend(m, capacity=8, seed=2, block_size=8,
+                            num_blocks=96, max_context=96,
+                            prefix_cache=cache, prefill_token_cost=2e-4)
+        sched = ContinuousScheduler(
+            be, AdaptiveController(lut=lut_from_model(m, s_max=8)),
+            policy=PrefillBudgetAdmit(token_budget=32, chunk=16),
+            telemetry=tel)
+        res = sched.run(reqs())
+        res.trace = sched.trace
+        return res, tel, be
+
+    res_c, tel_c, be_c = go(True)
+    res_0, _, _ = go(False)
+    out = _metrics(res_c, tel_c)
+    cache = be_c.cache
+    out["cache_hit_rate"] = cache.hits / max(cache.lookups, 1)
+    out["cache_hit_tokens"] = int(cache.hit_tokens)
+    out["cache_evicted_blocks"] = int(be_c.kv.evicted_total)
+    out["ttft_cold_mean_s"] = ttft_summary(res_0).mean
+    out["goodput_cold_tok_per_s"] = goodput(res_0)
+    return out
+
+
 def bench_live_smoke(profile_dir: Optional[str] = None) -> Dict:
     from benchmarks.common import bench_prompts, get_trained_pair
     engine, tparams, dparams, _ = get_trained_pair()
@@ -199,7 +257,19 @@ def _compare(base: Dict, cur: Dict) -> List[str]:
     baseline: deterministic sim metrics within SIM_RTOL, live within factor
     bounds, acceptance drift within its band."""
     problems = []
-    for name in ("sim_steady", "sim_paged_chunked"):
+    # standing prefix-cache gates: properties of the current run itself,
+    # not drift against the baseline
+    t = cur.get("sim_templated")
+    if t:
+        if t["cache_hit_rate"] <= 0:
+            problems.append("sim_templated: prefix-cache hit rate is zero — "
+                            "templated traffic found no shared prefix")
+        if t["ttft_mean_s"] >= t["ttft_cold_mean_s"]:
+            problems.append(
+                f"sim_templated: cached mean TTFT {t['ttft_mean_s']:.4g}s is "
+                f"not below the cold run's {t['ttft_cold_mean_s']:.4g}s — "
+                "the prefix cache stopped paying for itself")
+    for name in ("sim_steady", "sim_paged_chunked", "sim_templated"):
         b, c = base.get(name), cur.get(name)
         if not b or not c:
             problems.append(f"{name}: missing from "
@@ -242,6 +312,7 @@ def run(quick: bool = False, check: bool = False, sim_only: bool = False,
     scenarios: Dict[str, Dict] = {}
     scenarios["sim_steady"] = bench_sim_steady()
     scenarios["sim_paged_chunked"] = bench_sim_paged_chunked()
+    scenarios["sim_templated"] = bench_sim_templated()
     # live is wall-clock and needs the trained pair: run it on the full
     # artifact pass or on explicit request, never in the default CI smoke
     want_live = (not sim_only) and (live or not (check or quick))
@@ -288,10 +359,14 @@ def run(quick: bool = False, check: bool = False, sim_only: bool = False,
               f"(smoke mode, {len(scenarios)} scenarios measured)")
     for name, s in scenarios.items():
         drift = s.get("acceptance_drift")
-        print(f"  {name}: goodput {s['goodput_tok_per_s']:.4g} tok/s  "
-              f"ttft {s['ttft_mean_s']:.4g}s  itl {s['itl_mean_s']:.4g}s  "
-              f"occ {s['mean_occupancy']:.2f}  "
-              f"drift {'n/a' if drift is None else format(drift, '+.3f')}")
+        line = (f"  {name}: goodput {s['goodput_tok_per_s']:.4g} tok/s  "
+                f"ttft {s['ttft_mean_s']:.4g}s  itl {s['itl_mean_s']:.4g}s  "
+                f"occ {s['mean_occupancy']:.2f}  "
+                f"drift {'n/a' if drift is None else format(drift, '+.3f')}")
+        if "cache_hit_rate" in s:
+            line += (f"  hit-rate {s['cache_hit_rate']:.2f}  "
+                     f"ttft-cold {s['ttft_cold_mean_s']:.4g}s")
+        print(line)
     if problems:
         for p in problems:
             print(f"CHECK FAILED: {p}")

@@ -252,6 +252,13 @@ class SpecDecodeEngine:
         self._chunk_fns: Dict[Tuple, Any] = {}
         self._chunk_begin_fns: Dict[bool, Any] = {}
         self._chunk_commit_fns: Dict[bool, Any] = {}
+        # prefix-cache (shared-block) paths: draft-only prefix prefill keyed
+        # (P_pad, L), the attach park scatter keyed (has_draft,), the COW
+        # block-copy scatter and the evicted-block pos wipe
+        self._attach_fns: Dict[Tuple[int, int], Any] = {}
+        self._attach_park_fns: Dict[bool, Any] = {}
+        self._block_copy_fn: Any = None
+        self._evict_fn: Any = None
         # graph-lint jit registry: one JitEntry per live compiled function,
         # keyed (name, key).  Populated by _register_jit as the caches above
         # fill; cleared with them so the registry never outlives a sharding
@@ -299,6 +306,10 @@ class SpecDecodeEngine:
         self._chunk_fns.clear()
         self._chunk_begin_fns.clear()
         self._chunk_commit_fns.clear()
+        self._attach_fns.clear()
+        self._attach_park_fns.clear()
+        self._block_copy_fn = None
+        self._evict_fn = None
         self.jit_registry.clear()
 
     def _register_jit(self, name: str, key: Tuple, fn, *, hot: bool,
@@ -600,9 +611,11 @@ class SpecDecodeEngine:
                 s1 = single_tc[name][:, 0]               # [nL, L, ...]
                 nL = s1.shape[0]
                 s1 = s1.reshape(nL, MAXB, bs, *s1.shape[2:])
+                # lint: allow-cow-write(whole-prompt inject: scat_tbl holds only blocks prefill just allocated at refcount 1 — a shared block can never appear here)
                 new[name] = tcache[name].at[:, scat_tbl].set(
                     s1.astype(tcache[name].dtype), mode="drop")
             spos = single_tc["pos"][0].reshape(MAXB, bs)
+            # lint: allow-cow-write(same freshly-allocated scat_tbl as the k/v scatter above)
             new["pos"] = tcache["pos"].at[scat_tbl].set(spos, mode="drop")
             new["bt"] = tcache["bt"].at[slot].set(bt_row)
             return new
@@ -667,6 +680,9 @@ class SpecDecodeEngine:
             ids = pk.table(slot)
             scat_tbl[:len(ids)] = ids
             bt_row[:len(ids)] = ids
+            # the allocation may have reclaimed cache blocks: wipe their
+            # stale pos rows before the inject can hand them a new owner
+            state = self._drain_evicted(state)
         if self._inject_paged_fn is None:
             self._inject_paged_fn = self._build_inject_paged()
         with (jax.profiler.TraceAnnotation("repro/inject")
@@ -704,7 +720,7 @@ class SpecDecodeEngine:
             if self._retire_paged_fn is None:
                 def fn(done, pos, bt, slot, freed):
                     return (done.at[slot].set(True),
-                            pos.at[freed].set(-1, mode="drop"),
+                            pos.at[freed].set(-1, mode="drop"),  # lint: allow-cow-write(retire wipe: freed is the actually-freed list from release — refcount-0 by construction; surviving shared blocks are excluded)
                             bt.at[slot].set(-1))
                 if sh is None:
                     self._retire_paged_fn = self._register_jit(
@@ -735,6 +751,236 @@ class SpecDecodeEngine:
               if self.annotate else _NULLCTX):
             done = self._retire_fn(state.done, jnp.int32(slot))
         return dataclasses.replace(state, done=done)
+
+    # ------------------------------------------------------------------
+    # prefix-cache admission (shared blocks; serving/prefix_cache.py is the
+    # host index, serving/scheduler.py drives this.  Unsharded paged pools
+    # only — the backend refuses prefix_cache + mesh, see scheduler.py)
+
+    def _require_unsharded(self, what: str) -> None:
+        if self._shardings is not None:
+            raise RuntimeError(
+                f"{what} is not supported on a mesh-sharded pool: shared "
+                f"blocks may live on any shard (allocation is not "
+                f"shard-local) — serve with prefix_cache=False, or "
+                f"unsharded")
+
+    def _build_draft_prefill(self, P: int, L: int):
+        """Draft-only B=1 prefill of a cached prefix: shared target blocks
+        carry target KV only, so the (tiny, contiguous-ring) draft cache
+        recomputes its rows ``[0, limit)`` for the attached prompt."""
+        drf = self.draft
+
+        def fn(dparams, tokens, limit):
+            dcache = drf.init_cache(1, cache_len=L, dtype=self.dtype)
+            _, dcache, _ = drf.prefill(dparams, tokens, dcache,
+                                       prompt_lens=limit)
+            return dcache
+
+        return self._register_jit("draft_prefill", (P, L), fn, hot=False)
+
+    def _build_attach_park(self, has_draft: bool):
+        """Park an attach-admitted slot: scatter the draft's B=1 prefix
+        cache into its pool row (replacing the previous occupant's rows
+        wholesale, same stale-key guarantee as inject) and park
+        ``seq_lens[slot]`` at the feed's final length — the identical
+        parked-row contract chunked prefill relies on (_build_chunk_begin):
+        interleaved decode steps' masked garbage writes for the still-done
+        slot land past every suffix-chunk query and are rewritten by the
+        slot's own first real step."""
+        if has_draft:
+            def fn(dcache, d_single, seq_lens, slot, total_len):
+                def upd(f, x):
+                    ax = self._slot_axis(f.shape, x.shape)
+                    starts = tuple(slot if i == ax else 0
+                                   for i in range(f.ndim))
+                    return jax.lax.dynamic_update_slice(
+                        f, x.astype(f.dtype), starts)
+                return (jax.tree.map(upd, dcache, d_single),
+                        seq_lens.at[slot].set(total_len))
+            kv = (0, 2)
+        else:
+            def fn(seq_lens, slot, total_len):
+                return seq_lens.at[slot].set(total_len)
+            kv = (0,)
+        return self._register_jit("attach_park", (has_draft,), fn, hot=True,
+                                  kv_args=kv)
+
+    def _build_block_copy(self):
+        """COW resolve: copy every leaf's rows of blocks ``src[i]`` into
+        ``dst[i]``.  Pairs are padded with ``num_blocks`` — the gather
+        clamps (reads a garbage block) and the scatter drops (never writes
+        it), so one compilation serves any pair count."""
+        def fn(tcache, src, dst):
+            new = {}
+            for name in tcache:
+                if name == "bt":
+                    new[name] = tcache[name]
+                elif name == "pos":
+                    new[name] = tcache[name].at[dst].set(
+                        tcache[name][src], mode="drop")
+                else:
+                    new[name] = tcache[name].at[:, dst].set(
+                        tcache[name][:, src], mode="drop")
+            return new
+        return self._register_jit("block_copy", (), fn, hot=True,
+                                  kv_args=(0,))
+
+    def _build_evict_clear(self):
+        def fn(pos, blocks):
+            # lint: allow-cow-write(eviction wipe: the blocks are refcount-0 by construction — reclaim just freed them — and -1 rows are never attendable)
+            return pos.at[blocks].set(-1, mode="drop")
+        return self._register_jit("evict_clear", (), fn, hot=True,
+                                  kv_args=(0,))
+
+    def _drain_evicted(self, state: DecodeState) -> DecodeState:
+        """Wipe device ``pos`` rows of cache blocks evicted by
+        reclaim-under-pressure (slots.PagedKVTables.evicted_pending).
+
+        Must run after any host allocation and before the next dispatch
+        that could write (or attend) the re-allocated ids — that restores
+        the standing "free blocks carry pos = -1" invariant before the
+        block can be handed to a new owner.  Every allocating engine entry
+        point calls this on its non-warm path.
+        """
+        pk = state.paged
+        if pk is None or not pk.evicted_pending:
+            return state
+        ids = pk.evicted_pending
+        pk.evicted_pending = []
+        pad = np.full((pk.num_blocks,), pk.num_blocks, np.int32)
+        pad[:len(ids)] = ids
+        if self._evict_fn is None:
+            self._evict_fn = self._build_evict_clear()
+        with (jax.profiler.TraceAnnotation("repro/evict_clear")
+              if self.annotate else _NULLCTX):
+            pos = self._evict_fn(state.tcache["pos"], jnp.asarray(pad))
+        return dataclasses.replace(state, tcache=dict(state.tcache, pos=pos))
+
+    def attach_prefix(self, dparams, state: DecodeState, slot: int,
+                      tokens, n_prefix: int, total_len: int, *,
+                      warm: bool = False) -> DecodeState:
+        """Admit a request whose first ``n_prefix`` feed rows are cached.
+
+        Host side: the (already locked) cache blocks were mapped into the
+        slot's table by the backend (`PagedKVTables.attach`); this call
+        marks the slot pending and handles the device half — a draft-only
+        prefix prefill (shared blocks hold target KV only) scattered into
+        the slot's draft ring, and the parked ``seq_lens``.  The uncached
+        suffix rows ``[n_prefix, total_len - 1)`` then flow through the
+        ordinary :meth:`prefill_chunk_into` path (``start = n_prefix``),
+        which a zero-suffix admission skips (see the backend's
+        ``commit_attached``).
+
+        ``tokens`` is the bucket-padded feed (prompt + stash); the draft
+        consumes rows ``[0, min(n_prefix, total_len - 2))`` of it.
+
+        ``warm=True`` compiles the draft-prefill and park paths for this
+        token bucket without touching host bookkeeping (result discarded).
+        """
+        self._require_unsharded("prefix-cache attach")
+        pk = state.paged
+        assert pk is not None, "attach_prefix needs a paged pool"
+        if warm:
+            state = self._warm_shield(state)
+        else:
+            pk.mark_pending(slot)
+        has_draft = self.draft is not None
+        if has_draft:
+            tokens = np.asarray(tokens, np.int32).reshape(1, -1)
+            P = int(tokens.shape[1])
+            L = pk.logical_len
+            dlim = min(n_prefix, total_len - 2)
+            if (P, L) not in self._attach_fns:
+                self._attach_fns[(P, L)] = self._build_draft_prefill(P, L)
+            with (jax.profiler.TraceAnnotation(f"repro/draft_prefill[P={P}]")
+                  if self.annotate else _NULLCTX):
+                d_single = self._attach_fns[(P, L)](
+                    dparams, jnp.asarray(tokens),
+                    jnp.full((1,), dlim, jnp.int32))
+        if has_draft not in self._attach_park_fns:
+            self._attach_park_fns[has_draft] = \
+                self._build_attach_park(has_draft)
+        with (jax.profiler.TraceAnnotation("repro/attach_park")
+              if self.annotate else _NULLCTX):
+            if has_draft:
+                dcache, seq_lens = self._attach_park_fns[True](
+                    state.dcache, d_single, state.seq_lens, jnp.int32(slot),
+                    jnp.int32(total_len))
+                return dataclasses.replace(state, dcache=dcache,
+                                           seq_lens=seq_lens)
+            seq_lens = self._attach_park_fns[False](
+                state.seq_lens, jnp.int32(slot), jnp.int32(total_len))
+            return dataclasses.replace(state, seq_lens=seq_lens)
+
+    def commit_attached(self, state: DecodeState, slot: int,
+                        total_len: int, last2, *,
+                        warm: bool = False) -> DecodeState:
+        """Turn a fully-cached (zero-suffix) attached slot into a live
+        decode row — no prefill forward at all.
+
+        The first decode step writes feed row ``total_len - 1``; when the
+        cached prefix covers it (``n_prefix == total_len``) that row lives
+        in a shared block, which is first COW-resolved through the
+        block-copy scatter.  Then the table grows to cover ``total_len``
+        and the ordinary chunk-commit scatter publishes the block table
+        and row state, leaving the slot bit-identical to a chunked (and
+        hence whole-prompt) admission.
+        """
+        self._require_unsharded("prefix-cache attach")
+        pk = state.paged
+        assert pk is not None
+        if warm:
+            # compile block_copy + chunk_commit with no-op pad-only args,
+            # off the host bookkeeping and off the live pool's buffers
+            state = self._warm_shield(state)
+            pad = np.full((pk.max_blocks,), pk.num_blocks, np.int32)
+            if self._block_copy_fn is None:
+                self._block_copy_fn = self._build_block_copy()
+            tcache = self._block_copy_fn(state.tcache, jnp.asarray(pad),
+                                         jnp.asarray(pad))
+            state = dataclasses.replace(state, tcache=tcache)
+            if True not in self._chunk_commit_fns:
+                self._chunk_commit_fns[True] = self._build_chunk_commit(True)
+            self._chunk_commit_fns[True](
+                state.seq_lens, state.last2, state.out, state.n_generated,
+                state.done, jnp.int32(slot), jnp.int32(total_len),
+                jnp.zeros((2,), jnp.int32), state.tcache["bt"],
+                jnp.full((pk.max_blocks,), -1, jnp.int32))
+            return state
+        pairs = pk.cow_for_range(slot, total_len - 1, total_len)
+        pk.ensure(slot, total_len)
+        pk.commit(slot, total_len - pk.tokens(slot))
+        pk.clear_pending(slot)
+        state = self._drain_evicted(state)
+        if pairs:
+            src = np.full((pk.max_blocks,), pk.num_blocks, np.int32)
+            dst = np.full((pk.max_blocks,), pk.num_blocks, np.int32)
+            for i, (s_, d_) in enumerate(pairs):
+                src[i], dst[i] = s_, d_
+            if self._block_copy_fn is None:
+                self._block_copy_fn = self._build_block_copy()
+            with (jax.profiler.TraceAnnotation("repro/block_copy")
+                  if self.annotate else _NULLCTX):
+                tcache = self._block_copy_fn(state.tcache, jnp.asarray(src),
+                                             jnp.asarray(dst))
+            state = dataclasses.replace(state, tcache=tcache)
+        ids = pk.table(slot)
+        bt_row = np.full((pk.max_blocks,), -1, np.int32)
+        bt_row[:len(ids)] = ids
+        if True not in self._chunk_commit_fns:
+            self._chunk_commit_fns[True] = self._build_chunk_commit(True)
+        cargs = (state.seq_lens, state.last2, state.out, state.n_generated,
+                 state.done, jnp.int32(slot), jnp.int32(total_len),
+                 jnp.asarray(np.asarray(last2, np.int32)),
+                 state.tcache["bt"], jnp.asarray(bt_row))
+        with (jax.profiler.TraceAnnotation("repro/chunk_commit")
+              if self.annotate else _NULLCTX):
+            seq_lens, l2, out, n_gen, done, bt = \
+                self._chunk_commit_fns[True](*cargs)
+        return dataclasses.replace(
+            state, seq_lens=seq_lens, last2=l2, out=out, n_generated=n_gen,
+            done=done, tcache=dict(state.tcache, bt=bt))
 
     # ------------------------------------------------------------------
     # chunked prefill into a slot (in-step chunked prefill; the scheduler
@@ -990,6 +1236,7 @@ class SpecDecodeEngine:
                     pk.commit(slot, n)
                 ids = pk.table(slot)
                 bt_row[:len(ids)] = ids
+                state = self._drain_evicted(state)
 
         # ---- the chunk forward ----
         L = (pk.logical_len if paged else int(state.tcache["pos"].shape[1]))
@@ -1038,6 +1285,7 @@ class SpecDecodeEngine:
                 ids = pk.table(slot)
                 bt_row = np.full((pk.max_blocks,), -1, np.int32)
                 bt_row[:len(ids)] = ids
+                state = self._drain_evicted(state)
             if paged not in self._chunk_commit_fns:
                 self._chunk_commit_fns[paged] = self._build_chunk_commit(paged)
             cargs = (state.seq_lens, state.last2, state.out,
@@ -1159,6 +1407,7 @@ class SpecDecodeEngine:
                 state = dataclasses.replace(
                     state, tcache=dict(state.tcache, bt=jnp.asarray(
                         pk.device_tables(exclude_pending=True))))
+            state = self._drain_evicted(state)
         B = state.seq_lens.shape[0]
         key = (B, s)
         if key not in self._step_fns:

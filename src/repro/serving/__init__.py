@@ -3,6 +3,7 @@ the iteration-level continuous-batching scheduler (live engine + simulation
 backends behind one protocol), slot/block-pool bookkeeping, and latency
 metrics.  See docs/ARCHITECTURE.md for the end-to-end picture."""
 from repro.serving.acceptance import GeometricAcceptance, match_prob
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.request import BatchRecord, Request
 from repro.serving.scheduler import (AdmissionPolicy, ContinuousEngineBackend,
                                      ContinuousScheduler, FCFSBacklog,

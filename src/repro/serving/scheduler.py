@@ -314,7 +314,8 @@ class ContinuousEngineBackend:
                  collect_outputs: bool = False,
                  s_cap: int = S_MAX,
                  mesh=None,
-                 paged_fused=None):
+                 paged_fused=None,
+                 prefix_cache: bool = False):
         if engine.tcfg.family in ("encdec", "audio", "vlm"):
             # these families need per-request modality extras (src_embeds /
             # prefix_embeds) that the admission path does not plumb yet; see
@@ -359,6 +360,29 @@ class ContinuousEngineBackend:
         self._warm_prefill: set = set()
         self._warm_chunk: set = set()
         self._warm_step: set = set()
+        self._warm_attach: set = set()
+        self._warm_commit_attached = False
+        # cross-request prefix sharing (serving/prefix_cache.py): opt-in,
+        # paged + unsharded + chunk-capable only.  `cache is None` keeps
+        # every legacy code path bit-identical.
+        self.cache = None
+        self._locked: Dict[int, List[int]] = {}  # rid -> lock()ed blocks
+        if prefix_cache:
+            if self.kv is None:
+                raise ValueError(
+                    "prefix_cache=True needs a paged KV pool (block_size)")
+            if mesh is not None:
+                raise ValueError(
+                    "prefix_cache is not supported on a mesh-sharded pool: "
+                    "shared blocks may live on any shard (allocation is not "
+                    "shard-local)")
+            if not self.can_chunk:
+                raise ValueError(
+                    "prefix_cache needs chunked prefill support: the "
+                    "uncached suffix of a hit is fed through the chunk path")
+            from repro.serving.prefix_cache import PrefixCache
+            self.cache = PrefixCache(self.kv.pool)
+            self.kv.attach_cache(self.cache)
         for s in warm_s:
             self.warm_step(s)
 
@@ -448,6 +472,89 @@ class ContinuousEngineBackend:
         np.asarray(self.state.seq_lens)  # lint: allow-host-sync(deliberate fence: chunk wall-clock timing)
         return time.perf_counter() - t0
 
+    # ------------------------------------------------------------------
+    # prefix-cache protocol (no-ops unless built with prefix_cache=True;
+    # SimStepBackend implements the same five methods over the same host
+    # accounting, which is what makes cache admissions replay sim-vs-live)
+
+    def match_and_lock(self, req: Request) -> int:
+        """Longest cached prefix of ``req``'s *prompt* (never the stash:
+        generated tokens are model outputs the sim backend cannot know, so
+        matching them would break sim-vs-live re-derivation).  The matched
+        blocks are pinned against eviction until :meth:`attach` or
+        :meth:`cancel_match`.  Returns the prefix length in tokens."""
+        if self.cache is None:
+            return 0
+        blocks = self.cache.lock(np.asarray(req.tokens[:req.prompt_len]))
+        if not blocks:
+            return 0
+        self._locked[req.rid] = blocks
+        return len(blocks) * self.kv.block_size
+
+    def cancel_match(self, req: Request) -> None:
+        """Drop a lock taken by :meth:`match_and_lock` (admission abort)."""
+        blocks = self._locked.pop(req.rid, None)
+        if blocks:
+            self.cache.unlock(blocks)
+
+    def attach(self, req: Request, slot: int, n_prefix: int) -> float:
+        """Map the locked prefix blocks into ``slot`` (refcount+1), park
+        the slot, and run the draft-only prefix prefill; returns seconds.
+        The uncached suffix is then fed via :meth:`prefill_chunk` with
+        ``start = n_prefix`` (or, zero-suffix, :meth:`commit_attached`)."""
+        blocks = self._locked.pop(req.rid)
+        prompt = self._full_prompt(req)
+        total_len = len(prompt)
+        self.kv.attach(slot, blocks, n_prefix)
+        self.cache.unlock(blocks)      # the slot now holds its own refs
+        P = self._bucket(total_len)
+        toks = np.ones((P,), np.int32)
+        toks[:total_len] = prompt
+        if P not in self._warm_attach:
+            self.engine.attach_prefix(self.dparams, self.state, slot, toks,
+                                      n_prefix, total_len, warm=True)
+            self._warm_attach.add(P)
+        t0 = time.perf_counter()
+        self.state = self.engine.attach_prefix(
+            self.dparams, self.state, slot, toks, n_prefix, total_len)
+        np.asarray(self.state.seq_lens)  # lint: allow-host-sync(deliberate fence: attach wall-clock timing)
+        return time.perf_counter() - t0
+
+    def commit_attached(self, req: Request, slot: int) -> float:
+        """Commit a fully-cached attach into the decode batch (no prefill
+        forward at all — COW of the last block if needed, then the ordinary
+        chunk-commit).  Returns seconds."""
+        prompt = self._full_prompt(req)
+        total_len = len(prompt)
+        if not self._warm_commit_attached:
+            self.engine.commit_attached(self.state, slot, total_len,
+                                        prompt[-2:], warm=True)
+            self._warm_commit_attached = True
+        t0 = time.perf_counter()
+        self.state = self.engine.commit_attached(self.state, slot, total_len,
+                                                 prompt[-2:])
+        np.asarray(self.state.seq_lens)  # lint: allow-host-sync(deliberate fence: attach-commit wall-clock timing)
+        return time.perf_counter() - t0
+
+    def cache_insert(self, req: Request, slot: int) -> None:
+        """Publish ``slot``'s prompt blocks into the prefix index (called
+        by the scheduler when the slot joins the decode batch).
+
+        Only *prompt* rows strictly below the feed's final row are indexed:
+        the block containing row ``total_len - 1`` is excluded, so this
+        slot's own decode writes never land in an indexed block and need no
+        COW.  First writer wins — prefixes already indexed keep their node.
+        """
+        if self.cache is None:
+            return
+        total_len = req.prompt_len + req.n_generated
+        rows = min(req.prompt_len, total_len - 1)
+        n_ins = rows // self.kv.block_size
+        if n_ins:
+            self.cache.insert(
+                np.asarray(req.tokens[:n_ins * self.kv.block_size]),
+                self.kv.table(slot)[:n_ins])
+
     def step(self, s: int) -> Tuple[float, np.ndarray, np.ndarray]:
         """One speculative step at live occupancy.  Returns
         (wall seconds, committed[capacity], done[capacity])."""
@@ -518,13 +625,21 @@ class SimStepBackend:
                  num_blocks: Optional[int] = None,
                  max_context: int = 256,
                  done_source: Optional[Callable] = None,
-                 chunk_source: Optional[Callable] = None):
+                 chunk_source: Optional[Callable] = None,
+                 prefix_cache: bool = False,
+                 prefill_token_cost: float = 0.0):
         self.model = model
         self.capacity = capacity
         self.acceptance = GeometricAcceptance(model, seed)
         self.accept_source = accept_source
         self.duration_source = duration_source
         self.prefill_source = prefill_source
+        # default prefill cost per fed token (seconds): 0.0 keeps the legacy
+        # "prefill is outside the fitted model" behavior; a positive value
+        # makes TTFT sensitive to how many rows actually get prefilled —
+        # which is what lets the templated-traffic bench show the prefix
+        # cache's TTFT win on the sim backend
+        self.prefill_token_cost = prefill_token_cost
         # replayed per-step done sets: the live engine marks a slot done on
         # its EOS step (commit > 0) one iteration before it commits 0, and
         # victim selection must see the same flag to replay identically
@@ -548,6 +663,18 @@ class SimStepBackend:
         # the plain sim has no KV to overflow, so no admission hard limit
         self.max_context = (self.kv.logical_len if self.kv is not None
                             else None)
+        # prefix cache mirror: the same PrefixCache/refcount machinery as
+        # the live backend over the same pool geometry, so cache hits,
+        # attach block accounting and evictions re-derive identically
+        self.cache = None
+        self._locked: Dict[int, List[int]] = {}
+        if prefix_cache:
+            if self.kv is None:
+                raise ValueError(
+                    "prefix_cache=True needs a paged KV mirror (block_size)")
+            from repro.serving.prefix_cache import PrefixCache
+            self.cache = PrefixCache(self.kv.pool)
+            self.kv.attach_cache(self.cache)
 
     def _batch_key(self, b: int) -> int:
         for x in self.model.batch_sizes:
@@ -561,9 +688,11 @@ class SimStepBackend:
         if self.kv is not None:
             # a re-admitted (preempted) request re-prefills prompt + stash
             self.kv.prefill(slot, req.prompt_len + req.n_generated)
+            self.kv.evicted_pending.clear()  # no device rows to wipe in sim
         if self.prefill_source is not None:
             return float(self.prefill_source(req.rid))
-        return 0.0                     # prefill is outside the fitted model
+        # default: prefill outside the fitted model (0.0 per-token cost)
+        return (req.prompt_len + req.n_generated) * self.prefill_token_cost
 
     def prefill_chunk(self, req: Request, slot: int, start: int,
                       n: int) -> float:
@@ -588,9 +717,11 @@ class SimStepBackend:
                 self.kv.commit(slot, 1)
                 self.kv.clear_pending(slot)
             self.done[slot] = False
+        if self.kv is not None:
+            self.kv.evicted_pending.clear()  # no device rows to wipe in sim
         if self.chunk_source is not None:
             return float(self.chunk_source(req.rid))
-        return 0.0
+        return n * self.prefill_token_cost
 
     def step(self, s: int) -> Tuple[float, np.ndarray, np.ndarray]:
         active = np.where(~self.done)[0]
@@ -604,6 +735,7 @@ class SimStepBackend:
                 if self.kv.is_pending(slot):
                     continue
                 self.kv.ensure(slot, self.kv.tokens(slot) + s)
+            self.kv.evicted_pending.clear()  # no device rows to wipe in sim
         if self.duration_source is not None:
             dt = float(self.duration_source(self._step_idx, b, s))
         else:
@@ -644,6 +776,70 @@ class SimStepBackend:
         if self.kv is not None:
             self.kv.release(slot)
 
+    # ------------------------------------------------------------------
+    # prefix-cache protocol — same five methods as the live backend, over
+    # the same PrefixCache machinery, so lock/attach/insert block
+    # accounting (and therefore every admission/preemption decision)
+    # re-derives identically; only device work (and its clock cost) is
+    # absent.
+
+    def match_and_lock(self, req: Request) -> int:
+        """Longest cached prefix of the *prompt*, locked; returns tokens."""
+        if self.cache is None:
+            return 0
+        blocks = self.cache.lock(req.tokens[:req.prompt_len])
+        if not blocks:
+            return 0
+        self._locked[req.rid] = blocks
+        return len(blocks) * self.kv.block_size
+
+    def cancel_match(self, req: Request) -> None:
+        """Drop the lock taken by :meth:`match_and_lock` (admission abort)."""
+        blocks = self._locked.pop(req.rid, None)
+        if blocks:
+            self.cache.unlock(blocks)
+
+    def attach(self, req: Request, slot: int, n_prefix: int) -> float:
+        """Map the locked prefix blocks into ``slot``'s table at ref+1."""
+        blocks = self._locked.pop(req.rid)
+        self.done[slot] = True            # mid-admission: out of decode batch
+        self.rids[slot] = req.rid
+        self.kv.attach(slot, blocks, n_prefix)
+        self.kv.mark_pending(slot)
+        self.cache.unlock(blocks)
+        return 0.0
+
+    def commit_attached(self, req: Request, slot: int) -> float:
+        """Zero-suffix admission: the whole feedable prompt was cached.
+
+        Mirrors the live engine's commit: COW the block holding row
+        total-1 if it is shared, grow to cover the first decode row, and
+        join the decode batch.
+        """
+        total_len = req.prompt_len + req.n_generated
+        self.kv.cow_for_range(slot, total_len - 1, total_len)
+        self.kv.ensure(slot, total_len)
+        self.kv.commit(slot, total_len - self.kv.tokens(slot))
+        self.kv.clear_pending(slot)
+        self.kv.evicted_pending.clear()  # no device rows to wipe in sim
+        self.done[slot] = False
+        if self.prefill_source is not None:
+            return float(self.prefill_source(req.rid))
+        return 0.0
+
+    def cache_insert(self, req: Request, slot: int) -> None:
+        """Publish ``slot``'s full prompt blocks into the prefix index."""
+        if self.cache is None:
+            return
+        total_len = req.prompt_len + req.n_generated
+        # never index the block holding row total-1: the slot's own decode
+        # writes land there, and indexed blocks must stay immutable
+        rows = min(req.prompt_len, total_len - 1)
+        n_ins = rows // self.kv.block_size
+        if n_ins:
+            self.cache.insert(req.tokens[:n_ins * self.kv.block_size],
+                              self.kv.table(slot)[:n_ins])
+
 
 # ---------------------------------------------------------------------------
 # the scheduler
@@ -665,6 +861,8 @@ class StepTrace:
     done_rids: Tuple[int, ...] = ()    # rids the backend flagged done after
     chunked: Tuple[Tuple[int, int], ...] = ()  # (rid, tokens) chunk events
     chunk_s: Tuple[float, ...] = ()    # per-chunk-event seconds
+    cache_hits: Tuple[Tuple[int, int], ...] = ()  # (rid, prefix tokens)
+                                       # per prefix-cache-hit admission
 
 
 def replay_sources(trace: Sequence[StepTrace]):
@@ -689,6 +887,13 @@ def replay_sources(trace: Sequence[StepTrace]):
     A preempted request is admitted (and so prefilled) more than once, so
     per-rid prefill/chunk costs replay as FIFO queues of the recorded
     durations.
+
+    Prefix-cache admissions need no extra channel: cache decisions are
+    re-derived by the sim backend's own cache mirror, a zero-suffix hit
+    records its attach+commit seconds as an ordinary ``prefill_s`` entry
+    (consumed by the sim's ``commit_attached``), and a hit with an
+    uncached suffix folds its attach seconds into the first suffix
+    chunk's recorded duration.
     """
     steps = [t for t in trace if t.occupancy > 0]
     prefill: Dict[int, List[float]] = {}
@@ -783,6 +988,10 @@ class ContinuousScheduler:
         batches: List[BatchRecord] = []
         self.trace = []
         kv = getattr(self.backend, "kv", None)
+        # prefix cache: both stock backends expose .cache (None unless built
+        # with prefix_cache=True); foreign backends without the attribute
+        # simply never enter the cache paths
+        cache_on = getattr(self.backend, "cache", None) is not None
         max_ctx = getattr(self.backend, "max_context", None)
         s_cap = self.s_cap
         chunk_cfg = getattr(self.policy, "chunk_tokens", None)
@@ -825,17 +1034,27 @@ class ContinuousScheduler:
             prefill_s: List[float] = []
             chunked: List[Tuple[int, int]] = []
             chunk_s: List[float] = []
+            cache_hits: List[Tuple[int, int]] = []
             budget_left = (budget_cfg if (chunking and budget_cfg is not None)
                            else float("inf"))
 
-            def feed_chunk(req: Request, slot: int, m: int) -> None:
+            def feed_chunk(req: Request, slot: int, m: int,
+                           extra: float = 0.0) -> None:
+                # ``extra`` folds a cache-attach's seconds into the first
+                # suffix chunk's recorded duration, so replay_sources needs
+                # no extra replay channel for attach costs
                 nonlocal clock
                 start = req.prefill_pos
-                dt = self.backend.prefill_chunk(req, slot, start, m)
+                dt = self.backend.prefill_chunk(req, slot, start, m) + extra
                 clock += dt
                 chunked.append((req.rid, m))
                 chunk_s.append(dt)
                 req.prefill_pos += m
+                if (cache_on and req.prefill_pos
+                        == req.prompt_len + req.n_generated - 1):
+                    # final chunk: the slot joins the decode batch — publish
+                    # its prompt blocks into the prefix index
+                    self.backend.cache_insert(req, slot)
                 if tel is not None:
                     tel.span("chunk_continue", len(self.trace), dt,
                              rid=req.rid, slot=slot, start=start, n=m)
@@ -853,6 +1072,31 @@ class ContinuousScheduler:
                 admitted.append(req.rid)
                 return slot
 
+            def attach_admit(req: Request, slot: int, P: int,
+                             suffix_chunk: int) -> None:
+                """Admission via a cached prefix: map the matched blocks
+                into the slot, then either commit straight into the decode
+                batch (zero uncached suffix) or feed the first
+                ``suffix_chunk`` uncached feed-positions."""
+                nonlocal clock
+                total_len = req.prompt_len + req.n_generated
+                feed_total = total_len - 1
+                cache_hits.append((req.rid, P))
+                a_dt = self.backend.attach(req, slot, P)
+                req.prefill_pos = P
+                if P >= feed_total:
+                    c_dt = self.backend.commit_attached(req, slot)
+                    clock += a_dt + c_dt
+                    prefill_s.append(a_dt + c_dt)
+                    self.backend.cache_insert(req, slot)
+                    if tel is not None:
+                        tel.span("prefill", len(self.trace), a_dt + c_dt,
+                                 rid=req.rid, slot=slot,
+                                 tokens=total_len - P, cached=P)
+                else:
+                    prefill_s.append(-1.0)
+                    feed_chunk(req, slot, suffix_chunk, extra=a_dt)
+
             # ---- continue in-flight chunked prefills (Sarathi: ongoing
             # prefills spend the budget before new admissions) ----
             if chunking and prefilling:
@@ -867,7 +1111,9 @@ class ContinuousScheduler:
                     m = int(min(chunk_cfg, feed_total - start, budget_left))
                     if kv is not None:
                         # blocks actually available to this chunk right now
-                        avail = (kv.free_blocks - growth_reserve(s_cap)
+                        # (free + reclaimable cache-only blocks: the pool
+                        # evicts on demand when the free list runs short)
+                        avail = (kv.available_blocks - growth_reserve(s_cap)
                                  - pending_reserve(exclude=slot))
                         cap_rows = ((kv.allocated(slot) + avail)
                                     * kv.block_size - start)
@@ -896,23 +1142,47 @@ class ContinuousScheduler:
                     if max_ctx is not None:
                         _reject_oversize(req, max_ctx, s_cap)
                     total_len = req.prompt_len + req.n_generated
+                    # longest cached prefix of the prompt, pinned against
+                    # eviction until attach (or the break below)
+                    P = (self.backend.match_and_lock(req) if cache_on
+                         else 0)
                     if kv is not None:
                         # reserve the full prompt + first-step worst case up
                         # front (plus the running batch's growth and the
                         # other pending prefills' completion) — a chunked
                         # admission that could not finish would hold blocks
-                        # forever
-                        need = kv.blocks_for(total_len + s_cap)
+                        # forever.  A cache hit attaches P // block_size
+                        # blocks for free (+1 only for the COW copy when the
+                        # whole prompt is cached); reclaimable cache-only
+                        # blocks count as available (eviction on demand).
+                        need = (kv.blocks_for(total_len + s_cap)
+                                - P // kv.block_size
+                                + (1 if P == total_len else 0))
                         if (need + growth_reserve(s_cap) + pending_reserve()
-                                > kv.free_blocks):
+                                > kv.available_blocks):
+                            if P:
+                                self.backend.cancel_match(req)
                             break      # head-of-line: wait for free blocks
                     slot = claim_for(req)
                     req.prefill_pos = 0
-                    if total_len <= budget_left:
+                    if P:
+                        feed_total = total_len - 1
+                        if P >= feed_total:
+                            attach_admit(req, slot, P, 0)
+                        else:
+                            m = int(min(chunk_cfg, budget_left,
+                                        feed_total - P))
+                            attach_admit(req, slot, P, m)
+                            budget_left -= m
+                            if req.prefill_pos < feed_total:
+                                prefilling[slot] = req
+                    elif total_len <= budget_left:
                         p_dt = self.backend.prefill(req, slot)
                         clock += p_dt
                         prefill_s.append(p_dt)
                         budget_left -= total_len
+                        if cache_on:
+                            self.backend.cache_insert(req, slot)
                         if tel is not None:
                             tel.span("prefill", len(self.trace), p_dt,
                                      rid=req.rid, slot=slot,
@@ -934,25 +1204,41 @@ class ContinuousScheduler:
                         # oversized requests can NEVER be served (deferring
                         # would spin forever); fail loudly before claiming
                         _reject_oversize(req, max_ctx, s_cap)
+                    total_len = req.prompt_len + req.n_generated
+                    P = (self.backend.match_and_lock(req) if cache_on
+                         else 0)
                     if kv is not None:
                         # admit only if the free list covers the prompt
                         # (plus stash), this request's worst-case first
                         # step, AND the running batch's own worst-case
                         # growth — otherwise a fresh admit pays a full B=1
                         # prefill just to be evicted by the pressure check
-                        # below (prefill thrash)
-                        need = kv.blocks_for(req.prompt_len + req.n_generated
-                                             + s_cap)
-                        if need + growth_reserve(s_cap) > kv.free_blocks:
+                        # below (prefill thrash).  Cache hits and
+                        # reclaimable blocks discount as in the chunked
+                        # branch above.
+                        need = (kv.blocks_for(total_len + s_cap)
+                                - P // kv.block_size
+                                + (1 if P == total_len else 0))
+                        if need + growth_reserve(s_cap) > kv.available_blocks:
+                            if P:
+                                self.backend.cancel_match(req)
                             break      # head-of-line: wait for free blocks
                     slot = claim_for(req)
+                    if P:
+                        # no per-iteration budget here: any uncached suffix
+                        # is fed as one chunk (cache_on implies can_chunk)
+                        req.prefill_pos = 0
+                        attach_admit(req, slot, P, total_len - 1 - P)
+                        continue
                     p_dt = self.backend.prefill(req, slot)
                     clock += p_dt
                     prefill_s.append(p_dt)
+                    if cache_on:
+                        self.backend.cache_insert(req, slot)
                     if tel is not None:
                         tel.span("prefill", len(self.trace), p_dt,
                                  rid=req.rid, slot=slot,
-                                 tokens=req.prompt_len + req.n_generated)
+                                 tokens=total_len)
             if tel is not None and admitted:
                 tel.span("admit", len(self.trace),
                          sum(dt for dt in prefill_s if dt > 0),
@@ -975,7 +1261,7 @@ class ContinuousScheduler:
                     ds = decode_slots()
                     s = self.controller.choose(len(ds))
                     need = (growth_reserve(s) + pending_reserve())
-                    if need <= kv.free_blocks:
+                    if need <= kv.available_blocks:
                         break
                     # never evict a slot the backend already flagged done
                     # (EOS'd, awaiting its zero-commit retirement step):
@@ -1065,7 +1351,7 @@ class ContinuousScheduler:
                 admitted=tuple(admitted), duration=dt,
                 prefill_s=tuple(prefill_s), preempted=tuple(preempted),
                 done_rids=done_rids, chunked=tuple(chunked),
-                chunk_s=tuple(chunk_s)))
+                chunk_s=tuple(chunk_s), cache_hits=tuple(cache_hits)))
             prev_done = set(done_rids)
             if tel is not None:
                 g = dict(occupancy=pool.occupancy, decode_batch=b, s=s,
@@ -1076,6 +1362,14 @@ class ContinuousScheduler:
                     g.update(free_blocks=kv.free_blocks,
                              used_blocks=kv.num_blocks - kv.free_blocks,
                              fragmentation=kv.fragmentation)
+                if cache_on:
+                    cache = self.backend.cache
+                    g.update(shared_blocks=kv.shared_blocks,
+                             cached_blocks=kv.cached_blocks,
+                             evicted_blocks=kv.evicted_total,
+                             cache_hit_rate=(cache.hits
+                                             / max(cache.lookups, 1)),
+                             cache_hit_tokens=cache.hit_tokens)
                 tel.iteration(len(self.trace) - 1, clock, **g)
         return ServeResult(requests=list(pending), batches=batches)
 
@@ -1090,6 +1384,7 @@ def serve_continuous_live(requests: Sequence[Request], engine, tparams,
                           num_blocks: Optional[int] = None,
                           mesh=None,
                           paged_fused=None,
+                          prefix_cache: bool = False,
                           telemetry=None):
     """Serve a request trace on a LIVE SpecDecodeEngine with iteration-level
     continuous batching: requests join/leave at speculative-step granularity
@@ -1120,6 +1415,14 @@ def serve_continuous_live(requests: Sequence[Request], engine, tparams,
     constructed with, or previously forced to, an explicit path.  Token
     outputs and the StepTrace are identical either way
     (tests/test_paged_fused_kernel.py asserts it).
+
+    ``prefix_cache`` (requires ``block_size``) turns on cross-request
+    prefix sharing: admission matches the longest cached prefix of each
+    prompt in a radix index over the block pool, maps those blocks into
+    the new slot at refcount+1 and prefills only the uncached suffix;
+    shared blocks are copy-on-write and eviction is LRU over cache-only
+    blocks.  Token outputs and the StepTrace scheduling signature are
+    identical to a cold run (tests/test_prefix_cache.py asserts it).
 
     ``mesh`` runs the slot pool sharded over the mesh's data axes (SPMD
     serving step, replicated params, round-robin slot placement across the
@@ -1158,6 +1461,13 @@ def serve_continuous_live(requests: Sequence[Request], engine, tparams,
             "serve_continuous_live: pass paged_fused to the "
             "ContinuousEngineBackend constructor when supplying an explicit "
             "backend (the kernel path is baked in at pool init)")
+    if backend is not None and prefix_cache:
+        # the cache wraps the backend's pool at construction time; silently
+        # dropping the flag would let a caller believe sharing was on
+        raise ValueError(
+            "serve_continuous_live: pass prefix_cache=True to the "
+            "ContinuousEngineBackend constructor when supplying an explicit "
+            "backend (the cache wraps the pool at init)")
     if backend is None:
         warm = sorted(set(controller.lut.table.values()))
         backend = ContinuousEngineBackend(engine, tparams, dparams,
@@ -1166,7 +1476,8 @@ def serve_continuous_live(requests: Sequence[Request], engine, tparams,
                                           block_size=block_size,
                                           num_blocks=num_blocks,
                                           s_cap=s_cap, mesh=mesh,
-                                          paged_fused=paged_fused)
+                                          paged_fused=paged_fused,
+                                          prefix_cache=prefix_cache)
     for r in requests:
         if r.prompt_len + r.max_new + s_cap > backend.max_context:
             raise ValueError(

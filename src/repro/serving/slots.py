@@ -15,10 +15,27 @@ count-exact mirror inside :class:`~repro.serving.scheduler.SimStepBackend`,
 so the scheduler's preemption decisions — pure functions of (free blocks,
 per-slot tokens, per-slot allocated blocks) — replay identically sim vs
 live.
+
+Prefix sharing (copy-on-write): every block carries a reference count.
+``alloc`` hands blocks out at refcount 1; a block enters the free list
+exactly when its count drops to 0 (``decref``/``release``), so the free
+set and the referenced set partition the pool at all times.  A block with
+refcount > 1 is SHARED — between slots whose requests share a prompt
+prefix, and/or with the :class:`~repro.serving.prefix_cache.PrefixCache`
+radix index, which holds its own +1 on every block it indexes — and must
+never be written in place: writers go through
+:meth:`PagedKVTables.cow_for_range`, which swaps a fresh copy into the
+writing slot's table (the engine copies the rows with a jit-cached
+block-copy scatter) and drops the shared reference.  Cache-held blocks at
+refcount 1 are *reclaimable*: allocation under pressure evicts them
+LRU-first (``PrefixCache.reclaim``) and records the evicted ids in
+``evicted_pending`` so the live engine can wipe their ``pos`` rows before
+the blocks are ever handed out again (the standing "free blocks carry
+pos = -1" invariant).
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -39,6 +56,12 @@ class BlockPool:
     Blocks are handed out lowest-id-first and the free list is kept sorted,
     so allocation is deterministic — a requirement for sim-vs-live parity of
     preemption decisions (both sides see the same free count at every step).
+
+    Every block carries a reference count: 0 while on the free list, 1 when
+    exclusively owned, > 1 when shared between slot tables and/or the prefix
+    cache.  ``free`` is a bulk :meth:`decref` — a block only re-enters the
+    free list when its last reference drops — so with no sharing the
+    behavior is exactly the pre-refcount allocator.
     """
 
     def __init__(self, num_blocks: int, block_size: int):
@@ -50,6 +73,7 @@ class BlockPool:
         self.block_size = block_size
         # lowest-numbered block allocated first (pop from the tail)
         self._free = list(range(num_blocks - 1, -1, -1))
+        self._refs = [0] * num_blocks
 
     def blocks_for(self, n_tokens: int) -> int:
         """Blocks needed to hold ``n_tokens`` KV rows."""
@@ -61,11 +85,51 @@ class BlockPool:
                 f"requested {n} blocks, only {len(self._free)} free "
                 f"(pool of {self.num_blocks}); the scheduler should have "
                 f"preempted before this allocation")
-        return [self._free.pop() for _ in range(n)]
+        out = [self._free.pop() for _ in range(n)]
+        for b in out:
+            self._refs[b] = 1
+        return out
 
-    def free(self, blocks: List[int]) -> None:
-        self._free.extend(blocks)
-        self._free.sort(reverse=True)
+    def incref(self, block: int) -> int:
+        """Add a reference to an allocated block; returns the new count."""
+        if self._refs[block] < 1:
+            raise RuntimeError(
+                f"incref on free block {block}: references may only be "
+                f"added to a block that is already owned")
+        self._refs[block] += 1
+        return self._refs[block]
+
+    def decref(self, block: int) -> bool:
+        """Drop one reference; returns True when the block became free."""
+        if self._refs[block] < 1:
+            raise RuntimeError(
+                f"double-free of block {block} (refcount already 0)")
+        self._refs[block] -= 1
+        if self._refs[block] == 0:
+            self._free.append(block)
+            self._free.sort(reverse=True)
+            return True
+        return False
+
+    def refcount(self, block: int) -> int:
+        return self._refs[block]
+
+    def free(self, blocks: List[int]) -> List[int]:
+        """Bulk :meth:`decref`; returns the blocks that actually became
+        free (all of them when nothing is shared — the pre-refcount
+        contract)."""
+        freed = []
+        for b in blocks:
+            if self._refs[b] < 1:
+                raise RuntimeError(
+                    f"double-free of block {b} (refcount already 0)")
+            self._refs[b] -= 1
+            if self._refs[b] == 0:
+                freed.append(b)
+        if freed:
+            self._free.extend(freed)
+            self._free.sort(reverse=True)
+        return freed
 
     @property
     def free_count(self) -> int:
@@ -76,20 +140,51 @@ class BlockPool:
         return self.num_blocks - len(self._free)
 
     @property
+    def shared_count(self) -> int:
+        """Blocks currently referenced more than once (shared)."""
+        return sum(r > 1 for r in self._refs)
+
+    @property
+    def exclusive_count(self) -> int:
+        """Blocks referenced exactly once (exclusively owned)."""
+        return sum(r == 1 for r in self._refs)
+
+    def check_invariants(self) -> None:
+        """Raise AssertionError unless the free set and the referenced set
+        partition the pool — the no-leak / no-double-free invariant the
+        property suite asserts after every operation."""
+        free = set(self._free)
+        assert len(free) == len(self._free), "duplicate id on the free list"
+        assert self._free == sorted(free, reverse=True), \
+            "free list not sorted descending"
+        for b in range(self.num_blocks):
+            if b in free:
+                assert self._refs[b] == 0, \
+                    f"block {b} is free but has refcount {self._refs[b]}"
+            else:
+                assert self._refs[b] >= 1, \
+                    f"block {b} leaked: not free, refcount 0"
+        assert len(free) + sum(r > 0 for r in self._refs) == self.num_blocks
+
+    @staticmethod
+    def _run_fragmentation(ids_desc: List[int]) -> float:
+        """1 − (largest contiguous run / count) over a descending id list."""
+        if not ids_desc:
+            return 0.0
+        best = run = 1
+        for prev, cur in zip(ids_desc, ids_desc[1:]):
+            run = run + 1 if prev == cur + 1 else 1
+            best = max(best, run)
+        return 1.0 - best / len(ids_desc)
+
+    @property
     def fragmentation(self) -> float:
         """Free-list fragmentation in [0, 1]: one minus the largest
         contiguous free run over the total free count (0.0 when the free
         list is empty or a single run).  Block tables make any free block
         usable, so this is a telemetry gauge, not an allocator concern —
         it tracks how shuffled the pool has become under churn."""
-        if not self._free:
-            return 0.0
-        # _free is kept sorted descending; walk runs of consecutive ids
-        best = run = 1
-        for prev, cur in zip(self._free, self._free[1:]):
-            run = run + 1 if prev == cur + 1 else 1
-            best = max(best, run)
-        return 1.0 - best / len(self._free)
+        return self._run_fragmentation(self._free)
 
 
 class PagedKVTables:
@@ -98,7 +193,17 @@ class PagedKVTables:
     Tracks, per slot, the physical blocks backing its KV rows and the number
     of tokens written so far (prompt + raw committed).  ``ensure`` grows a
     table block-by-block as the sequence grows — allocate-on-commit — and
-    ``release`` returns every block to the free list on retire/preempt.
+    ``release`` drops one reference on every block on retire/preempt (with
+    no sharing that frees them all — the pre-refcount contract).
+
+    With a :class:`~repro.serving.prefix_cache.PrefixCache` attached
+    (:meth:`attach_cache`), allocations that outrun the free list reclaim
+    LRU cache-only blocks first; the evicted ids accumulate in
+    ``evicted_pending`` until the live engine wipes their device ``pos``
+    rows (sim backends just clear the list).  ``attach`` maps already-held
+    cache blocks into a slot's table at refcount+1 and
+    :meth:`cow_for_range` is the only legal way to make shared rows
+    writable again.
     """
 
     def __init__(self, num_blocks: int, block_size: int, capacity: int,
@@ -124,6 +229,14 @@ class PagedKVTables:
         # (seq + s) must not be charged to them — the live engine and the
         # sim mirror both skip pending slots in their pre-step growth
         self._pending: set = set()
+        # prefix cache (None = sharing disabled; exact legacy behavior)
+        self.cache = None
+        # cache blocks evicted by reclaim-under-pressure whose device pos
+        # rows still hold stale entries; the live engine drains this list
+        # (pos.at[ids].set(-1)) before the next dispatch that could hand
+        # the ids back out, sim backends just clear it
+        self.evicted_pending: List[int] = []
+        self.evicted_total = 0
 
     # ------------------------------------------------------------------
     # geometry
@@ -141,9 +254,45 @@ class PagedKVTables:
         return self.pool.free_count
 
     @property
+    def available_blocks(self) -> int:
+        """Blocks an allocation can actually obtain: the free list plus
+        cache-only (refcount-1, unlocked) blocks that reclaim-under-pressure
+        may evict.  Every feasibility check in the scheduler uses this —
+        with no cache attached it equals ``free_blocks`` exactly."""
+        extra = self.cache.reclaimable() if self.cache is not None else 0
+        return self.pool.free_count + extra
+
+    @property
+    def shared_blocks(self) -> int:
+        """Blocks referenced more than once (slot tables and/or cache)."""
+        return self.pool.shared_count
+
+    @property
+    def cached_blocks(self) -> int:
+        """Blocks currently indexed by the attached prefix cache."""
+        return self.cache.size if self.cache is not None else 0
+
+    @property
     def fragmentation(self) -> float:
-        """Free-list fragmentation gauge (see BlockPool.fragmentation)."""
-        return self.pool.fragmentation
+        """Free-list fragmentation gauge (see BlockPool.fragmentation).
+
+        With a prefix cache attached the gauge is computed over the free
+        list *plus* the reclaimable cache-only blocks: those are the ids an
+        allocation can actually obtain, and the old free-list-only walk
+        would misreport 0.0 fragmentation on a pool whose every available
+        block sits (scattered) in the cache."""
+        if self.cache is None:
+            return self.pool.fragmentation
+        ids = sorted(set(self.pool._free) | set(self.cache.reclaimable_ids()),
+                     reverse=True)
+        return BlockPool._run_fragmentation(ids)
+
+    def attach_cache(self, cache) -> None:
+        """Attach a :class:`~repro.serving.prefix_cache.PrefixCache` so
+        allocations can reclaim LRU cache-only blocks under pressure."""
+        if cache.pool is not self.pool:
+            raise ValueError("prefix cache is bound to a different BlockPool")
+        self.cache = cache
 
     @property
     def logical_len(self) -> int:
@@ -184,6 +333,17 @@ class PagedKVTables:
     # ------------------------------------------------------------------
     # lifecycle
 
+    def _alloc(self, n: int) -> List[int]:
+        """Pool allocation that reclaims LRU cache-only blocks when the
+        free list alone cannot serve the request."""
+        short = n - self.pool.free_count
+        if short > 0 and self.cache is not None:
+            evicted = self.cache.reclaim(short)
+            if evicted:
+                self.evicted_pending.extend(evicted)
+                self.evicted_total += len(evicted)
+        return self.pool.alloc(n)
+
     def prefill(self, slot: int, n_tokens: int) -> List[int]:
         """Allocate the blocks covering a fresh prompt in ``slot``."""
         if self._tables[slot]:
@@ -193,10 +353,59 @@ class PagedKVTables:
             raise ValueError(
                 f"{n_tokens} tokens need {need} blocks > per-slot cap "
                 f"{self.max_blocks}")
-        blocks = self.pool.alloc(need)
+        blocks = self._alloc(need)
         self._tables[slot] = blocks
         self._tokens[slot] = n_tokens
         return blocks
+
+    def attach(self, slot: int, blocks: List[int], n_tokens: int) -> None:
+        """Map already-owned cache blocks into an empty slot's table.
+
+        Each block gains a reference (the slot's own); the caller must
+        already hold the blocks (the admission lock or the cache index), so
+        they cannot have been evicted between match and attach.  The slot
+        starts at ``n_tokens`` = blocks·block_size prefix rows; the suffix
+        is fed afterwards through the normal ensure/commit chunk path.
+        """
+        if self._tables[slot]:
+            raise RuntimeError(f"slot {slot} already holds blocks")
+        if len(blocks) > self.max_blocks:
+            raise ValueError(
+                f"{len(blocks)} prefix blocks > per-slot cap {self.max_blocks}")
+        if n_tokens != len(blocks) * self.block_size:
+            raise ValueError(
+                f"attach of {len(blocks)} blocks must cover exactly "
+                f"{len(blocks) * self.block_size} tokens, got {n_tokens}")
+        for b in blocks:
+            self.pool.incref(b)
+        self._tables[slot] = list(blocks)
+        self._tokens[slot] = n_tokens
+
+    def cow_for_range(self, slot: int, lo: int, hi: int) -> List[Tuple[int, int]]:
+        """Make token rows [lo, hi) of ``slot`` writable: every shared
+        block covering the range is swapped for a fresh exclusive copy.
+
+        Returns (src, dst) pairs for the engine's jit-cached block-copy
+        scatter (host tables are updated here; device rows move on the
+        engine).  Allocation happens before the decref, and a shared
+        block's count stays ≥ 1 after it, so the source rows remain valid
+        for the device copy.
+        """
+        if hi <= lo:
+            return []
+        pairs: List[Tuple[int, int]] = []
+        table = self._tables[slot]
+        # indices past the table are not allocated yet — ensure() will hand
+        # them out fresh (exclusively owned), so they need no copy
+        for bi in range(lo // self.block_size,
+                        min(self.blocks_for(hi), len(table))):
+            b = table[bi]
+            if self.pool.refcount(b) > 1:
+                dst = self._alloc(1)[0]
+                self.pool.decref(b)
+                table[bi] = dst
+                pairs.append((b, dst))
+        return pairs
 
     def ensure(self, slot: int, n_tokens: int) -> List[int]:
         """Grow ``slot``'s table to cover ``n_tokens``; returns new blocks."""
@@ -207,7 +416,7 @@ class PagedKVTables:
             raise ValueError(
                 f"slot {slot} would exceed the per-slot cap of "
                 f"{self.max_blocks} blocks")
-        new = self.pool.alloc(need)
+        new = self._alloc(need)
         self._tables[slot].extend(new)
         return new
 
@@ -215,13 +424,18 @@ class PagedKVTables:
         self._tokens[slot] += int(n_new_tokens)
 
     def release(self, slot: int) -> List[int]:
-        """Free every block of ``slot`` (retire or preempt)."""
+        """Drop the slot's reference on every block (retire or preempt).
+
+        Returns only the blocks that actually became free — blocks still
+        referenced by the prefix cache (or another slot) survive with
+        their KV rows intact, so the engine must clear device ``pos`` rows
+        only for the returned ids.
+        """
         blocks = self._tables[slot]
         self._tables[slot] = []
         self._tokens[slot] = 0
         self._pending.discard(slot)
-        self.pool.free(blocks)
-        return blocks
+        return self.pool.free(blocks)
 
     def device_tables(self, exclude_pending: bool = False) -> np.ndarray:
         """[capacity, max_blocks] int32 block table, -1 = unallocated.

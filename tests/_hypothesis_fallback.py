@@ -11,9 +11,9 @@ collects and runs everywhere:
 
 The shim samples each strategy deterministically (seeded per test name):
 the first examples pin the strategy bounds, the rest are random draws.  It
-covers only the strategies this repo uses — floats, integers, sampled_from,
-lists, dictionaries — with no shrinking; it is a property *smoke* runner,
-not a replacement for hypothesis.
+covers only the strategies this repo uses — floats, integers, booleans,
+tuples, sampled_from, lists, dictionaries — with no shrinking; it is a
+property *smoke* runner, not a replacement for hypothesis.
 """
 from __future__ import annotations
 
@@ -72,6 +72,23 @@ class _Lists(_Strategy):
         return [self.elem.example(rng, 2) for _ in range(size)]
 
 
+class _Booleans(_Strategy):
+    def example(self, rng, idx):
+        if idx == 0:
+            return False
+        if idx == 1:
+            return True
+        return bool(rng.integers(2))
+
+
+class _Tuples(_Strategy):
+    def __init__(self, *elems: _Strategy):
+        self.elems = elems
+
+    def example(self, rng, idx):
+        return tuple(e.example(rng, idx) for e in self.elems)
+
+
 class _Dicts(_Strategy):
     def __init__(self, keys: _Strategy, values: _Strategy,
                  min_size: int = 0, max_size: int = 8):
@@ -101,6 +118,14 @@ class _St:
     @staticmethod
     def sampled_from(options):
         return _SampledFrom(options)
+
+    @staticmethod
+    def booleans():
+        return _Booleans()
+
+    @staticmethod
+    def tuples(*elements):
+        return _Tuples(*elements)
 
     @staticmethod
     def lists(elements, min_size=0, max_size=10):

@@ -235,6 +235,70 @@ def test_scatter_drop_out_of_scope_dir(tmp_path):
                         "scatter-drop") == []
 
 
+# ---------------------------------------------------------------- cow-write
+
+def test_cow_write_true_positive_serving(tmp_path):
+    body = """\
+        def inject(tc, rows, k, pos):
+            a = tc["k"].at[rows].set(k, mode="drop")
+            b = pos.at[rows].set(0)
+            return a, b
+    """
+    fs = findings_for(tmp_path, "serving/slots.py", body, "cow-write")
+    assert len(fs) == 2 and all(f.severity == "error" for f in fs)
+    assert all("block-copy" in f.message for f in fs)
+
+
+def test_cow_write_block_table_and_plain_arrays_ignored(tmp_path):
+    # `bt` is per-slot host state (never shared) and generic buffers are
+    # out of scope — only pool-backed KV leaves are guarded
+    body = """\
+        def route(tc, buf, idx, x):
+            a = tc["bt"].at[idx].set(x)
+            b = buf.at[idx].set(x)
+            return a, b
+    """
+    assert findings_for(tmp_path, "serving/slots.py", body, "cow-write") == []
+
+
+def test_cow_write_dynamic_key_pool_chain_flagged(tmp_path):
+    body = """\
+        def wipe(pool_kv, key, idx, x):
+            return pool_kv[key].at[idx].set(x)
+    """
+    fs = findings_for(tmp_path, "core/spec_decode.py", body, "cow-write")
+    assert len(fs) == 1
+
+
+def test_cow_write_block_copy_helper_exempt(tmp_path):
+    body = """\
+        def _build_block_copy(tc):
+            def block_copy(tc, src, dst, k):
+                return tc["k"].at[dst].set(tc["k"][src], mode="drop")
+            return block_copy
+    """
+    assert findings_for(tmp_path, "core/spec_decode.py", body,
+                        "cow-write") == []
+
+
+def test_cow_write_out_of_scope_dir(tmp_path):
+    # models/ scatters answer to scatter-drop, not the sharing contract
+    body = """\
+        def write(tc, rows, k):
+            return tc["k"].at[rows].set(k, mode="drop")
+    """
+    assert findings_for(tmp_path, "models/m.py", body, "cow-write") == []
+
+
+def test_cow_write_pragma_suppresses(tmp_path):
+    body = """\
+        def inject(tc, rows, k):
+            # lint: allow-cow-write(freshly allocated, refcount 1)
+            return tc["k"].at[rows].set(k, mode="drop")
+    """
+    assert findings_for(tmp_path, "serving/slots.py", body) == []
+
+
 # ------------------------------------------------------- telemetry-readonly
 
 def test_telemetry_forbidden_import(tmp_path):

@@ -13,6 +13,12 @@ Tiers:
             gather+verify.  A subset of ``fast`` for quick kernel
             iteration; runs inside fast/full automatically (the files carry
             no ``slow`` marker).
+  cache   — prefix-cache subset: the copy-on-write refcount/radix property
+            campaign plus the shared-vs-cold parity tests
+            (tests/test_prefix_cache.py), then the serving-bench smoke,
+            whose sim_templated scenario gates hit-rate > 0 and a cached
+            TTFT win.  A subset of ``fast`` (the file carries no ``slow``
+            marker) for quick iteration on the sharing layer.
   obs     — observability subset: telemetry read-only-parity tests
             (tests/test_telemetry.py) + the serving/metrics unit tests
             (tests/test_metrics.py), then the serving-bench regression
@@ -71,6 +77,9 @@ TIERS = {
     # bodies (interpret mode) vs the jnp oracles, incl. the fused paged path
     "kernels": [os.path.join("tests", "test_kernels.py"),
                 os.path.join("tests", "test_paged_fused_kernel.py")],
+    # prefix-cache subset: COW/refcount property campaign + parity tests
+    # (the bench smoke with its hit-rate/TTFT gates runs after pytest)
+    "cache": [os.path.join("tests", "test_prefix_cache.py")],
     # observability subset: telemetry parity + metrics units (the serving
     # bench smoke runs after pytest — see SERVING_SMOKE_TIERS)
     "obs": [os.path.join("tests", "test_telemetry.py"),
@@ -80,7 +89,7 @@ TIERS = {
 # tiers that finish with the serving-bench regression smoke (sim scenarios
 # are deterministic and take seconds; exits nonzero on goodput/TTFT drift
 # against the committed results/BENCH_serving.json)
-SERVING_SMOKE_TIERS = ("fast", "full", "obs")
+SERVING_SMOKE_TIERS = ("fast", "full", "obs", "cache")
 
 # pytest's "no tests were collected" exit code — a vacuous pass, not a pass
 EXIT_NO_TESTS_COLLECTED = 5

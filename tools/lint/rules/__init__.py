@@ -8,13 +8,15 @@
 The tree passed to ``check`` already has parent links attached
 (``astutil.attach_parents``).
 """
-from tools.lint.rules import (host_sync, jit_shardings, pallas_purity,
-                              scatter_mode, telemetry_readonly)
+from tools.lint.rules import (cow_write, host_sync, jit_shardings,
+                              pallas_purity, scatter_mode,
+                              telemetry_readonly)
 
 ALL_RULES = [
     host_sync,
     jit_shardings,
     scatter_mode,
+    cow_write,
     telemetry_readonly,
     pallas_purity,
 ]

@@ -1,0 +1,87 @@
+"""cow-write: KV scatters in sharing-aware paths route through block-copy.
+
+With the prefix cache (serving/prefix_cache.py), blocks in the paged pool
+can be *shared*: several slot tables — and the cache index itself — may
+reference one physical block.  The copy-on-write contract says a block
+with refcount > 1 is never written in place: writers allocate a fresh
+block and move rows through the engine's jit-cached block-copy helper
+(``_build_block_copy`` in core/spec_decode.py), which is the only place
+allowed to scatter into pool-addressed KV rows wholesale.
+
+This rule flags direct ``.at[...].set/.add`` writes into pool-backed KV
+arrays (the tcache leaves ``k``/``v``/``pos``/``k_scale``/``v_scale``, a
+bare ``pos`` carry, or any subscripted array whose identifier chain smells
+like a cache/pool) inside ``serving/`` and ``core/spec_decode.py``.  Block
+*tables* (``bt``) are per-slot host state, never shared, and stay out of
+scope.  Writes that are provably safe — scatters into blocks the writer
+just allocated at refcount 1, retirement/eviction wipes of already-freed
+rows — carry an explicit ``# lint: allow-cow-write(reason)`` pragma, which
+doubles as documentation of *why* the target cannot be shared.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import List
+
+from tools.lint import astutil
+from tools.lint.report import Finding
+
+RULE = "cow-write"
+
+# pool-addressed tcache leaves; `bt` is deliberately absent (host-side
+# per-slot tables are never shared between slots)
+POOL_KEYS = {"k", "v", "pos", "k_scale", "v_scale"}
+CACHE_NAME_RE = re.compile(r"cache|pool", re.IGNORECASE)
+SCATTER_METHODS = {"set", "add"}
+
+
+def _applies(relpath: str) -> bool:
+    parts = astutil.path_parts(relpath)
+    return "serving" in parts or parts[-1:] == ("spec_decode.py",)
+
+
+def _pool_backed(target: ast.AST) -> bool:
+    if isinstance(target, ast.Subscript):
+        sl = target.slice
+        if isinstance(sl, ast.Constant) and isinstance(sl.value, str):
+            return sl.value in POOL_KEYS
+        # dynamic key: conservative — flag if the chain smells pool-like
+        return any(CACHE_NAME_RE.search(ident)
+                   for ident in astutil.chain_identifiers(target))
+    if isinstance(target, ast.Name) and target.id == "pos":
+        return True
+    return False
+
+
+def _inside_block_copy(node: ast.AST) -> bool:
+    return any("block_copy" in fn.name
+               for fn in astutil.enclosing_functions(node))
+
+
+def check(tree: ast.AST, source: str, relpath: str) -> List[Finding]:
+    if not _applies(relpath):
+        return []
+    findings: List[Finding] = []
+    for node in ast.walk(tree):
+        # match  <target>.at[<idx>].set(...) / .add(...)
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in SCATTER_METHODS
+                and isinstance(node.func.value, ast.Subscript)
+                and isinstance(node.func.value.value, ast.Attribute)
+                and node.func.value.value.attr == "at"):
+            continue
+        target = node.func.value.value.value
+        if not _pool_backed(target):
+            continue
+        if _inside_block_copy(node):
+            continue                     # the sanctioned copy helper
+        findings.append(Finding(
+            relpath, node.lineno, node.col_offset, RULE, "error",
+            f".at[...].{node.func.attr}() into a pool-backed KV array in a "
+            "sharing-aware path — blocks may be shared (refcount > 1); "
+            "route the write through the block-copy helper, or prove the "
+            "target is exclusively owned with "
+            "`# lint: allow-cow-write(reason)`"))
+    return findings

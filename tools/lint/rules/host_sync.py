@@ -43,6 +43,8 @@ HOT_QUALNAMES = {
     ("serving", "scheduler.py"): (
         "ContinuousEngineBackend.prefill",
         "ContinuousEngineBackend.prefill_chunk",
+        "ContinuousEngineBackend.attach",
+        "ContinuousEngineBackend.commit_attached",
         "ContinuousEngineBackend.step",
         "ContinuousEngineBackend.preempt",
         "ContinuousScheduler.run",
