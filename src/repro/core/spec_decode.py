@@ -85,6 +85,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.configs.base import ModelConfig
 from repro.configs.registry import build_model
+from repro.kernels.tuning import host_cu_blocks
 
 if TYPE_CHECKING:  # real import is lazy: serving/__init__ imports back here
     from repro.serving.slots import PagedKVTables
@@ -103,6 +104,37 @@ S_MAX = 8
 # instead of constructing a jax.profiler.TraceAnnotation — the off path
 # does no string formatting and allocates nothing
 _NULLCTX = contextlib.nullcontext()
+
+
+def _next_pow2(n: int) -> int:
+    """Smallest power of two >= n (host ints; chunk rows-limit buckets)."""
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+def _slot_axis(full_shape, single_shape) -> int:
+    """The one axis where a B=1 leaf differs from the pool leaf."""
+    diff = [i for i, (f, g) in enumerate(zip(full_shape, single_shape))
+            if f != g]
+    assert len(diff) == 1, (full_shape, single_shape)
+    return diff[0]
+
+
+def _take_slot(full, single, slot):
+    """Slice one slot's B=1 view out of every leaf of a pool tree."""
+    def one(f, s1):
+        ax = _slot_axis(f.shape, s1.shape)
+        starts = tuple(slot if i == ax else 0 for i in range(f.ndim))
+        return jax.lax.dynamic_slice(f, starts, s1.shape)
+    return jax.tree.map(one, full, single)
+
+
+def _put_slot(full, upd, single, slot):
+    """Scatter a B=1 update back into its slot row of a pool tree."""
+    def one(f, u, s1):
+        ax = _slot_axis(f.shape, s1.shape)
+        starts = tuple(slot if i == ax else 0 for i in range(f.ndim))
+        return jax.lax.dynamic_update_slice(f, u.astype(f.dtype), starts)
+    return jax.tree.map(one, full, upd, single)
 
 
 @dataclasses.dataclass
@@ -127,6 +159,25 @@ class StepStats:
 
 
 @dataclasses.dataclass
+class DeferredChunk:
+    """A paged, NON-final prefill chunk whose host bookkeeping (block
+    allocation, pending marking, first-chunk begin) has already run but
+    whose forward dispatch was deferred (``prefill_chunk_into(...,
+    defer=True)``).  Consumed either by :meth:`SpecDecodeEngine.
+    step_with_chunk` — the mixed verify+chunk launch, one ragged kernel
+    call serving both query kinds — or by :meth:`SpecDecodeEngine.
+    flush_chunk`, the ordinary standalone dispatch.  Either way the pool
+    ends bit-identical (per-query-row independence; the parked slot's
+    verify writes are dropped in both orders)."""
+    slot: int
+    tokens: np.ndarray       # the CB-bucketed chunk tokens
+    start: int               # first feed position this chunk writes
+    total_len: int           # the request's full prompt(+stash) length
+    bt_row: np.ndarray       # [max_blocks] the slot's host table row
+    key: Tuple               # the standalone chunk-fn cache key
+
+
+@dataclasses.dataclass
 class PoolShardings:
     """NamedSharding trees of a mesh-sharded slot pool (one per init_slots).
 
@@ -143,6 +194,12 @@ class PoolShardings:
     n_generated: Any
     done: Any
     rep: Any                 # NamedSharding(mesh, P()) — fully replicated
+    cu: Any = None           # cu_blocks / cu_row ragged-grid scalar operands
+
+    @property
+    def cu_sh(self):
+        """Sharding of the host-built cu operands (rep if spec absent)."""
+        return self.cu if self.cu is not None else self.rep
 
     @property
     def dc(self):
@@ -175,6 +232,7 @@ class JitEntry:
     paged_fused: Any               # tcfg.paged_fused at build time
     src_file: str                  # def site of the traced fn
     src_line: int
+    cu_arg: Optional[int] = None   # argnum of the cu_blocks ragged-grid operand
     fn: Any = None                 # the jax.jit-wrapped callable
     n_traces: int = 0              # incremented on every (re)trace
     arg_specs: Any = None          # ShapeDtypeStruct tree of the last trace
@@ -244,6 +302,7 @@ class SpecDecodeEngine:
         # without the modality prefix offset
         self.prefix_offset = target_cfg.prefix_len if target_cfg.family == "vlm" else 0
         self._step_fns: Dict[Tuple[int, int], Any] = {}
+        self._mixed_step_fns: Dict[Tuple, Any] = {}
         self._prefill_fns: Dict[Tuple[int, int, int], Any] = {}
         self._inject_fn: Any = None
         self._inject_paged_fn: Any = None
@@ -298,6 +357,7 @@ class SpecDecodeEngine:
         re-initialised with a different mesh (or none) can never reuse a
         step/prefill/inject function compiled for the old sharding."""
         self._step_fns.clear()
+        self._mixed_step_fns.clear()
         self._prefill_fns.clear()
         self._inject_fn = None
         self._inject_paged_fn = None
@@ -315,7 +375,8 @@ class SpecDecodeEngine:
     def _register_jit(self, name: str, key: Tuple, fn, *, hot: bool,
                       kv_args: Tuple[int, ...] = (),
                       in_shardings=None, out_shardings=None,
-                      paged_rows: Optional[int] = None):
+                      paged_rows: Optional[int] = None,
+                      cu_arg: Optional[int] = None):
         """jax.jit ``fn`` with the engine's standing contracts attached.
 
         ``kv_args`` are the argnums carrying KV pool / cache leaves: they
@@ -332,7 +393,7 @@ class SpecDecodeEngine:
             name=name, key=tuple(key), hot=hot, kv_args=tuple(kv_args),
             donate=donate, sharded=in_shardings is not None,
             out_shardings=out_shardings, paged_rows=paged_rows,
-            paged_fused=self.tcfg.paged_fused,
+            paged_fused=self.tcfg.paged_fused, cu_arg=cu_arg,
             src_file=code.co_filename, src_line=code.co_firstlineno)
 
         @wraps(fn)
@@ -533,7 +594,8 @@ class SpecDecodeEngine:
             seq_lens=_ns(mesh, sp.seq_lens), last2=_ns(mesh, sp.last2),
             out=_ns(mesh, sp.out), n_generated=_ns(mesh, sp.n_generated),
             done=_ns(mesh, sp.done),
-            rep=NamedSharding(mesh, PartitionSpec()))
+            rep=NamedSharding(mesh, PartitionSpec()),
+            cu=_ns(mesh, sp.cu_blocks))
         state = dataclasses.replace(
             state,
             tcache=jax.device_put(state.tcache, sh.tcache),
@@ -552,10 +614,7 @@ class SpecDecodeEngine:
     @staticmethod
     def _slot_axis(full_shape, single_shape) -> int:
         """The one axis where a B=1 leaf differs from the pool leaf."""
-        diff = [i for i, (f, g) in enumerate(zip(full_shape, single_shape))
-                if f != g]
-        assert len(diff) == 1, (full_shape, single_shape)
-        return diff[0]
+        return _slot_axis(full_shape, single_shape)
 
     def _build_inject(self, paged_pool: bool = False):
         """Scatter every B=1 prefill leaf into its slot row of the pool.
@@ -1054,6 +1113,16 @@ class SpecDecodeEngine:
     def _build_chunk(self, key: Tuple, t_single, d_single):
         """One bucketed chunk forward for one slot.
 
+        ``key`` carries a rows-limit bucket ``R`` (power-of-two cover of
+        ``start + CB``, capped at the logical length): during chunked
+        prefill every attendable key lives below row ``start + CB``, so
+        the contiguous forwards (target ring and the draft ring trailing a
+        paged target) bound their attention to ``R`` rows instead of
+        streaming the dead tail of the full logical cache.  Paged targets
+        instead take a per-chunk ``cu_row`` operand — the slot's ragged
+        grid-step count — so the chunk's pool attention runs the ragged
+        kernel over exactly the slot's allocated blocks.
+
         Contiguous pool: the slot's B=1 caches are sliced out, extended by
         the chunk (model.prefill_chunk — the verify-attention masking makes
         the prefix extension exact), and scattered back.  Paged pool: the
@@ -1067,7 +1136,7 @@ class SpecDecodeEngine:
         is ever attendable — the same argument the contiguous path relies
         on.
         """
-        CB, paged, capacity, L = key
+        CB, paged, capacity, L, R = key
         tgt, drf = self.target, self.draft
 
         def take(full, single, slot):
@@ -1088,7 +1157,7 @@ class SpecDecodeEngine:
             return jax.tree.map(one, full, upd, single)
 
         def fn(tparams, dparams, tcache, dcache, slot, toks, start,
-               t_limit, d_limit, bt_row=None):
+               t_limit, d_limit, bt_row=None, cu_row=None):
             off = jnp.full((1,), start, jnp.int32)
             tl = jnp.full((1,), t_limit, jnp.int32)
             dl = jnp.full((1,), d_limit, jnp.int32)
@@ -1098,43 +1167,66 @@ class SpecDecodeEngine:
                 # the slot's host table); only bt is a per-slot view
                 t1 = dict({n: tcache[n] for n in tcache if n != "bt"},
                           bt=bt_row[None, :])
-                _, t1n = tgt.prefill_chunk(tparams, toks1, t1, off, tl)
+                _, t1n = tgt.prefill_chunk(tparams, toks1, t1, off, tl,
+                                           cu_blocks=cu_row)
                 new_t = dict(tcache,
                              **{n: t1n[n] for n in t1n if n != "bt"})
             elif t_single is None:       # capacity == 1: the pool IS the slot
-                _, new_t = tgt.prefill_chunk(tparams, toks1, tcache, off, tl)
+                _, new_t = tgt.prefill_chunk(tparams, toks1, tcache, off, tl,
+                                             rows_limit=R)
             else:
                 _, t1n = tgt.prefill_chunk(
-                    tparams, toks1, take(tcache, t_single, slot), off, tl)
+                    tparams, toks1, take(tcache, t_single, slot), off, tl,
+                    rows_limit=R)
                 new_t = put(tcache, t1n, t_single, slot)
             if drf is None:
                 return new_t, dcache
             if d_single is None:
-                _, new_d = drf.prefill_chunk(dparams, toks1, dcache, off, dl)
+                _, new_d = drf.prefill_chunk(dparams, toks1, dcache, off, dl,
+                                             rows_limit=R)
             else:
                 _, d1n = drf.prefill_chunk(
-                    dparams, toks1, take(dcache, d_single, slot), off, dl)
+                    dparams, toks1, take(dcache, d_single, slot), off, dl,
+                    rows_limit=R)
                 new_d = put(dcache, d1n, d_single, slot)
             return new_t, new_d
 
         rows = L if paged else None
+        cu_arg = 10 if paged else None
         sh = self._shardings
         if sh is None:
             return self._register_jit("chunk", key, fn, hot=True,
-                                      kv_args=(2, 3), paged_rows=rows)
+                                      kv_args=(2, 3), paged_rows=rows,
+                                      cu_arg=cu_arg)
         in_sh = [sh.rep, sh.rep, sh.tcache, sh.dc, sh.rep, sh.rep, sh.rep,
                  sh.rep, sh.rep]
         if paged:
-            in_sh.append(sh.rep)              # bt_row (host-built, per chunk)
+            in_sh += [sh.rep, sh.cu_sh]   # bt_row + cu_row (host-built)
         return self._register_jit("chunk", key, fn, hot=True,
                                   kv_args=(2, 3), paged_rows=rows,
+                                  cu_arg=cu_arg,
                                   in_shardings=tuple(in_sh),
                                   out_shardings=(sh.tcache, sh.dc))
+
+    def _get_chunk_fn(self, key: Tuple):
+        """The jit-cached standalone chunk forward for ``key`` (compiling
+        it on first use) — shared by prefill_chunk_into and flush_chunk."""
+        if key not in self._chunk_fns:
+            CB, paged, capacity, L, R = key
+            if capacity == 1:
+                t_single = d_single = None
+            else:
+                t_tmpl, d_tmpl = jax.eval_shape(
+                    lambda: self._init_caches(1, L))
+                t_single = None if paged else t_tmpl
+                d_single = d_tmpl
+            self._chunk_fns[key] = self._build_chunk(key, t_single, d_single)
+        return self._chunk_fns[key]
 
     def prefill_chunk_into(self, tparams, dparams, state: DecodeState,
                            slot: int, tokens, start: int, n: int,
                            total_len: int, last2=None, *,
-                           warm: bool = False) -> DecodeState:
+                           warm: bool = False, defer: bool = False):
         """Feed one prefill chunk of a request into row ``slot``.
 
         The request's feed (prompt, or prompt + pre-preemption stash) has
@@ -1175,6 +1267,13 @@ class SpecDecodeEngine:
 
         ``warm=True`` compiles the begin/chunk/commit paths for this chunk
         bucket without touching host block bookkeeping (result discarded).
+
+        ``defer=True`` (paged, NON-final, non-warm chunks only) runs the
+        host bookkeeping and begin path as usual but SKIPS the forward
+        dispatch, returning ``(state, DeferredChunk)`` instead of a state:
+        the caller later folds the forward into the next speculative step
+        (:meth:`step_with_chunk`, the mixed verify+chunk launch) or
+        dispatches it standalone (:meth:`flush_chunk`).
         """
         if not hasattr(self.target, "prefill_chunk") or (
                 self.draft is not None
@@ -1240,24 +1339,30 @@ class SpecDecodeEngine:
 
         # ---- the chunk forward ----
         L = (pk.logical_len if paged else int(state.tcache["pos"].shape[1]))
-        key = (CB, paged, capacity, L)
-        if key not in self._chunk_fns:
-            if capacity == 1:
-                t_single = d_single = None
-            else:
-                t_tmpl, d_tmpl = jax.eval_shape(
-                    lambda: self._init_caches(1, L))
-                t_single = None if paged else t_tmpl
-                d_single = d_tmpl
-            self._chunk_fns[key] = self._build_chunk(key, t_single, d_single)
+        # rows-limit bucket: every attendable key lives below row
+        # start + CB (positions equal rows before the first wrap, and
+        # chunks never wrap), so the contiguous/draft forwards attend a
+        # power-of-two cover of it instead of the whole logical cache
+        R = min(max(_next_pow2(start + CB), 16), L)
+        key = (CB, paged, capacity, L, R)
+        fn = self._get_chunk_fn(key)
+        if defer:
+            if not paged or final or warm:
+                raise ValueError(
+                    "defer=True needs a paged, non-final, non-warm chunk")
+            return state, DeferredChunk(
+                slot=int(slot), tokens=tokens, start=int(start),
+                total_len=int(total_len), bt_row=bt_row, key=key)
         args = (tparams, dparams, state.tcache, state.dcache,
                 jnp.int32(slot), jnp.asarray(tokens), jnp.int32(start),
                 jnp.int32(feed_total), jnp.int32(feed_total - 1))
         if paged:
-            args = args + (jnp.asarray(bt_row),)
+            # [0, max(live, 1)]: the slot's one-row ragged grid plan
+            cu_row = host_cu_blocks(bt_row[None, :])
+            args = args + (jnp.asarray(bt_row), jnp.asarray(cu_row))
         with (jax.profiler.TraceAnnotation(f"repro/chunk[CB={CB}]")
               if self.annotate else _NULLCTX):
-            new_t, new_d = self._chunk_fns[key](*args)
+            new_t, new_d = fn(*args)
         if warm:
             # compile the commit path too, then discard everything
             if paged not in self._chunk_commit_fns:
@@ -1312,6 +1417,100 @@ class SpecDecodeEngine:
                     n_generated=n_gen, done=done)
         return state
 
+    def flush_chunk(self, tparams, dparams, state: DecodeState,
+                    chunk: DeferredChunk) -> DecodeState:
+        """Dispatch a deferred chunk's forward standalone.
+
+        The host bookkeeping already ran at defer time, so this is exactly
+        the chunk-fn dispatch :meth:`prefill_chunk_into` skipped — callers
+        use it when no speculative step follows before the next pool
+        consumer (another chunk, an admission prefill, a preemption).
+        """
+        fn = self._get_chunk_fn(chunk.key)
+        CB = chunk.key[0]
+        feed_total = chunk.total_len - 1
+        cu_row = host_cu_blocks(chunk.bt_row[None, :])
+        args = (tparams, dparams, state.tcache, state.dcache,
+                jnp.int32(chunk.slot), jnp.asarray(chunk.tokens),
+                jnp.int32(chunk.start), jnp.int32(feed_total),
+                jnp.int32(feed_total - 1), jnp.asarray(chunk.bt_row),
+                jnp.asarray(cu_row))
+        with (jax.profiler.TraceAnnotation(f"repro/chunk[CB={CB}]")
+              if self.annotate else _NULLCTX):
+            new_t, new_d = fn(*args)
+        return dataclasses.replace(state, tcache=new_t, dcache=new_d)
+
+    def step_with_chunk(self, tparams, dparams, state: DecodeState, s: int,
+                        chunk: DeferredChunk,
+                        rng: Optional[jax.Array] = None,
+                        ) -> Tuple[DecodeState, StepStats]:
+        """One speculative step FUSED with a deferred chunk's forward —
+        the mixed verify+chunk launch.
+
+        The chunk slot's queries (its prefix-extension rows, read/written
+        through its host table row) ride the same ragged attention call as
+        every decode slot's verify queries, so the separate chunk dispatch
+        — and its grid, weight re-streaming and launch overhead —
+        disappears.  Numerically this is bit-identical to
+        ``flush_chunk(...)`` followed by ``step(...)``: attention rows are
+        independent per query, the parked chunk slot's verify writes are
+        dropped in both orders (its device table row is still ``-1``), and
+        its accept count is forced to zero by its ``done`` flag.
+        """
+        if not 0 <= s <= S_MAX:
+            raise ValueError(
+                f"s={s} outside [0, {S_MAX}]: the step's output buffer is "
+                f"sized for at most S_MAX={S_MAX} speculative tokens and "
+                f"would silently drop commits beyond it")
+        pk = state.paged
+        if pk is None:
+            raise ValueError("step_with_chunk needs a paged slot pool")
+        grew = False
+        for slot in pk.active_slots():
+            if pk.is_pending(slot):
+                continue
+            grew |= bool(pk.ensure(slot, pk.tokens(slot) + s))
+        if grew:
+            state = dataclasses.replace(
+                state, tcache=dict(state.tcache, bt=jnp.asarray(
+                    pk.device_tables(exclude_pending=True))))
+        state = self._drain_evicted(state)
+        B = int(state.seq_lens.shape[0])
+        CB, _, _, L, R = chunk.key
+        key = (B, s, CB, L, R)
+        if key not in self._mixed_step_fns:
+            self._mixed_step_fns[key] = self._build_step_mixed(B, s, CB,
+                                                               L, R)
+        # the grid plan covers the chunk row's blocks through the patched
+        # table (the kernel reads them via bt_eff, not the device bt)
+        tables = pk.device_tables(exclude_pending=True)
+        tables[chunk.slot] = chunk.bt_row
+        cu = host_cu_blocks(tables)
+        feed_total = chunk.total_len - 1
+        args = (tparams, dparams, state.tcache, state.dcache,
+                state.seq_lens, state.last2, state.out, state.n_generated,
+                state.done, jnp.asarray(cu), jnp.int32(chunk.slot),
+                jnp.asarray(chunk.tokens), jnp.int32(chunk.start),
+                jnp.int32(feed_total), jnp.int32(feed_total - 1),
+                jnp.asarray(chunk.bt_row))
+        if self.sample:
+            if rng is None:
+                rng = jax.random.PRNGKey(
+                    int(np.asarray(state.n_generated).sum()))
+            args = (*args, rng)
+        with (jax.profiler.TraceAnnotation(
+                f"repro/step_mixed[B={B},s={s},CB={CB}]")
+              if self.annotate else _NULLCTX):
+            (tc, dcache, seq_lens, last2, out, n_gen, done, a, n_commit) = \
+                self._mixed_step_fns[key](*args)
+        new_state = DecodeState(tc, dcache, seq_lens, last2, out, n_gen,
+                                done, paged=pk)
+        stats = StepStats(accepted=np.asarray(a), committed=np.asarray(n_commit))
+        for slot in pk.active_slots():
+            if not pk.is_pending(slot):
+                pk.commit(slot, int(stats.committed[slot]))
+        return new_state, stats
+
     # ------------------------------------------------------------------
     # one speculative step
 
@@ -1336,10 +1535,12 @@ class SpecDecodeEngine:
             done=_copy_arrays(state.done))
 
     def _build_step(self, B: int, s: int, paged_rows: Optional[int] = None):
+        paged = paged_rows is not None
         fn = make_spec_step(
             self.target, self.draft, B, s, eos_id=self.eos_id,
             max_new=self.max_new, prefix_offset=self.prefix_offset,
-            sample=self.sample, temperature=self.temperature)
+            sample=self.sample, temperature=self.temperature, paged=paged)
+        cu_arg = 9 if paged else None
         # donate every DecodeState leaf the step threads through — except
         # the target cache of recurrent families, whose checkpoint-selecting
         # commit makes buffer reuse shape-incompatible (launch/specs.py
@@ -1350,19 +1551,56 @@ class SpecDecodeEngine:
         if sh is None or B != self._shard_capacity:
             # no mesh, or a non-pool batch size (generate()/warmup paths):
             # plain single-placement jit
-            return self._register_jit("step", (B, s), fn, hot=True,
-                                      kv_args=kv, paged_rows=paged_rows)
+            return self._register_jit("step", (B, s, paged), fn, hot=True,
+                                      kv_args=kv, paged_rows=paged_rows,
+                                      cu_arg=cu_arg)
         # sharded pool: the serving step is one explicit SPMD program —
         # params replicated, every pool-shaped leaf sharded on its capacity
         # (or block) axis on both sides, per-slot stats sharded like seq_lens
         in_sh = [sh.rep, sh.rep, sh.tcache, sh.dc, sh.seq_lens, sh.last2,
                  sh.out, sh.n_generated, sh.done]
+        if paged:
+            in_sh.append(sh.cu_sh)            # cu_blocks (host-built, tiny)
         if self.sample:
             in_sh.append(sh.rep)
         out_sh = (sh.tcache, sh.dc, sh.seq_lens, sh.last2, sh.out,
                   sh.n_generated, sh.done, sh.seq_lens, sh.seq_lens)
-        return self._register_jit("step", (B, s), fn, hot=True,
+        return self._register_jit("step", (B, s, paged), fn, hot=True,
                                   kv_args=kv, paged_rows=paged_rows,
+                                  cu_arg=cu_arg,
+                                  in_shardings=tuple(in_sh),
+                                  out_shardings=out_sh)
+
+    def _build_step_mixed(self, B: int, s: int, CB: int, L: int, R: int):
+        """The mixed verify+chunk step jit (see :meth:`step_with_chunk`).
+
+        Same contract as the plain paged step — ``cu_blocks`` at argnum 9
+        so the graph-lint ragged pass checks both the same way — plus the
+        six chunk operands (slot, tokens, start, target/draft limits, host
+        table row) after it."""
+        d_single = None
+        if self.draft is not None and B != 1:
+            _, d_single = jax.eval_shape(lambda: self._init_caches(1, L))
+        fn = make_spec_step(
+            self.target, self.draft, B, s, eos_id=self.eos_id,
+            max_new=self.max_new, prefix_offset=self.prefix_offset,
+            sample=self.sample, temperature=self.temperature, paged=True,
+            chunk=(CB, R, d_single))
+        kv = tuple(range(2, 9))
+        key = (B, s, CB, L, R)
+        sh = self._shardings
+        if sh is None or B != self._shard_capacity:
+            return self._register_jit("step_mixed", key, fn, hot=True,
+                                      kv_args=kv, paged_rows=L, cu_arg=9)
+        in_sh = [sh.rep, sh.rep, sh.tcache, sh.dc, sh.seq_lens, sh.last2,
+                 sh.out, sh.n_generated, sh.done, sh.cu_sh,
+                 sh.rep, sh.rep, sh.rep, sh.rep, sh.rep, sh.rep]
+        if self.sample:
+            in_sh.append(sh.rep)
+        out_sh = (sh.tcache, sh.dc, sh.seq_lens, sh.last2, sh.out,
+                  sh.n_generated, sh.done, sh.seq_lens, sh.seq_lens)
+        return self._register_jit("step_mixed", key, fn, hot=True,
+                                  kv_args=kv, paged_rows=L, cu_arg=9,
                                   in_shardings=tuple(in_sh),
                                   out_shardings=out_sh)
 
@@ -1409,7 +1647,10 @@ class SpecDecodeEngine:
                         pk.device_tables(exclude_pending=True))))
             state = self._drain_evicted(state)
         B = state.seq_lens.shape[0]
-        key = (B, s)
+        # pagedness is part of the key: the paged wrapper takes the extra
+        # cu_blocks operand, so a contiguous pool on the same engine must
+        # never reuse a paged-built step fn (or vice versa)
+        key = (B, s, state.paged is not None)
         if key not in self._step_fns:
             self._step_fns[key] = self._build_step(
                 B, s, paged_rows=(state.paged.logical_len
@@ -1418,6 +1659,13 @@ class SpecDecodeEngine:
             state = self._warm_shield(state)
         args = (tparams, dparams, state.tcache, state.dcache, state.seq_lens,
                 state.last2, state.out, state.n_generated, state.done)
+        if state.paged is not None:
+            # ragged-grid operand: cumulative live-block counts from the
+            # same host tables the device `bt` upload above mirrors, so the
+            # kernel's grid always matches the table it prefetches
+            cu = host_cu_blocks(
+                state.paged.device_tables(exclude_pending=True))
+            args = (*args, jnp.asarray(cu))
         if self.sample:
             if rng is None:
                 # lint: allow-host-sync(sample-mode fallback seed only; serving passes rng explicitly)
@@ -1479,12 +1727,33 @@ class SpecDecodeEngine:
 
 def make_spec_step(tgt, drf, B: int, s: int, *, eos_id: int = -1,
                    max_new: int = 128, prefix_offset: int = 0,
-                   sample: bool = False, temperature: float = 1.0):
+                   sample: bool = False, temperature: float = 1.0,
+                   paged: bool = False,
+                   chunk: Optional[Tuple[int, int, Any]] = None):
     """Pure one-speculative-step function (paper Algorithm 1, batched).
 
     Signature: fn(tparams, dparams, tcache, dcache, seq_lens, last2, out,
-    n_generated, done[, rng]) -> (tcache', dcache', seq_lens', last2', out',
-    n_generated', done', accepted, n_commit).
+    n_generated, done[, cu_blocks][, rng]) -> (tcache', dcache', seq_lens',
+    last2', out', n_generated', done', accepted, n_commit).
+
+    ``paged=True`` adds the ``cu_blocks [B + 1]`` operand (host cumulative
+    ragged grid-step counts, kernels/tuning.py) right after ``done``; the
+    target verify forward threads it into the paged attention so the fused
+    path runs the ragged kernel (kernels/paged.py) — the gather reference
+    ignores it, so the flag is numerically free.
+
+    ``chunk = (CB, R, d_single)`` (requires ``paged``) builds the MIXED
+    verify+chunk step: six extra operands after ``cu_blocks`` — chunk
+    slot, CB-bucketed tokens, start, target/draft feed limits, and the
+    slot's host block-table row — and the target verify runs
+    ``decode_step_mixed``, one ragged attention launch per layer serving
+    both the decode slots' verify queries and the chunk slot's
+    prefix-extension queries.  The draft's trailing chunk forward runs
+    first (B=1 slice bounded to ``R`` rows, exactly the standalone chunk
+    fn's draft half), then the usual draft loop; the chunk slot is parked
+    ``done`` so its accept count is forced to zero and its row state never
+    moves.  Bit-identical to standalone-chunk-then-step by per-query-row
+    independence (see :meth:`SpecDecodeEngine.step_with_chunk`).
 
     ``sample=False`` (default) is the paper's argmax verification.
     ``sample=True`` is Leviathan/Chen-style stochastic speculative sampling
@@ -1499,12 +1768,30 @@ def make_spec_step(tgt, drf, B: int, s: int, *, eos_id: int = -1,
     in/out shardings); the engine jit-caches one instance per (B, s).
     """
     eos = eos_id
+    assert chunk is None or paged, "the mixed step is paged-pool only"
 
-    def fn(tparams, dparams, tcache, dcache, seq_lens, last2, out,
-           n_generated, done, rng=None):
+    def body(tparams, dparams, tcache, dcache, seq_lens, last2, out,
+             n_generated, done, cu_blocks, rng, chunk_ops=None):
         if sample:
             assert rng is not None, "sample=True needs an rng argument"
             k_draft, k_acc, k_res = jax.random.split(rng, 3)
+        # ---- 0. mixed launch: the draft's trailing chunk forward first
+        # (same dispatch order as standalone-chunk-then-step) ----
+        if chunk_ops is not None:
+            cslot, ctoks, cstart, ctl, cdl, cbt_row = chunk_ops
+            CB, R, d_single = chunk
+            if drf is not None:
+                off1 = jnp.full((1,), cstart, jnp.int32)
+                dl1 = jnp.full((1,), cdl, jnp.int32)
+                ctoks1 = ctoks[None, :]
+                if d_single is None:   # capacity 1: the pool IS the slot
+                    _, dcache = drf.prefill_chunk(dparams, ctoks1, dcache,
+                                                  off1, dl1, rows_limit=R)
+                else:
+                    _, d1n = drf.prefill_chunk(
+                        dparams, ctoks1, _take_slot(dcache, d_single, cslot),
+                        off1, dl1, rows_limit=R)
+                    dcache = _put_slot(dcache, d1n, d_single, cslot)
         # ---- 1. draft phase ----
         dlens = seq_lens - prefix_offset
         drafts = []
@@ -1532,7 +1819,25 @@ def make_spec_step(tgt, drf, B: int, s: int, *, eos_id: int = -1,
 
         # ---- 2. verify: [t_{n-1}, d_1..d_s] ----
         feed = jnp.concatenate([last2[:, 1:], drafts], axis=1)    # [B, s+1]
-        vlogits, tcache_out = tgt.decode_step(tparams, feed, tcache, seq_lens)
+        if chunk_ops is not None:
+            # one launch, two query kinds: pad both streams to a shared
+            # width (padding columns carry position -1 — write nowhere,
+            # match nothing) and let the per-row masking sort them out
+            Tm = max(s + 1, chunk[0])
+            feed_m = (jnp.pad(feed, ((0, 0), (0, Tm - (s + 1))))
+                      if Tm > s + 1 else feed)
+            ct = (jnp.pad(ctoks, (0, Tm - chunk[0]))
+                  if Tm > chunk[0] else ctoks)
+            vlogits, tcache_out = tgt.decode_step_mixed(
+                tparams, feed_m, tcache, seq_lens, cslot, ct, cstart, ctl,
+                cbt_row, s + 1, cu_blocks)
+            vlogits = vlogits[:, :s + 1]
+        elif paged:
+            vlogits, tcache_out = tgt.decode_step(tparams, feed, tcache,
+                                                  seq_lens, cu_blocks)
+        else:
+            vlogits, tcache_out = tgt.decode_step(tparams, feed, tcache,
+                                                  seq_lens)
         bidx = jnp.arange(B)
 
         if not sample:
@@ -1605,4 +1910,26 @@ def make_spec_step(tgt, drf, B: int, s: int, *, eos_id: int = -1,
         return (tcache_new, dcache, seq_lens, last2, out, n_generated, done,
                 a, n_commit)
 
+    # explicit signatures per variant so legacy callers (launch/dryrun.py,
+    # the contiguous pool) keep the 9-arg form while the paged step gains
+    # the cu_blocks operand at a fixed argnum (9) graph-lint can check
+    if chunk is not None:
+        def fn(tparams, dparams, tcache, dcache, seq_lens, last2, out,
+               n_generated, done, cu_blocks, chunk_slot, chunk_tokens,
+               chunk_start, chunk_t_limit, chunk_d_limit, chunk_bt_row,
+               rng=None):
+            return body(tparams, dparams, tcache, dcache, seq_lens, last2,
+                        out, n_generated, done, cu_blocks, rng,
+                        (chunk_slot, chunk_tokens, chunk_start,
+                         chunk_t_limit, chunk_d_limit, chunk_bt_row))
+    elif paged:
+        def fn(tparams, dparams, tcache, dcache, seq_lens, last2, out,
+               n_generated, done, cu_blocks, rng=None):
+            return body(tparams, dparams, tcache, dcache, seq_lens, last2,
+                        out, n_generated, done, cu_blocks, rng)
+    else:
+        def fn(tparams, dparams, tcache, dcache, seq_lens, last2, out,
+               n_generated, done, rng=None):
+            return body(tparams, dparams, tcache, dcache, seq_lens, last2,
+                        out, n_generated, done, None, rng)
     return fn

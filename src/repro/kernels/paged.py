@@ -44,7 +44,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.ops import kernel_mode, spec_verify_attn
-from repro.kernels.paged_verify_attn import paged_verify_attn_pallas
+from repro.kernels.paged_verify_attn import (paged_verify_attn_pallas,
+                                             ragged_paged_verify_attn_pallas)
+from repro.kernels.tuning import RaggedConfig, lookup_config
 
 
 def gather_kv_blocks(k: jax.Array, v: jax.Array, block_tables: jax.Array,
@@ -133,14 +135,16 @@ def paged_verify_attn(q: jax.Array, k: jax.Array, v: jax.Array,
                       scale: Optional[float] = None,
                       k_scale: Optional[jax.Array] = None,
                       v_scale: Optional[jax.Array] = None,
-                      use_pallas: Optional[bool] = None) -> jax.Array:
+                      use_pallas: Optional[bool] = None,
+                      cu_blocks: Optional[jax.Array] = None,
+                      config: Optional[RaggedConfig] = None) -> jax.Array:
     """Verify-step attention against the paged pool.
 
     q: [B, T, H, hd]; k/v: [NB, bs, KVH, hd]; q_pos: [B, T];
     pos: [NB, bs]; block_tables: [B, MAXB].  Optional k_scale/v_scale
     [NB, bs, KVH] for int8 pools.  Returns [B, T, H, hd].
 
-    Dispatch (:func:`~repro.kernels.ops.kernel_mode` policy): the fused
+    Dispatch (:func:`~repro.kernels.ops.kernel_mode` policy): a fused
     streaming kernel natively on TPU (or interpreted when forced with
     ``use_pallas=True`` off-TPU — tests and the microbenchmark), the
     gather path otherwise.  ``use_pallas`` here selects *which paged path*
@@ -149,6 +153,16 @@ def paged_verify_attn(q: jax.Array, k: jax.Array, v: jax.Array,
     sharded-pool pin — never silently downgrades a TPU run to the pure-jnp
     attention.  Both paths are numerically parity-checked in
     tests/test_paged_fused_kernel.py.
+
+    ``cu_blocks [B + 1]`` (host-computed cumulative grid-step counts,
+    ``kernels/tuning.py host_cu_blocks``) upgrades the fused path to the
+    **ragged** kernel: grid steps = sum of live blocks instead of
+    ``B * MAXB``, launch knobs resolved per ``(B, T, MAXB)`` cell from the
+    autotune cache (``config`` overrides the lookup — tests and the
+    benchmark pin exact knobs with it).  Without ``cu_blocks`` the dense
+    fused kernel runs; the gather reference ignores both (its semantics
+    are already length-exact).  All three agree bit-for-bit per row
+    across every raggedness pattern (tests/test_ragged_paged_attn.py).
     """
     m = kernel_mode(use_pallas)
     if m == "ref":
@@ -156,6 +170,18 @@ def paged_verify_attn(q: jax.Array, k: jax.Array, v: jax.Array,
                                   window=window, prefix_len=prefix_len,
                                   scale=scale, k_scale=k_scale,
                                   v_scale=v_scale, use_pallas=None)
+    if cu_blocks is not None:
+        if config is None:
+            # static shapes -> one cache lookup per trace, never per step
+            config = lookup_config(q.shape[0], q.shape[1],
+                                   block_tables.shape[1])
+        return ragged_paged_verify_attn_pallas(
+            q, k, v, q_pos, pos, block_tables, cu_blocks,
+            window=window, prefix_len=prefix_len, scale=scale,
+            k_scale=k_scale, v_scale=v_scale,
+            num_buffers=config.num_buffers,
+            vmem_limit_bytes=config.vmem_limit_bytes,
+            interpret=(m == "interpret"))
     return paged_verify_attn_pallas(q, k, v, q_pos, pos, block_tables,
                                     window=window, prefix_len=prefix_len,
                                     scale=scale, k_scale=k_scale,

@@ -1,4 +1,4 @@
-"""Fused paged verify-attention Pallas kernel: stream KV straight through
+"""Fused paged verify-attention Pallas kernels: stream KV straight through
 the block tables, never materializing a gathered logical view.
 
 The gather path (kernels/paged.py ``gather_verify_attn``) rebuilds each
@@ -6,29 +6,59 @@ slot's contiguous ``[B, MAXB*bs, KVH, hd]`` KV view before running the
 verify kernel over the copy — every paged verify step pays the pool's HBM
 traffic twice (gather write + kernel read) and the transient view grows
 linearly with batch size, exactly the regime where the paper's batching x
-speculation synergy lives.  This kernel removes the copy: the grid is
-``(batch, max_blocks_per_slot)`` and the k/v/pos BlockSpec index maps read
-each tile *directly* from the shared pool through the slot's block-table
-row, prefetched as a scalar (``PrefetchScalarGridSpec``) so the index maps
-can consume it before the kernel body runs.
+speculation synergy lives.  These kernels remove the copy: the k/v/pos
+BlockSpec index maps read each tile *directly* from the shared pool
+through the slot's block-table row, prefetched as a scalar
+(``PrefetchScalarGridSpec``) so the index maps can consume it before the
+kernel body runs.
 
-Tile-skip semantics (two layers, both ``@pl.when``):
+Two grid strategies over the same tile math:
 
-* ``-1`` table entries (unallocated logical blocks — ragged slots, empty
-  rows, mid-chunked-prefill pending slots) contribute nothing: the index
-  map clips them to physical block 0 so the DMA address is always valid —
-  consecutive dead entries then revisit the same block, which the Pallas
-  pipeline recognizes and skips re-fetching — and the body skips the tile
-  entirely, which is numerically identical to every key in it carrying
-  position ``-1`` (the gather path's convention).
-* live tiles whose positions are all outside the ``(q - window, q]``
-  visibility range are skipped exactly like ``spec_verify_attn``'s
-  flash-decode early exit.
+* **dense** (:func:`paged_verify_attn_pallas`): grid ``(batch,
+  max_blocks_per_slot)``; ``-1`` table entries (unallocated logical
+  blocks — ragged slots, empty rows, mid-chunked-prefill pending slots)
+  contribute nothing: the index map clips them to physical block 0 so the
+  DMA address is always valid — consecutive dead entries then revisit the
+  same block, which the Pallas pipeline recognizes and skips re-fetching —
+  and the body skips the tile entirely (``@pl.when``), which is
+  numerically identical to every key in it carrying position ``-1`` (the
+  gather path's convention).  Dead tiles still cost grid steps.
+* **ragged** (:func:`ragged_paged_verify_attn_pallas`): the grid is a
+  flat run of ``cu_blocks[B]`` steps — the *sum of live blocks* (each
+  empty slot keeps exactly one dead step so its accumulators still
+  initialize and its output row still finalizes to zeros), host-computed
+  from the same block accounting that owns the tables and prefetched
+  alongside them.  Step ``i`` serves slot ``ss[i]`` and its ``sb[i]``-th
+  live logical block, both derived in-trace from ``cu_blocks`` and the
+  table (stable argsort packs each row's live entries first, in ascending
+  logical order — so a slot's blocks are visited in exactly the dense
+  kernel's order and the online-softmax accumulation is bit-identical).
+  Accumulators init at ``i == cu[b]`` and the output row finalizes at
+  ``i == cu[b+1]-1``.  Dead tiles simply do not exist in the grid:
+  raggedness costs nothing.
+
+The ragged kernel additionally offers **explicit multi-buffered DMA**
+(``num_buffers >= 2``): k/v/pos (and int8 scale) pool tiles live in
+``ANY`` memory space and the kernel drives its own ``make_async_copy``
+ring — ``num_buffers`` VMEM landing buffers per stream, one DMA semaphore
+lane each, warm-up fetch of the first ``num_buffers - 1`` tiles at step 0
+and a steady-state fetch of tile ``i + num_buffers - 1`` each step — so
+the fetch horizon (how far DMA runs ahead of compute) is a tunable knob
+instead of the pipeline default.  ``num_buffers = 0`` keeps the standard
+BlockSpec auto-pipeline.  ``profile='dma'`` / ``profile='compute'`` skip
+the compute or the copies respectively so the benchmark can price the two
+halves of the pipeline separately (benchmarks/kernel_bench.py
+``--profile-dma``).
 
 Masking (q_pos/k_pos arithmetic, ``window``, ``prefix_len``) is the shared
 position-mask contract of kernels/ref.py, evaluated against the pool's
 per-row ``pos`` map — identical to gathering first, because a slot only
 ever reaches its own blocks (ownership by construction of the table).
+Mixed launches ride the same contract: a batch row may carry verify
+queries (positions ``seq-1 .. seq+s-1``) or a chunk-prefill prefix
+extension (positions ``start .. start+n``) — per-query-row masking plus
+per-row block tables make the kernel agnostic to which is which, and
+``q_pos = -1`` rows (padding in heterogeneous launches) match nothing.
 
 GQA: the pool keeps its ``[NB, bs, KVH, hd]`` layout (one DMA per owned
 block covers every kv head — blocks are owned by exactly one slot, so each
@@ -38,8 +68,9 @@ is pre-folded to ``[B, KVH, G*Tq, hd]`` host-side (tiny) and stays VMEM-
 resident across the whole block stream.
 
 int8 KV (kv_quant): per-(row, kv-head) ``k_scale``/``v_scale`` pool arrays
-ride the same block-table index maps; tiles stream from HBM at 1 B/elem and
-dequantize in VMEM — the contiguous kernel's quant path, carried over.
+ride the same block-table index maps (or DMA ring); tiles stream from HBM
+at 1 B/elem and dequantize in VMEM — the contiguous kernel's quant path,
+carried over.
 """
 from __future__ import annotations
 
@@ -51,6 +82,89 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+
+def _flash_tile(q_ref, kt, vt, qp, kp, acc_ref, m_ref, l_ref, *,
+                scale: float, window: Optional[int], prefix_len: int,
+                kvh: int, ks=None, vs=None):
+    """Fold one ``[bs, KVH, hd]`` KV tile into the online-softmax
+    accumulators — the shared tile math of the dense and ragged grids.
+
+    ``kt``/``vt`` are tile *values* (read from a BlockSpec ref or a manual
+    DMA landing buffer); ``ks``/``vs`` are the int8 dequant scale tiles
+    ``[bs, KVH]`` when the pool is quantized.
+    """
+    ok = (kp[None, :] >= 0) & (kp[None, :] <= qp[:, None])   # [GT, bs]
+    if window is not None:
+        ok &= kp[None, :] > qp[:, None] - window
+    if prefix_len:
+        ok |= (kp[None, :] >= 0) & (kp[None, :] < prefix_len)
+    for h in range(kvh):                             # unrolled 2D dots
+        q = q_ref[0, h].astype(jnp.float32)          # [GT, hd]
+        k = kt[:, h, :].astype(jnp.float32)          # [bs, hd]
+        v = vt[:, h, :].astype(jnp.float32)
+        if ks is not None:
+            # int8 pool tiles: moved at 1 B/elem, dequantized in VMEM
+            k = k * ks[:, h].astype(jnp.float32)[:, None]
+            v = v * vs[:, h].astype(jnp.float32)[:, None]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        s = jnp.where(ok, s, -jnp.inf)
+        m_prev = m_ref[h]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+        p = jnp.where(ok, jnp.exp(s - m_safe[:, None]), 0.0)
+        corr = jnp.where(jnp.isneginf(m_prev), 0.0,
+                         jnp.exp(m_prev - m_safe))
+        l_ref[h] = l_ref[h] * corr + p.sum(axis=-1)
+        acc_ref[h] = acc_ref[h] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[h] = m_new
+
+
+def _tile_visible(qp, kp, window: Optional[int], prefix_len: int):
+    """Tile-level visibility (flash-decode early exit): is any pool row in
+    this tile attendable by any query?  Dead tiles report False outright —
+    identical to every row carrying position -1."""
+    q_hi = qp.max()
+    vis = (kp >= 0) & (kp <= q_hi)
+    if window is not None:
+        q_lo = jnp.where(qp < 0, jnp.iinfo(jnp.int32).max, qp).min()
+        vis &= kp > q_lo - window
+    if prefix_len:
+        vis |= (kp >= 0) & (kp < prefix_len)
+    return vis.any()
+
+
+def _fold_q(q: jax.Array, q_pos: jax.Array, kvh: int):
+    """Fold q per kv head: ``[B, T, H, hd] -> [B, KVH, G*T, hd]`` (rows
+    (g, t), matching ops._fold_gqa's ordering), repeat q_pos per group
+    row, and pad the row dim to the TPU sublane multiple (8) with
+    ``q_pos = -1`` rows that match nothing.  Returns ``(qf, qpf, GT,
+    unfold)`` where unfold maps ``[B, KVH, GT, hd]`` back to
+    ``[B, T, H, hd]``.
+    """
+    B, T, H, hd = q.shape
+    G = H // kvh
+    qf = (q.reshape(B, T, kvh, G, hd).transpose(0, 2, 3, 1, 4)
+           .reshape(B, kvh, G * T, hd))
+    qpf = jnp.broadcast_to(q_pos[:, None, :], (B, G, T)).reshape(B, G * T)
+    rows = G * T
+    pad = (-rows) % 8                       # TPU sublane multiple
+    if pad:
+        qf = jnp.pad(qf, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        qpf = jnp.pad(qpf, ((0, 0), (0, pad)), constant_values=-1)
+    GT = rows + pad
+
+    def unfold(o: jax.Array) -> jax.Array:
+        ot = o[:, :, :rows] if pad else o
+        return (ot.reshape(B, kvh, G, T, hd).transpose(0, 3, 1, 2, 4)
+                  .reshape(B, T, H, hd))
+
+    return qf, qpf, GT, unfold
+
+
+# ---------------------------------------------------------------------------
+# dense grid: (batch, max_blocks_per_slot), @pl.when skipping dead tiles
 
 
 def _fused_kernel(bt_ref, q_ref, k_ref, v_ref, qp_ref, pp_ref, *rest,
@@ -74,44 +188,13 @@ def _fused_kernel(bt_ref, q_ref, k_ref, v_ref, qp_ref, pp_ref, *rest,
     kp = pp_ref[0]                                       # [bs]
     owned = bt_ref[b, j] >= 0
 
-    # tile-level visibility (flash-decode early exit): any pool row in this
-    # tile attendable by any query?  Dead tiles (unowned blocks) are skipped
-    # outright — identical to every row reporting position -1.
-    q_hi = qp.max()
-    vis = (kp >= 0) & (kp <= q_hi)
-    if window is not None:
-        q_lo = jnp.where(qp < 0, jnp.iinfo(jnp.int32).max, qp).min()
-        vis &= kp > q_lo - window
-    if prefix_len:
-        vis |= (kp >= 0) & (kp < prefix_len)
-
-    @pl.when(owned & vis.any())
+    @pl.when(owned & _tile_visible(qp, kp, window, prefix_len))
     def _compute():
-        ok = (kp[None, :] >= 0) & (kp[None, :] <= qp[:, None])   # [GT, bs]
-        if window is not None:
-            ok &= kp[None, :] > qp[:, None] - window
-        if prefix_len:
-            ok |= (kp[None, :] >= 0) & (kp[None, :] < prefix_len)
-        for h in range(kvh):                             # unrolled 2D dots
-            q = q_ref[0, h].astype(jnp.float32)          # [GT, hd]
-            k = k_ref[0, :, h, :].astype(jnp.float32)    # [bs, hd]
-            v = v_ref[0, :, h, :].astype(jnp.float32)
-            if ks_ref is not None:
-                # int8 pool tiles: moved at 1 B/elem, dequantized in VMEM
-                k = k * ks_ref[0, :, h].astype(jnp.float32)[:, None]
-                v = v * vs_ref[0, :, h].astype(jnp.float32)[:, None]
-            s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
-            s = jnp.where(ok, s, -jnp.inf)
-            m_prev = m_ref[h]
-            m_new = jnp.maximum(m_prev, s.max(axis=-1))
-            m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
-            p = jnp.where(ok, jnp.exp(s - m_safe[:, None]), 0.0)
-            corr = jnp.where(jnp.isneginf(m_prev), 0.0,
-                             jnp.exp(m_prev - m_safe))
-            l_ref[h] = l_ref[h] * corr + p.sum(axis=-1)
-            acc_ref[h] = acc_ref[h] * corr[:, None] + jax.lax.dot_general(
-                p, v, (((1,), (0,)), ((), ())))
-            m_ref[h] = m_new
+        _flash_tile(q_ref, k_ref[0], v_ref[0], qp, kp,
+                    acc_ref, m_ref, l_ref, scale=scale, window=window,
+                    prefix_len=prefix_len, kvh=kvh,
+                    ks=None if ks_ref is None else ks_ref[0],
+                    vs=None if vs_ref is None else vs_ref[0])
 
     @pl.when(j == nb - 1)
     def _finish():
@@ -129,7 +212,7 @@ def paged_verify_attn_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
                              k_scale: Optional[jax.Array] = None,
                              v_scale: Optional[jax.Array] = None,
                              interpret: bool = False) -> jax.Array:
-    """Verify-step attention against the paged pool, fused.
+    """Verify-step attention against the paged pool, fused, dense grid.
 
     q: [B, T, H, hd] (tiny T = s+1, or a prefill chunk); k/v:
     [NB, bs, KVH, hd] pool; q_pos: [B, T]; pos: [NB, bs] (absolute position,
@@ -138,25 +221,15 @@ def paged_verify_attn_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
     scales for an int8 pool.  Returns [B, T, H, hd].
 
     No ``[B, MAXB*bs, ...]`` logical view is ever built: tiles stream from
-    the pool through the prefetched block table (module docstring).
+    the pool through the prefetched block table (module docstring).  The
+    grid is the dense ``(B, MAXB)`` — dead tiles are skipped but still
+    cost grid steps; :func:`ragged_paged_verify_attn_pallas` removes them.
     """
     B, T, H, hd = q.shape
-    NB, bs, KVH = k.shape[0], k.shape[1], k.shape[2]
+    bs, KVH = k.shape[1], k.shape[2]
     MAXB = block_tables.shape[1]
-    G = H // KVH
     scale = scale if scale is not None else 1.0 / math.sqrt(hd)
-
-    # fold q per kv head: [B, T, H, hd] -> [B, KVH, G*T, hd] (rows (g, t),
-    # matching ops._fold_gqa's ordering); q_pos repeats per group row.
-    qf = (q.reshape(B, T, KVH, G, hd).transpose(0, 2, 3, 1, 4)
-           .reshape(B, KVH, G * T, hd))
-    qpf = jnp.broadcast_to(q_pos[:, None, :], (B, G, T)).reshape(B, G * T)
-    rows = G * T
-    pad = (-rows) % 8                       # TPU sublane multiple
-    if pad:
-        qf = jnp.pad(qf, ((0, 0), (0, 0), (0, pad), (0, 0)))
-        qpf = jnp.pad(qpf, ((0, 0), (0, pad)), constant_values=-1)
-    GT = rows + pad
+    qf, qpf, GT, unfold = _fold_q(q, q_pos, KVH)
 
     # index maps receive the prefetched block table; dead entries clip to
     # physical block 0 (valid address, body skips the tile — and repeated
@@ -204,8 +277,315 @@ def paged_verify_attn_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
         out_shape=jax.ShapeDtypeStruct((B, KVH, GT, hd), q.dtype),
         interpret=interpret,
     )(*args)
-    if pad:
-        o = o[:, :, :rows]
-    # unfold: [B, KVH, G*T, hd] -> [B, T, H, hd]
-    return (o.reshape(B, KVH, G, T, hd).transpose(0, 3, 1, 2, 4)
-             .reshape(B, T, H, hd))
+    return unfold(o)
+
+
+# ---------------------------------------------------------------------------
+# ragged grid: one flat run of sum(max(live_blocks, 1)) steps
+
+
+def ragged_plan(block_tables: jax.Array, cu_blocks: jax.Array):
+    """Derive the step->(slot, logical block) maps for the ragged grid.
+
+    ``cu_blocks`` is the host-computed cumulative step count ``[B + 1]``
+    (per-slot steps = max(live blocks, 1); see kernels/tuning.py
+    ``host_cu_blocks``).  Returns ``(ss, sb, pbs)`` of static length
+    ``B * MAXB`` (the grid only visits the first ``cu_blocks[B]``):
+
+    * ``ss[i]``  — the slot served by step ``i``;
+    * ``sb[i]``  — the *logical* block index within that slot's table row
+      (its ``(i - cu[ss[i]])``-th live entry, in ascending logical order —
+      the dense kernel's visit order, so accumulation is bit-identical);
+    * ``pbs[i]`` — the physical pool block (dead entries clipped to 0 so
+      the address is always valid; the body's ``owned`` check skips them).
+
+    All three are cheap in-trace int32 ops over ``[B, MAXB]``; they ride
+    the scalar-prefetch channel into the index maps.
+    """
+    B, MAXB = block_tables.shape
+    cu = cu_blocks.astype(jnp.int32)
+    ar = jnp.arange(B * MAXB, dtype=jnp.int32)
+    ss = jnp.clip(jnp.searchsorted(cu, ar, side="right") - 1,
+                  0, B - 1).astype(jnp.int32)
+    # stable argsort of the dead mask packs each row's live logical
+    # indices first, in ascending order (interior -1 holes included)
+    order = jnp.argsort(jnp.where(block_tables >= 0, 0, 1),
+                        axis=1, stable=True).astype(jnp.int32)
+    sb = order[ss, jnp.minimum(ar - cu[ss], MAXB - 1)]
+    pbs = jnp.maximum(block_tables[ss, sb], 0).astype(jnp.int32)
+    return ss, sb, pbs
+
+
+def _ragged_kernel(bt_ref, ss_ref, sb_ref, cu_ref, q_ref, k_ref, v_ref,
+                   qp_ref, pp_ref, *rest,
+                   scale: float, window: Optional[int], prefix_len: int,
+                   kvh: int, quant: bool, profile: Optional[str]):
+    if quant:
+        ks_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        ks_ref = vs_ref = None
+        o_ref, acc_ref, m_ref, l_ref = rest
+    i = pl.program_id(0)
+    b = ss_ref[i]
+
+    @pl.when(i == cu_ref[b])
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    qp = qp_ref[0]                                       # [GT]
+    kp = pp_ref[0]                                       # [bs]
+    owned = bt_ref[b, sb_ref[i]] >= 0
+
+    if profile != "dma":
+        @pl.when(owned & _tile_visible(qp, kp, window, prefix_len))
+        def _compute():
+            _flash_tile(q_ref, k_ref[0], v_ref[0], qp, kp,
+                        acc_ref, m_ref, l_ref, scale=scale, window=window,
+                        prefix_len=prefix_len, kvh=kvh,
+                        ks=None if ks_ref is None else ks_ref[0],
+                        vs=None if vs_ref is None else vs_ref[0])
+
+    @pl.when(i == cu_ref[b + 1] - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[..., None]
+                    ).astype(o_ref.dtype)
+
+
+def _ragged_dma_kernel(bt_ref, ss_ref, sb_ref, cu_ref, pbs_ref, q_ref,
+                       qp_ref, k_hbm, v_hbm, pp_hbm, *rest,
+                       scale: float, window: Optional[int], prefix_len: int,
+                       kvh: int, quant: bool, nbuf: int,
+                       profile: Optional[str]):
+    """Ragged grid with an explicit ``nbuf``-deep manual DMA ring.
+
+    k/v/pos (and int8 scale) pools stay in ANY memory space; each stream
+    gets ``nbuf`` VMEM landing buffers and a DMA semaphore lane per
+    buffer.  Step 0 warm-starts the first ``nbuf - 1`` tile fetches; every
+    step then starts tile ``i + nbuf - 1`` and waits on its own —
+    generalized double/quad buffering with the fetch horizon as a knob.
+    """
+    if quant:
+        (ks_hbm, vs_hbm, o_ref, acc_ref, m_ref, l_ref,
+         kbuf, vbuf, pbuf, ksbuf, vsbuf,
+         ksem, vsem, psem, kssem, vssem) = rest
+    else:
+        (o_ref, acc_ref, m_ref, l_ref, kbuf, vbuf, pbuf,
+         ksem, vsem, psem) = rest
+        ks_hbm = vs_hbm = ksbuf = vsbuf = kssem = vssem = None
+    i = pl.program_id(0)
+    n = pl.num_programs(0)
+    b = ss_ref[i]
+
+    def _copies(t, slot):
+        blk = pbs_ref[t]
+        ops = [pltpu.make_async_copy(k_hbm.at[blk], kbuf.at[slot],
+                                     ksem.at[slot]),
+               pltpu.make_async_copy(v_hbm.at[blk], vbuf.at[slot],
+                                     vsem.at[slot]),
+               pltpu.make_async_copy(pp_hbm.at[blk], pbuf.at[slot],
+                                     psem.at[slot])]
+        if quant:
+            ops += [pltpu.make_async_copy(ks_hbm.at[blk], ksbuf.at[slot],
+                                          kssem.at[slot]),
+                    pltpu.make_async_copy(vs_hbm.at[blk], vsbuf.at[slot],
+                                          vssem.at[slot])]
+        return ops
+
+    @pl.when(i == cu_ref[b])
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    slot = i % nbuf
+    if profile != "compute":
+        # warm-up: tiles 0 .. nbuf-2 land in buffers 0 .. nbuf-2
+        @pl.when(i == 0)
+        def _warmup():
+            for d in range(nbuf - 1):
+                @pl.when(d < n)
+                def _start(d=d):
+                    for op in _copies(d, d):
+                        op.start()
+
+        # steady state: keep the ring full nbuf-1 tiles ahead of compute
+        nxt = i + nbuf - 1
+
+        @pl.when(nxt < n)
+        def _ahead():
+            for op in _copies(nxt, nxt % nbuf):
+                op.start()
+
+        for op in _copies(i, slot):
+            op.wait()
+
+    qp = qp_ref[0]                                       # [GT]
+    kp = pbuf[slot]                                      # [bs]
+    owned = bt_ref[b, sb_ref[i]] >= 0
+
+    if profile != "dma":
+        @pl.when(owned & _tile_visible(qp, kp, window, prefix_len))
+        def _compute():
+            _flash_tile(q_ref, kbuf[slot], vbuf[slot], qp, kp,
+                        acc_ref, m_ref, l_ref, scale=scale, window=window,
+                        prefix_len=prefix_len, kvh=kvh,
+                        ks=None if ksbuf is None else ksbuf[slot],
+                        vs=None if vsbuf is None else vsbuf[slot])
+
+    @pl.when(i == cu_ref[b + 1] - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[..., None]
+                    ).astype(o_ref.dtype)
+
+
+def ragged_paged_verify_attn_pallas(q: jax.Array, k: jax.Array,
+                                    v: jax.Array, q_pos: jax.Array,
+                                    pos: jax.Array,
+                                    block_tables: jax.Array,
+                                    cu_blocks: jax.Array,
+                                    window: Optional[int] = None,
+                                    prefix_len: int = 0,
+                                    scale: Optional[float] = None,
+                                    k_scale: Optional[jax.Array] = None,
+                                    v_scale: Optional[jax.Array] = None,
+                                    num_buffers: int = 0,
+                                    vmem_limit_bytes: Optional[int] = None,
+                                    profile: Optional[str] = None,
+                                    interpret: bool = False) -> jax.Array:
+    """Verify-step attention against the paged pool, fused, *ragged* grid.
+
+    Same operands and masking contract as :func:`paged_verify_attn_pallas`
+    plus ``cu_blocks [B + 1]`` — the host-computed cumulative grid-step
+    counts (per-slot steps = ``max(live blocks, 1)``; see
+    ``kernels/tuning.py host_cu_blocks``).  The grid is one flat run of
+    ``cu_blocks[B]`` steps, so dead table entries cost nothing; per-slot
+    blocks are visited in ascending logical order, making the output
+    bit-identical to the dense kernel (and the gather reference) for every
+    raggedness pattern.
+
+    Launch knobs (autotuned per (batch, s, blocks) cell — see
+    ``kernels/tuning.py`` and ``benchmarks/kernel_bench.py --autotune``):
+
+    * ``num_buffers = 0`` — standard BlockSpec auto-pipelining;
+      ``>= 2`` — explicit manual DMA with that many landing buffers per
+      k/v/pos(/scale) stream (double/quad/... buffering).
+    * ``vmem_limit_bytes`` — TPU compiler VMEM budget for the launch
+      (ignored in interpret mode).
+    * ``profile`` — ``'dma'`` skips the tile compute, ``'compute'`` skips
+      the copies (manual-DMA variant only): the benchmark's
+      DMA-vs-compute split.  Output is garbage in either mode.
+    """
+    B, T, H, hd = q.shape
+    bs, KVH = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qf, qpf, GT, unfold = _fold_q(q, q_pos, KVH)
+    ss, sb, pbs = ragged_plan(block_tables, cu_blocks)
+    total = cu_blocks.astype(jnp.int32)[block_tables.shape[0]]
+    quant = k_scale is not None
+
+    # index maps see the grid index plus every scalar-prefetch operand,
+    # in positional order
+    def _q_map(i, bt, ss, sb, cu):
+        return (ss[i], 0, 0, 0)
+
+    def _qp_map(i, bt, ss, sb, cu):
+        return (ss[i], 0)
+
+    kwargs = {}
+    if vmem_limit_bytes is not None and not interpret:
+        kwargs["compiler_params"] = pltpu.TPUCompilerParams(
+            vmem_limit_bytes=int(vmem_limit_bytes))
+
+    if num_buffers >= 2:
+        def _q_map_d(i, bt, ss, sb, cu, pbs):
+            return (ss[i], 0, 0, 0)
+
+        def _qp_map_d(i, bt, ss, sb, cu, pbs):
+            return (ss[i], 0)
+
+        in_specs = [
+            pl.BlockSpec((1, KVH, GT, hd), _q_map_d),
+            pl.BlockSpec((1, GT), _qp_map_d),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ]
+        args = [block_tables, ss, sb, cu_blocks.astype(jnp.int32), pbs,
+                qf, qpf, k, v, pos]
+        if quant:
+            in_specs += [pl.BlockSpec(memory_space=pltpu.ANY),
+                         pl.BlockSpec(memory_space=pltpu.ANY)]
+            args += [k_scale, v_scale]
+        D = num_buffers
+        scratch = [
+            pltpu.VMEM((KVH, GT, hd), jnp.float32),
+            pltpu.VMEM((KVH, GT), jnp.float32),
+            pltpu.VMEM((KVH, GT), jnp.float32),
+            pltpu.VMEM((D, bs, KVH, hd), k.dtype),
+            pltpu.VMEM((D, bs, KVH, hd), v.dtype),
+            pltpu.VMEM((D, bs), pos.dtype),
+        ]
+        if quant:
+            scratch += [pltpu.VMEM((D, bs, KVH), k_scale.dtype),
+                        pltpu.VMEM((D, bs, KVH), v_scale.dtype)]
+        scratch += [pltpu.SemaphoreType.DMA((D,))] * (5 if quant else 3)
+        kern = functools.partial(_ragged_dma_kernel, scale=scale,
+                                 window=window, prefix_len=prefix_len,
+                                 kvh=KVH, quant=quant, nbuf=D,
+                                 profile=profile)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=5,
+            grid=(total,),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, KVH, GT, hd), _q_map_d),
+            scratch_shapes=scratch,
+        )
+    else:
+        def _kv_map(i, bt, ss, sb, cu):
+            return (jnp.maximum(bt[ss[i], sb[i]], 0), 0, 0, 0)
+
+        def _pos_map(i, bt, ss, sb, cu):
+            return (jnp.maximum(bt[ss[i], sb[i]], 0), 0)
+
+        def _scale_map(i, bt, ss, sb, cu):
+            return (jnp.maximum(bt[ss[i], sb[i]], 0), 0, 0)
+
+        in_specs = [
+            pl.BlockSpec((1, KVH, GT, hd), _q_map),
+            pl.BlockSpec((1, bs, KVH, hd), _kv_map),
+            pl.BlockSpec((1, bs, KVH, hd), _kv_map),
+            pl.BlockSpec((1, GT), _qp_map),
+            pl.BlockSpec((1, bs), _pos_map),
+        ]
+        args = [block_tables, ss, sb, cu_blocks.astype(jnp.int32),
+                qf, k, v, qpf, pos]
+        if quant:
+            in_specs += [pl.BlockSpec((1, bs, KVH), _scale_map),
+                         pl.BlockSpec((1, bs, KVH), _scale_map)]
+            args += [k_scale, v_scale]
+        kern = functools.partial(_ragged_kernel, scale=scale, window=window,
+                                 prefix_len=prefix_len, kvh=KVH,
+                                 quant=quant, profile=profile)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=(total,),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, KVH, GT, hd), _q_map),
+            scratch_shapes=[
+                pltpu.VMEM((KVH, GT, hd), jnp.float32),
+                pltpu.VMEM((KVH, GT), jnp.float32),
+                pltpu.VMEM((KVH, GT), jnp.float32),
+            ],
+        )
+    o = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KVH, GT, hd), q.dtype),
+        interpret=interpret,
+        **kwargs,
+    )(*args)
+    return unfold(o)

@@ -132,6 +132,11 @@ class SlotPoolSpecs:
     done: P
     batch_axes: Any                   # mesh axes the capacity dim shards over
     n_shards: int
+    # the ragged-grid scalar operands (cu_blocks [capacity + 1] on the step,
+    # cu_row [2] on the chunk forward) are host-built per dispatch and tiny:
+    # they ride explicitly REPLICATED so every shard sees the full grid plan
+    # its scalar-prefetched block table describes
+    cu_blocks: P = P()
 
 
 def slot_pool_specs(mesh: Mesh, target, draft, capacity: int, *,
@@ -184,7 +189,7 @@ def slot_pool_specs(mesh: Mesh, target, draft, capacity: int, *,
         tcache=tc, dcache=dc,
         seq_lens=P(baxes), last2=P(baxes), out=P(baxes),
         n_generated=P(baxes), done=P(baxes),
-        batch_axes=baxes, n_shards=n_shards)
+        batch_axes=baxes, n_shards=n_shards, cu_blocks=P())
 
 
 # ---------------------------------------------------------------------------

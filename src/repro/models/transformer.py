@@ -257,16 +257,25 @@ class DecoderLM:
 
     def _attn_decode(self, lp: Dict, x: jax.Array, positions: jax.Array,
                      layer_cache: Dict, pos_arr: jax.Array, rows: jax.Array,
-                     prefix_len: int) -> Tuple[jax.Array, Dict]:
+                     prefix_len: int, rows_limit: Optional[int] = None,
+                     ) -> Tuple[jax.Array, Dict]:
         """Incremental attention: write new KV at ``rows`` then attend.
 
         x: [B,T,d]; positions: [B,T] absolute; rows: [B,T] ring-buffer rows;
         pos_arr: [B,L] updated row->abs-position map (already includes the
         new writes).  Returns (attn_out [B,T,d], updated layer cache).
+
+        ``rows_limit`` (static) bounds the *attended* key rows to the first
+        ``rows_limit`` of the cache — callers that know every visible key
+        lives below a row bound (chunked prefill: rows < prefix + chunk)
+        skip streaming the dead tail.  Rows beyond the bound are unwritten
+        or stale-wiped (position -1, never attendable), so the bound is
+        numerically free; writes still land in the full cache.
         """
         c, a = self.cfg, self.cfg.attn
         B, T, _ = x.shape
         bidx = jnp.arange(B)[:, None]
+        R = rows_limit if rows_limit is not None else pos_arr.shape[1]
         if a.kind == "mla":
             q_nope, q_rope, ckv_new, krope_new = self._mla_proj(lp, x, positions)
             ckv = layer_cache["ckv"].at[bidx, rows].set(
@@ -275,14 +284,16 @@ class DecoderLM:
                 krope_new.astype(layer_cache["krope"].dtype), mode="drop")
             # absorbed attention: score via compressed cache
             q_abs = jnp.einsum("bthk,lhk->bthl", q_nope, lp["w_uk"])
-            s1 = jnp.einsum("bthl,bsl->bhts", q_abs, ckv)
-            s2 = jnp.einsum("bthr,bsr->bhts", q_rope, krope)
+            s1 = jnp.einsum("bthl,bsl->bhts", q_abs, ckv[:, :R])
+            s2 = jnp.einsum("bthr,bsr->bhts", q_rope, krope[:, :R])
             scale = 1.0 / math.sqrt(a.head_dim + a.rope_head_dim)
             scores = (s1 + s2).astype(jnp.float32) * scale
-            mask = cm.position_mask(positions, pos_arr, a.window, prefix_len)
+            mask = cm.position_mask(positions, pos_arr[:, :R], a.window,
+                                    prefix_len)
             scores = jnp.where(mask[:, None], scores, -1e30)
             p = jax.nn.softmax(scores, axis=-1)
-            o_lora = jnp.einsum("bhts,bsl->bthl", p.astype(ckv.dtype), ckv)
+            o_lora = jnp.einsum("bhts,bsl->bthl", p.astype(ckv.dtype),
+                                ckv[:, :R])
             out = jnp.einsum("bthl,lhv->bthv", o_lora, lp["w_uv"])
             out = jnp.einsum("bthv,hvd->btd", out, lp["wo"])
             return out, {"ckv": ckv, "krope": krope}
@@ -301,11 +312,12 @@ class DecoderLM:
             # int8 tiles + scales go straight into the kernel wrapper: the
             # TPU kernel streams 1 B/elem and dequantizes in VMEM, the CPU
             # reference dequantizes up front (same numerics)
-            out = spec_verify_attn(q, new_lcache["k"], new_lcache["v"],
-                                   positions, pos_arr, window=a.window,
+            out = spec_verify_attn(q, new_lcache["k"][:, :R],
+                                   new_lcache["v"][:, :R],
+                                   positions, pos_arr[:, :R], window=a.window,
                                    prefix_len=prefix_len,
-                                   k_scale=new_lcache["k_scale"],
-                                   v_scale=new_lcache["v_scale"])
+                                   k_scale=new_lcache["k_scale"][:, :R],
+                                   v_scale=new_lcache["v_scale"][:, :R])
             out = jnp.einsum("bthk,hkd->btd", out, lp["wo"])
             return out, new_lcache
         k = layer_cache["k"].at[bidx, rows].set(
@@ -316,7 +328,8 @@ class DecoderLM:
         # verify-step attention: s+1 tiny q rows vs the ragged ring-buffer
         # cache — the paper's hot spot (Pallas spec_verify_attn on TPU,
         # reference path on CPU; identical masking semantics)
-        out = spec_verify_attn(q, k, v, positions, pos_arr,
+        out = spec_verify_attn(q, k[:, :R], v[:, :R], positions,
+                               pos_arr[:, :R],
                                window=a.window, prefix_len=prefix_len)
         out = jnp.einsum("bthk,hkd->btd", out, lp["wo"])
         return out, new_lcache
@@ -324,14 +337,18 @@ class DecoderLM:
     def _attn_paged(self, lp: Dict, x: jax.Array, positions: jax.Array,
                     lcache: Dict, pos_arr: jax.Array, pb: jax.Array,
                     off: jax.Array, bt: jax.Array, prefix_len: int,
+                    cu_blocks: Optional[jax.Array] = None,
                     ) -> Tuple[jax.Array, Dict]:
         """Paged incremental attention: scatter this step's KV rows through
         the block table (``pb``/``off`` physical addresses, out-of-range =>
         dropped write), then attend against the pool via
         :func:`~repro.kernels.paged.paged_verify_attn` — the fused streaming
         kernel or the gather reference per ``cfg.paged_fused``.  Shared by
-        the paged decode step and the paged prefill-chunk (prefix-extension)
-        forward, so both ride the same kernel.
+        the paged decode step, the paged prefill-chunk (prefix-extension)
+        forward, and the mixed verify+chunk launch, so all three ride the
+        same kernel.  ``cu_blocks [B + 1]`` (host-computed cumulative
+        grid-step counts) upgrades the fused path to the ragged grid —
+        steps = sum of live blocks instead of ``B * MAXB``.
         """
         c, a = self.cfg, self.cfg.attn
         q, k_new, v_new = self._qkv_gqa(lp, x, positions)
@@ -350,7 +367,8 @@ class DecoderLM:
                 q, new_lcache["k"], new_lcache["v"], positions, pos_arr, bt,
                 window=a.window, prefix_len=prefix_len,
                 k_scale=new_lcache["k_scale"],
-                v_scale=new_lcache["v_scale"], use_pallas=c.paged_fused)
+                v_scale=new_lcache["v_scale"], use_pallas=c.paged_fused,
+                cu_blocks=cu_blocks)
         else:
             new_lcache = {
                 "k": lcache["k"].at[pb, off].set(
@@ -361,7 +379,7 @@ class DecoderLM:
             out = paged_verify_attn(
                 q, new_lcache["k"], new_lcache["v"], positions, pos_arr, bt,
                 window=a.window, prefix_len=prefix_len,
-                use_pallas=c.paged_fused)
+                use_pallas=c.paged_fused, cu_blocks=cu_blocks)
         return jnp.einsum("bthk,hkd->btd", out, lp["wo"]), new_lcache
 
     # ------------------------------------------------------------------
@@ -547,7 +565,9 @@ class DecoderLM:
     # incremental decode
 
     def decode_step(self, params: Params, tokens: jax.Array, cache: Dict,
-                    seq_lens: jax.Array) -> Tuple[jax.Array, Dict]:
+                    seq_lens: jax.Array,
+                    cu_blocks: Optional[jax.Array] = None,
+                    ) -> Tuple[jax.Array, Dict]:
         """tokens: [B, T] the last committed token followed by T-1 drafts;
         they occupy absolute positions (seq_lens-1) ... (seq_lens+T-2).
         Returns (logits [B, T, V], updated cache).
@@ -556,10 +576,13 @@ class DecoderLM:
         :meth:`init_paged_cache`) and takes the paged path — block-table
         scatter writes plus the fused streaming kernel or gather reference
         per ``cfg.paged_fused`` (kernels/paged.py); otherwise the per-row
-        ring-buffer path below runs unchanged.
+        ring-buffer path below runs unchanged.  ``cu_blocks [B + 1]``
+        (host cumulative grid-step counts; paged + fused only) selects the
+        ragged grid — see :func:`~repro.kernels.paged.paged_verify_attn`.
         """
         if "bt" in cache:
-            return self._decode_step_paged(params, tokens, cache, seq_lens)
+            return self._decode_step_paged(params, tokens, cache, seq_lens,
+                                           cu_blocks)
         c = self.cfg
         B, T = tokens.shape
         L = cache["pos"].shape[1]
@@ -590,6 +613,7 @@ class DecoderLM:
 
     def _decode_step_paged(self, params: Params, tokens: jax.Array,
                            cache: Dict, seq_lens: jax.Array,
+                           cu_blocks: Optional[jax.Array] = None,
                            ) -> Tuple[jax.Array, Dict]:
         """Incremental decode against the paged KV pool.
 
@@ -620,7 +644,76 @@ class DecoderLM:
             hn = cm.rms_norm(h, lp["attn_norm"], c.norm_eps)
             a_out, new_lcache = self._attn_paged(lp, hn, positions, lcache,
                                                  pos_arr, pb, off, bt,
-                                                 prefix_len)
+                                                 prefix_len, cu_blocks)
+            h = h + shard(a_out, "data", None, None)
+            m_out, _ = self._mlp(lp, cm.rms_norm(h, lp["mlp_norm"], c.norm_eps))
+            h = h + shard(m_out, "data", None, None)
+            return h, new_lcache
+
+        layer_caches = {k: v for k, v in cache.items() if k not in ("pos", "bt")}
+        x, new_caches = jax.lax.scan(layer, x, (params["layers"], layer_caches))
+        x = cm.rms_norm(x, params["final_norm"], c.norm_eps)
+        table = params["embed"] if c.tie_embeddings else params["unembed"]
+        logits = cm.unembed(x, table, c.vocab_size)
+        return logits, dict(new_caches, pos=pos_arr, bt=bt)
+
+    def decode_step_mixed(self, params: Params, tokens: jax.Array,
+                          cache: Dict, seq_lens: jax.Array,
+                          chunk_slot: jax.Array, chunk_tokens: jax.Array,
+                          chunk_start: jax.Array, chunk_limit: jax.Array,
+                          chunk_bt_row: jax.Array, verify_len: int,
+                          cu_blocks: Optional[jax.Array] = None,
+                          ) -> Tuple[jax.Array, Dict]:
+        """One mixed verify+chunk launch against the paged pool.
+
+        Row ``chunk_slot`` of the batch carries a chunk-prefill prefix
+        extension (``chunk_tokens`` at absolute positions ``chunk_start ..
+        chunk_limit - 1``, reading/writing through ``chunk_bt_row`` — the
+        slot's host table row, which on device is still all ``-1`` while
+        the slot is parked PREFILLING); every other row carries its usual
+        verify feed (first ``verify_len`` columns; the rest is padding
+        with position ``-1``, matching nothing and writing nowhere).  Both
+        query kinds ride one ragged kernel call per layer — per-query-row
+        masking plus per-row block tables make the kernel agnostic to
+        which row is which, so a separate chunk launch (and its grid,
+        weight re-streaming, and dispatch) disappears.
+
+        The returned cache keeps the *original* device ``bt`` — the
+        pending slot's table row stays ``-1`` until its final chunk
+        commits, exactly like the standalone chunk forward.  Logits for
+        the chunk row are meaningless (the engine's accept mask already
+        zeroes pending slots); callers slice ``[:, :verify_len]``.
+        """
+        c = self.cfg
+        B, T = tokens.shape
+        NB, bs = cache["pos"].shape
+        bt = cache["bt"]                                        # [B, MAXB]
+        bt_eff = bt.at[chunk_slot].set(chunk_bt_row)
+        toks = tokens.at[chunk_slot].set(chunk_tokens)
+        x = cm.embed(toks, params["embed"])
+        x = shard(x, "data", None, None)
+        col = jnp.arange(T, dtype=jnp.int32)
+        positions = jnp.where(col[None] < verify_len,
+                              (seq_lens - 1)[:, None] + col[None], -1)
+        cpos = chunk_start + col
+        positions = positions.at[chunk_slot].set(
+            jnp.where(cpos < chunk_limit, cpos, -1))
+        valid = positions >= 0
+        blk = jnp.clip(positions // bs, 0, bt.shape[1] - 1)
+        off = positions % bs
+        pb = jnp.take_along_axis(bt_eff, blk, axis=1)           # [B, T]
+        pb = jnp.where((pb < 0) | ~valid, NB, pb)               # NB => dropped
+        pos_arr = cache["pos"].at[pb, off].set(
+            jnp.where(valid, positions, -1), mode="drop")
+        prefix_len = c.prefix_len if c.bidirectional_prefix else 0
+
+        def layer(carry, xs):
+            h = carry
+            lp, lcache = xs
+            hn = cm.rms_norm(h, lp["attn_norm"], c.norm_eps)
+            a_out, new_lcache = self._attn_paged(lp, hn, positions, lcache,
+                                                 pos_arr, pb, off, bt_eff,
+                                                 prefix_len, cu_blocks)
             h = h + shard(a_out, "data", None, None)
             m_out, _ = self._mlp(lp, cm.rms_norm(h, lp["mlp_norm"], c.norm_eps))
             h = h + shard(m_out, "data", None, None)
@@ -638,6 +731,8 @@ class DecoderLM:
 
     def prefill_chunk(self, params: Params, tokens: jax.Array, cache: Dict,
                       offset: jax.Array, limit: jax.Array,
+                      rows_limit: Optional[int] = None,
+                      cu_blocks: Optional[jax.Array] = None,
                       ) -> Tuple[jax.Array, Dict]:
         """One prefill *chunk*: write ``tokens`` [B, T] at absolute positions
         ``offset .. offset+T-1``, attending over the already-written cache
@@ -654,10 +749,17 @@ class DecoderLM:
         Returns (logits [B, T, V], updated cache); callers that only extend
         the cache can discard the logits (XLA dead-code-eliminates the
         unembed under jit).
+
+        ``rows_limit`` (static) bounds the attended cache rows: during
+        chunked prefill every visible key lives at a row below
+        ``offset + T`` (positions equal rows until the first wrap, and
+        chunks never wrap), so the engine passes a power-of-two bucket of
+        it and the attention stops streaming the dead tail of the logical
+        cache.  ``cu_blocks`` selects the ragged grid on the paged path.
         """
         if "bt" in cache:
             return self._prefill_chunk_paged(params, tokens, cache, offset,
-                                             limit)
+                                             limit, cu_blocks)
         c = self.cfg
         B, T = tokens.shape
         L = cache["pos"].shape[1]
@@ -675,7 +777,8 @@ class DecoderLM:
             lp, lcache = xs
             hn = cm.rms_norm(h, lp["attn_norm"], c.norm_eps)
             a_out, new_lcache = self._attn_decode(lp, hn, positions, lcache,
-                                                  pos_arr, rows, prefix_len)
+                                                  pos_arr, rows, prefix_len,
+                                                  rows_limit)
             h = h + shard(a_out, "data", None, None)
             m_out, _ = self._mlp(lp, cm.rms_norm(h, lp["mlp_norm"], c.norm_eps))
             h = h + shard(m_out, "data", None, None)
@@ -689,6 +792,7 @@ class DecoderLM:
 
     def _prefill_chunk_paged(self, params: Params, tokens: jax.Array,
                              cache: Dict, offset: jax.Array, limit: jax.Array,
+                             cu_blocks: Optional[jax.Array] = None,
                              ) -> Tuple[jax.Array, Dict]:
         """Chunked prefill against the paged KV pool: chunk rows scatter
         block-wise through the slot's block table (padding and unallocated
@@ -719,7 +823,7 @@ class DecoderLM:
             hn = cm.rms_norm(h, lp["attn_norm"], c.norm_eps)
             a_out, new_lcache = self._attn_paged(lp, hn, positions, lcache,
                                                  pos_arr, pb, off, bt,
-                                                 prefix_len)
+                                                 prefix_len, cu_blocks)
             h = h + shard(a_out, "data", None, None)
             m_out, _ = self._mlp(lp, cm.rms_norm(h, lp["mlp_norm"], c.norm_eps))
             h = h + shard(m_out, "data", None, None)

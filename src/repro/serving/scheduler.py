@@ -74,6 +74,7 @@ import numpy as np
 from repro.core.adaptive import AdaptiveController
 from repro.core.analytical import LatencyModel
 from repro.core.spec_decode import S_MAX
+from repro.kernels.tuning import grid_steps_dense, grid_steps_ragged
 from repro.serving.acceptance import GeometricAcceptance
 from repro.serving.request import BatchRecord, Request
 from repro.serving.slots import PagedKVTables, SlotPool
@@ -315,7 +316,8 @@ class ContinuousEngineBackend:
                  s_cap: int = S_MAX,
                  mesh=None,
                  paged_fused=None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 mixed_launch: bool = False):
         if engine.tcfg.family in ("encdec", "audio", "vlm"):
             # these families need per-request modality extras (src_embeds /
             # prefix_embeds) that the admission path does not plumb yet; see
@@ -383,6 +385,23 @@ class ContinuousEngineBackend:
             from repro.serving.prefix_cache import PrefixCache
             self.cache = PrefixCache(self.kv.pool)
             self.kv.attach_cache(self.cache)
+        # mixed verify+chunk launch: NON-final paged prefill chunks defer
+        # their forward (host bookkeeping still runs at feed time, so block
+        # accounting and StepTrace stay bit-identical) and ride the next
+        # speculative step's ragged attention call (engine.step_with_chunk).
+        # Every other pool consumer flushes the pending chunk standalone
+        # first, so at most one chunk is ever in flight.
+        self.mixed_launch = mixed_launch
+        self._deferred = None            # Optional[DeferredChunk]
+        if mixed_launch:
+            if self.kv is None:
+                raise ValueError(
+                    "mixed_launch=True needs a paged KV pool (block_size): "
+                    "the fused launch rides the ragged paged kernel")
+            if mesh is not None:
+                raise ValueError(
+                    "mixed_launch is not supported on a mesh-sharded pool "
+                    "yet (the mixed step is registered unsharded only)")
         for s in warm_s:
             self.warm_step(s)
 
@@ -405,6 +424,21 @@ class ContinuousEngineBackend:
                              warm=True)
             self._warm_step.add(s)
 
+    def _flush_deferred(self) -> None:
+        """Dispatch the pending deferred chunk standalone, if any.
+
+        Called at the top of every other pool consumer (prefill / chunk /
+        attach / commit / step-without-mixing / preempt / retire / output
+        reads): the deferred forward must land before anything else touches
+        the pool or the state buffers it will consume.  Chunk rows are
+        slot-private, so dispatch order relative to the *step* is free —
+        this guard is about buffer lineage, not numerics.
+        """
+        if self._deferred is not None:
+            chunk, self._deferred = self._deferred, None
+            self.state = self.engine.flush_chunk(
+                self.tparams, self.dparams, self.state, chunk)
+
     def _bucket(self, n: int) -> int:
         p = 4
         while p < n:
@@ -422,6 +456,7 @@ class ContinuousEngineBackend:
     def prefill(self, req: Request, slot: int) -> float:
         """Inject ``req`` into ``slot``; returns seconds of prefill work."""
         _reject_oversize(req, self.max_context, self.s_cap)  # defense in depth
+        self._flush_deferred()
         prompt = self._full_prompt(req)
         plen = len(prompt)
         P = self._bucket(plen)
@@ -452,6 +487,7 @@ class ContinuousEngineBackend:
         """
         if start == 0:
             _reject_oversize(req, self.max_context, self.s_cap)
+        self._flush_deferred()
         prompt = self._full_prompt(req)
         total_len = len(prompt)
         feed_total = total_len - 1
@@ -465,6 +501,16 @@ class ContinuousEngineBackend:
                 self.tparams, self.dparams, self.state, slot,
                 np.ones((CB,), np.int32), 0, CB, CB + 2, warm=True)
             self._warm_chunk.add(CB)
+        if self.mixed_launch and not final:
+            # defer the forward: host bookkeeping runs now (block accounting
+            # and admission decisions are unchanged), the dispatch rides the
+            # next speculative step — or a standalone flush, whichever pool
+            # consumer comes first
+            t0 = time.perf_counter()
+            self.state, self._deferred = self.engine.prefill_chunk_into(
+                self.tparams, self.dparams, self.state, slot, toks, start,
+                n, total_len, defer=True)
+            return time.perf_counter() - t0
         t0 = time.perf_counter()
         self.state = self.engine.prefill_chunk_into(
             self.tparams, self.dparams, self.state, slot, toks, start, n,
@@ -502,6 +548,7 @@ class ContinuousEngineBackend:
         the slot, and run the draft-only prefix prefill; returns seconds.
         The uncached suffix is then fed via :meth:`prefill_chunk` with
         ``start = n_prefix`` (or, zero-suffix, :meth:`commit_attached`)."""
+        self._flush_deferred()
         blocks = self._locked.pop(req.rid)
         prompt = self._full_prompt(req)
         total_len = len(prompt)
@@ -524,6 +571,7 @@ class ContinuousEngineBackend:
         """Commit a fully-cached attach into the decode batch (no prefill
         forward at all — COW of the last block if needed, then the ordinary
         chunk-commit).  Returns seconds."""
+        self._flush_deferred()
         prompt = self._full_prompt(req)
         total_len = len(prompt)
         if not self._warm_commit_attached:
@@ -557,8 +605,23 @@ class ContinuousEngineBackend:
 
     def step(self, s: int) -> Tuple[float, np.ndarray, np.ndarray]:
         """One speculative step at live occupancy.  Returns
-        (wall seconds, committed[capacity], done[capacity])."""
+        (wall seconds, committed[capacity], done[capacity]).
+
+        With a deferred chunk pending (``mixed_launch``), the step runs as
+        ONE mixed verify+chunk launch — the chunk's prefix-extension rows
+        ride the same ragged attention grid as the verify queries instead
+        of paying a second kernel launch and weight re-stream.
+        """
         self.warm_step(s)
+        if self._deferred is not None:
+            chunk, self._deferred = self._deferred, None
+            t0 = time.perf_counter()
+            self.state, st = self.engine.step_with_chunk(
+                self.tparams, self.dparams, self.state, s, chunk)
+            committed = np.asarray(st.committed)  # lint: allow-host-sync(step boundary: commit counts steer the scheduler)
+            dt = time.perf_counter() - t0
+            # lint: allow-host-sync(step boundary: done flags steer retirement)
+            return dt, committed, np.asarray(self.state.done)
         t0 = time.perf_counter()
         self.state, st = self.engine.step(self.tparams, self.dparams,
                                           self.state, s)
@@ -570,6 +633,7 @@ class ContinuousEngineBackend:
     def preempt(self, slot: int, req: Request) -> None:
         """Evict ``req`` under memory pressure: stash its generated tokens,
         free the slot's KV blocks, and mark the row done."""
+        self._flush_deferred()
         dev_n = int(np.asarray(self.state.n_generated)[slot])  # lint: allow-host-sync(preempt is off the steady path; must read victim count)
         fresh = np.asarray(self.state.out)[slot, :dev_n].astype(np.int32)  # lint: allow-host-sync(victim tokens are stashed host-side)
         old = self._stash.get(req.rid)
@@ -578,6 +642,7 @@ class ContinuousEngineBackend:
         self.state = self.engine.retire_slot(self.state, slot)
 
     def retire(self, slot: int, req: Optional[Request] = None) -> None:
+        self._flush_deferred()
         if req is not None:
             if self.collect_outputs:
                 # stitch ever-preempted requests now, before the slot (and
@@ -596,6 +661,7 @@ class ContinuousEngineBackend:
         surface tokens past its budget) and stitched with any pre-preemption
         stash; without it, the legacy engine-sized row is returned.
         """
+        self._flush_deferred()
         out = np.asarray(self.state.out)[slot]
         if req is None:
             return out[:self.engine.max_new]
@@ -1359,9 +1425,17 @@ class ContinuousScheduler:
                          free_slots=pool.free_count,
                          capacity=self.backend.capacity)
                 if kv is not None:
+                    # ragged-grid occupancy: the share of the dense
+                    # B*MAXB attention grid the ragged kernel actually
+                    # launches this iteration (read-only over the host
+                    # block tables; kernels/tuning.py owns the arithmetic
+                    # so the gauge can never drift from the real grid)
+                    tabs = kv.device_tables(exclude_pending=True)
                     g.update(free_blocks=kv.free_blocks,
                              used_blocks=kv.num_blocks - kv.free_blocks,
-                             fragmentation=kv.fragmentation)
+                             fragmentation=kv.fragmentation,
+                             grid_occupancy=(grid_steps_ragged(tabs)
+                                             / float(grid_steps_dense(tabs))))
                 if cache_on:
                     cache = self.backend.cache
                     g.update(shared_blocks=kv.shared_blocks,
@@ -1385,6 +1459,7 @@ def serve_continuous_live(requests: Sequence[Request], engine, tparams,
                           mesh=None,
                           paged_fused=None,
                           prefix_cache: bool = False,
+                          mixed_launch: bool = False,
                           telemetry=None):
     """Serve a request trace on a LIVE SpecDecodeEngine with iteration-level
     continuous batching: requests join/leave at speculative-step granularity
@@ -1415,6 +1490,15 @@ def serve_continuous_live(requests: Sequence[Request], engine, tparams,
     constructed with, or previously forced to, an explicit path.  Token
     outputs and the StepTrace are identical either way
     (tests/test_paged_fused_kernel.py asserts it).
+
+    ``mixed_launch`` (requires ``block_size``) fuses each NON-final prefill
+    chunk into the next speculative step as ONE mixed verify+chunk launch
+    over the ragged paged kernel: the chunk's prefix-extension queries ride
+    the same real-length grid as the batch's verify queries, retiring the
+    separate chunk dispatch (and its weight re-stream).  Host block
+    accounting still runs at feed time, so admissions, preemptions, token
+    outputs and the StepTrace scheduling signature are identical with the
+    flag on or off (tests/test_ragged_paged_attn.py asserts it).
 
     ``prefix_cache`` (requires ``block_size``) turns on cross-request
     prefix sharing: admission matches the longest cached prefix of each
@@ -1461,6 +1545,13 @@ def serve_continuous_live(requests: Sequence[Request], engine, tparams,
             "serve_continuous_live: pass paged_fused to the "
             "ContinuousEngineBackend constructor when supplying an explicit "
             "backend (the kernel path is baked in at pool init)")
+    if backend is not None and mixed_launch:
+        # the defer/flush bookkeeping lives on the backend; silently
+        # dropping the flag would let a caller believe fusion was on
+        raise ValueError(
+            "serve_continuous_live: pass mixed_launch=True to the "
+            "ContinuousEngineBackend constructor when supplying an explicit "
+            "backend (the deferred-chunk bookkeeping lives on it)")
     if backend is not None and prefix_cache:
         # the cache wraps the backend's pool at construction time; silently
         # dropping the flag would let a caller believe sharing was on
@@ -1477,7 +1568,8 @@ def serve_continuous_live(requests: Sequence[Request], engine, tparams,
                                           num_blocks=num_blocks,
                                           s_cap=s_cap, mesh=mesh,
                                           paged_fused=paged_fused,
-                                          prefix_cache=prefix_cache)
+                                          prefix_cache=prefix_cache,
+                                          mixed_launch=mixed_launch)
     for r in requests:
         if r.prompt_len + r.max_new + s_cap > backend.max_context:
             raise ValueError(

@@ -137,7 +137,8 @@ class Telemetry:
         self.iterations += 1
         self.gauges.update(vals)
         self.gauges["clock"] = float(clock)
-        for k in ("occupancy", "backlog", "used_blocks", "prefilling"):
+        for k in ("occupancy", "backlog", "used_blocks", "prefilling",
+                  "grid_occupancy"):
             if k in vals:
                 self.peaks[k] = max(self.peaks.get(k, 0), vals[k])
         self._emit({"ev": "gauges", "iter": int(iteration),
@@ -244,7 +245,8 @@ class Telemetry:
         if "free_blocks" in g:
             lines.append(
                 f" blocks {g['free_blocks']} free / {g.get('used_blocks', 0)}"
-                f" used · fragmentation {g.get('fragmentation', 0.0):.2f}")
+                f" used · fragmentation {g.get('fragmentation', 0.0):.2f}"
+                f" · grid occupancy {g.get('grid_occupancy', 0.0):.2f}")
         cnt = " ".join(f"{k}={v}" for k, v in sorted(self.counters.items()))
         lines.append(f" counters: {cnt or '(none)'} · tokens "
                      f"{self.tokens_committed}")

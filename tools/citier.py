@@ -8,11 +8,13 @@ Tiers:
   full    — the ``docs`` check, then the whole suite including ``slow``
             (tier-1 verify, ROADMAP "Tier-1 verify" command).
   kernels — interpret-mode kernel parity tests only (tests/test_kernels.py
-            + tests/test_paged_fused_kernel.py): the Pallas kernel bodies
-            against the pure-jnp oracles and the fused paged kernel against
-            gather+verify.  A subset of ``fast`` for quick kernel
-            iteration; runs inside fast/full automatically (the files carry
-            no ``slow`` marker).
+            + tests/test_paged_fused_kernel.py +
+            tests/test_ragged_paged_attn.py): the Pallas kernel bodies
+            against the pure-jnp oracles, the fused paged kernel against
+            gather+verify, and the ragged real-length-grid kernel (manual
+            DMA depths, mixed verify+chunk launch) against both.  A subset
+            of ``fast`` for quick kernel iteration; runs inside fast/full
+            automatically (the files carry no ``slow`` marker).
   cache   — prefix-cache subset: the copy-on-write refcount/radix property
             campaign plus the shared-vs-cold parity tests
             (tests/test_prefix_cache.py), then the serving-bench smoke,
@@ -76,7 +78,8 @@ TIERS = {
     # kernel parity subset (also contained in fast/full): the Pallas kernel
     # bodies (interpret mode) vs the jnp oracles, incl. the fused paged path
     "kernels": [os.path.join("tests", "test_kernels.py"),
-                os.path.join("tests", "test_paged_fused_kernel.py")],
+                os.path.join("tests", "test_paged_fused_kernel.py"),
+                os.path.join("tests", "test_ragged_paged_attn.py")],
     # prefix-cache subset: COW/refcount property campaign + parity tests
     # (the bench smoke with its hit-rate/TTFT gates runs after pytest)
     "cache": [os.path.join("tests", "test_prefix_cache.py")],

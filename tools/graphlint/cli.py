@@ -58,8 +58,8 @@ def run_passes(replays, probe, findings):
     """Trace/lower each collected entry once, then feed every pass.  The
     jaxpr/HLO snapshots are taken *after* the retrace counts were recorded
     (each .trace()/.lower() call re-traces and would corrupt them)."""
-    from tools.graphlint.passes import (donation, materialize, retrace,
-                                        sharding, transfer_free)
+    from tools.graphlint.passes import (donation, materialize, ragged,
+                                        retrace, sharding, transfer_free)
 
     # retrace first: counters are already final, no artifacts needed
     for col in replays:
@@ -88,6 +88,7 @@ def run_passes(replays, probe, findings):
             fused.entries, jaxprs[id(fused)], fused.kv_trailing,
             guard_entries=(probe.entries if probe else ()),
             guard_jaxprs=(jaxprs[id(probe)] if probe else None)))
+        findings.extend(ragged.check(fused.entries))
 
     for col in all_cols:
         lowered = {}

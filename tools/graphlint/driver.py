@@ -144,13 +144,16 @@ def _replay_twice(label, tcfg, eng, be, policy, inject_retrace) -> Collection:
 
 def collect_fused(donate: bool = True,
                   inject_retrace: bool = False) -> Collection:
-    """Main replay: paged pool + fused kernel + chunked admission."""
+    """Main replay: paged pool + fused ragged kernel + chunked admission
+    with the mixed verify+chunk launch on, so the registry carries
+    ``step_mixed`` jits for the ragged-grid / no-materialization passes."""
     tcfg, dcfg = configs()
     tp, dp = params(tcfg, dcfg)
     eng = SpecDecodeEngine(tcfg, dcfg, max_new=MAX_NEW, donate=donate)
     be = ContinuousEngineBackend(eng, tp, dp, capacity=CAPACITY,
                                  cache_len=CACHE_LEN, warm_s=[2, 3],
-                                 block_size=BLOCK_SIZE, paged_fused=True)
+                                 block_size=BLOCK_SIZE, paged_fused=True,
+                                 mixed_launch=True)
     return _replay_twice("paged-fused", tcfg, eng, be,
                          PrefillBudgetAdmit(token_budget=CHUNK_BUDGET),
                          inject_retrace)

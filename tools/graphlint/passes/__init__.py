@@ -20,6 +20,7 @@ from typing import Iterator
 PASS_IDS = (
     "transfer-free",
     "no-materialization",
+    "ragged-grid",
     "donation",
     "sharding-conformance",
     "retrace",

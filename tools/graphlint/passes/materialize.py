@@ -27,8 +27,9 @@ from tools.lint.report import Finding
 
 PASS = "no-materialization"
 
-# jit families whose traces embed the paged-attention call
-CHECKED_NAMES = ("step", "chunk")
+# jit families whose traces embed the paged-attention call (step_mixed is
+# the single-launch verify+chunk fusion — it must stay just as gather-free)
+CHECKED_NAMES = ("step", "chunk", "step_mixed")
 
 
 def find_gathered_views(jaxpr, rows: int,

@@ -1,0 +1,93 @@
+"""ragged-grid: every fused-paged engine jit rides the real-length grid.
+
+The ragged paged-attention kernel (kernels/paged_verify_attn.py) sizes its
+grid by the REAL allocated block count, carried into the jit as the
+host-computed ``cu_blocks`` scalar-prefetch operand (kernels/tuning.py
+``host_cu_blocks``).  The kernel being ragged is worthless if a dispatch
+path forgets to thread the operand — the fused call silently cannot run
+and the engine would fall back to dense launches (or crash at trace
+time).  This pass pins the contract at the registry level: every
+fused-paged ``step`` / ``chunk`` / ``step_mixed`` jit must declare a
+``cu_arg`` (the operand's argnum) and its traced arg spec at that position
+must be the 1-D int32 cumulative array the kernel prefetches.
+
+The gathered-KV-view half of the ragged contract (no ``[B, MAXB*bs, ...]``
+materialization anywhere in these jits, mixed launch included) is the
+no-materialization pass — ``step_mixed`` is in its CHECKED_NAMES, so the
+shared ``find_gathered_views`` detector and its gather-probe vacuousness
+guard cover the new launch too.  This pass carries its own vacuousness
+guard for the operand check: collecting zero ragged jits from a
+fused-paged replay is a failure, not a pass.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from tools.lint.report import Finding
+
+PASS = "ragged-grid"
+
+# jit families whose traces embed the ragged paged-attention call
+RAGGED_NAMES = ("step", "chunk", "step_mixed")
+
+
+def _checked(entry) -> bool:
+    return (entry.name in RAGGED_NAMES
+            and entry.paged_rows is not None
+            and entry.paged_fused is True)
+
+
+def _cu_spec(entry):
+    """The ShapeDtypeStruct at ``cu_arg`` of the last-trace arg specs (None
+    when the entry never traced or the argnum is out of range)."""
+    specs = entry.arg_specs
+    if specs is None or entry.cu_arg is None:
+        return None
+    if not isinstance(specs, tuple) or entry.cu_arg >= len(specs):
+        return None
+    return specs[entry.cu_arg]
+
+
+def check(entries) -> List[Finding]:
+    findings: List[Finding] = []
+    checked_any = False
+    anchor = None
+    for entry in entries:
+        if not _checked(entry):
+            continue
+        checked_any = True
+        anchor = anchor or (entry.src_file, entry.src_line)
+        if entry.cu_arg is None:
+            findings.append(Finding(
+                file=entry.src_file, line=entry.src_line, col=0,
+                rule=PASS, severity="error",
+                message=(f"jit {entry.name}{entry.key}: fused paged jit "
+                         f"registered without a cu_blocks operand (cu_arg "
+                         f"is None) — the ragged real-length grid cannot "
+                         f"run; dense launches regressed in")))
+            continue
+        spec = _cu_spec(entry)
+        if spec is None:
+            continue                 # never traced: nothing to validate yet
+        shape = tuple(getattr(spec, "shape", ()))
+        dtype = getattr(spec, "dtype", None)
+        if len(shape) != 1 or (dtype is not None
+                               and np.dtype(dtype) != np.int32):
+            findings.append(Finding(
+                file=entry.src_file, line=entry.src_line, col=0,
+                rule=PASS, severity="error",
+                message=(f"jit {entry.name}{entry.key}: cu_blocks operand "
+                         f"at argnum {entry.cu_arg} traced as "
+                         f"{dtype}{list(shape)} — the kernel scalar-"
+                         f"prefetches a 1-D int32 cumulative array")))
+    if entries and not checked_any:
+        e0 = entries[0]
+        findings.append(Finding(
+            file=e0.src_file, line=e0.src_line, col=0,
+            rule=PASS, severity="error",
+            message=("no fused-paged step/chunk/step_mixed jits collected — "
+                     "the ragged-grid pass is vacuous (did the replay stop "
+                     "forcing the fused kernel?)")))
+    return findings
